@@ -1,0 +1,94 @@
+"""Fig 6 analog — training-time breakdown over the algorithm's steps.
+
+Measures our JAX implementation's steady-state per-step wall time
+(step ① histogram, ② split-find, ③ partition, ⑤ traversal) on the five
+dataset analogs and reports fractions; the paper's claim is that ①/③/⑤
+dominate (~90–98% at full scale) and ② is small enough to offload.  All
+jitted functions are warmed before timing (compile time excluded).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import bin_dataset
+from repro.core.splits import find_best_splits
+from repro.core.tree import fit_tree
+from repro.data import paper_dataset
+from repro.kernels import ops
+
+
+def _one_tree_pass(data, g, h, depth, strategy, timers=None):
+    """One tree's steps ①②③ level loop; optionally accumulate timers."""
+    n, F = data.codes.shape
+    iscat = data.is_categorical
+    fmask = jnp.ones((F,), bool)
+    node_ids = jnp.zeros((n,), jnp.int32)
+    for level in range(depth):
+        nn = 2 ** level
+        t0 = time.perf_counter()
+        hist = ops.build_histogram(data.codes, g, h, node_ids, n_nodes=nn,
+                                   n_bins=data.n_bins, strategy=strategy)
+        hist.block_until_ready()
+        t1 = time.perf_counter()
+        best = find_best_splits(hist, iscat, fmask, 1.0, 0.0, 1.0)
+        jax.block_until_ready(best.gain)
+        t2 = time.perf_counter()
+        codes_lvl = data.codes_cm[jnp.maximum(best.feature, 0)]
+        node_ids = ops.partition_level(
+            node_ids, codes_lvl.T, jnp.arange(nn, dtype=jnp.int32),
+            best.threshold, best.is_cat, best.default_left,
+            missing_bin=data.missing_bin, strategy="reference")
+        node_ids.block_until_ready()
+        t3 = time.perf_counter()
+        if timers is not None:
+            timers["hist"] += t1 - t0
+            timers["split"] += t2 - t1
+            timers["part"] += t3 - t2
+
+
+def run(scale: float = 1.0, max_bins: int = 128, depth: int = 6,
+        strategy: str = "scatter"):
+    rows = []
+    for name in ("iot", "higgs", "allstate", "mq2008", "flight"):
+        X, y, cats, spec = paper_dataset(name, scale=scale)
+        data = bin_dataset(X, max_bins=max_bins, categorical_fields=cats)
+        n, F = data.codes.shape
+        g = jnp.asarray(np.random.default_rng(0).normal(size=n), jnp.float32)
+        h = jnp.ones((n,), jnp.float32)
+
+        _one_tree_pass(data, g, h, depth, strategy)          # warm compiles
+        timers = {"hist": 0.0, "split": 0.0, "part": 0.0}
+        _one_tree_pass(data, g, h, depth, strategy, timers)  # measured
+
+        tree = fit_tree(data.codes, data.codes_cm, g, h, depth=depth,
+                        n_bins=data.n_bins, missing_bin=data.missing_bin,
+                        is_cat_field=data.is_categorical,
+                        field_mask=jnp.ones((F,), bool), lambda_=1.0,
+                        gamma=0.0, min_child_weight=1.0,
+                        hist_strategy=strategy)
+        trav = lambda: ops.traverse_tree(  # noqa: E731
+            tree, data.codes, missing_bin=data.missing_bin,
+            strategy="reference")
+        trav().block_until_ready()                           # warm
+        t0 = time.perf_counter()
+        trav().block_until_ready()
+        t_trav = time.perf_counter() - t0
+
+        total = sum(timers.values()) + t_trav
+        accel = (timers["hist"] + timers["part"] + t_trav) / total
+        rows.append(csv_row(
+            f"breakdown_{name}", total * 1e6,
+            f"hist={timers['hist']/total:.2f};"
+            f"split={timers['split']/total:.2f};"
+            f"part={timers['part']/total:.2f};trav={t_trav/total:.2f};"
+            f"accelerated_share={accel:.3f};records={n}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,101 @@
+"""Fig 7 analog — training speedups across machines and strategies.
+
+Two complementary reproductions:
+  (a) *measured*: wall-time of the software histogram strategies on this
+      host (scatter = multicore-style RMW, privatized replicas = GPU
+      shared-memory style, sort+segment-sum = GPU-alternative, blocked
+      one-hot einsum = the Booster kernel's XLA twin);
+  (b) *modeled*: the paper's ideal-machine model (see benchmarks.common)
+      evaluated per dataset: Ideal-32-core, Ideal-GPU (2x parallelism),
+      Inter-record (histogram replicas eat on-chip capacity), Booster
+      (3200-way, memory-bound).  Expected structure: GPU ≈ 1.6–1.9x,
+      Booster ~5–30x, larger datasets -> larger speedups.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (BOOSTER, IDEAL_CPU, IDEAL_GPU, csv_row,
+                               host_step2_time, machine_step1_time,
+                               machine_step3_time, machine_step5_time,
+                               time_call)
+from repro.core import bin_dataset
+from repro.data import paper_dataset
+from repro.kernels import ops
+
+STRATS = ("scatter", "scatter_private", "sort", "onehot")
+
+
+def modeled_training_time(machine, n, F, depth=6, n_trees=1,
+                          column_major=None, frac_active=1.0,
+                          n_bins=256):
+    """Per-tree time under the paper's machine model.  ``column_major``
+    defaults to Booster-only (its redundant representation).  Step ② runs
+    on the host for EVERY machine (§IV adds it to all systems) — it is the
+    Amdahl residual that caps speedups on small datasets (Mq2008)."""
+    if column_major is None:
+        column_major = machine["name"] == "booster"
+    t = 0.0
+    for level in range(depth):
+        active = n * (frac_active ** level)
+        t += machine_step1_time(machine, active, F)
+        t += machine_step3_time(machine, active, F, column_major)
+        t += host_step2_time(2 ** level, F, n_bins)
+    t += machine_step5_time(machine, n, F, depth, min(2 ** depth - 1, F),
+                            column_major)
+    return t * n_trees
+
+
+def run(scale: float = 1.0, max_bins: int = 128):
+    rows = []
+    geo = {m["name"]: [] for m in (IDEAL_GPU, BOOSTER)}
+    for name in ("iot", "higgs", "allstate", "mq2008", "flight"):
+        X, y, cats, spec = paper_dataset(name, scale=scale)
+        data = bin_dataset(X, max_bins=max_bins, categorical_fields=cats)
+        n, F = data.codes.shape
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.normal(size=n), jnp.float32)
+        h = jnp.ones((n,), jnp.float32)
+        nid = jnp.asarray(rng.integers(0, 8, n), jnp.int32)
+
+        # (a) measured software strategies
+        times = {}
+        for s in STRATS:
+            times[s] = time_call(
+                lambda s=s: ops.build_histogram(
+                    data.codes, g, h, nid, n_nodes=8, n_bins=data.n_bins,
+                    strategy=s))
+        base = times["scatter"]
+        rows.append(csv_row(
+            f"hist_strategies_{name}", base * 1e6,
+            ";".join(f"{s}_x={base/times[s]:.2f}" for s in STRATS)))
+
+        # (b) the paper's ideal-machine model at the FULL Table-III sizes
+        # (analytic — no memory cost); categorical datasets behave
+        # "smaller" (lopsided splits shrink per-level work, §IV)
+        n_full = spec.n_records * 1000      # specs are 1000x scaled down
+        frac = 0.55 if spec.n_categorical else 1.0
+        # IoT's many shallow trees raise step-①'s share (paper §IV)
+        depth = 3 if name == "iot" else 6
+        t_cpu = modeled_training_time(IDEAL_CPU, n_full, F,
+                                      depth=depth, frac_active=frac)
+        t_gpu = modeled_training_time(IDEAL_GPU, n_full, F,
+                                      depth=depth, frac_active=frac)
+        t_boo = modeled_training_time(BOOSTER, n_full, F,
+                                      depth=depth, frac_active=frac)
+        su_gpu, su_boo = t_cpu / t_gpu, t_cpu / t_boo
+        geo["ideal_gpu"].append(su_gpu)
+        geo["booster"].append(su_boo)
+        rows.append(csv_row(
+            f"modeled_speedup_{name}", t_cpu * 1e6,
+            f"ideal_gpu_x={su_gpu:.2f};booster_x={su_boo:.2f};"
+            f"records={n_full};fields={F}"))
+    for k, v in geo.items():
+        rows.append(csv_row(f"modeled_geomean_{k}", 0.0,
+                            f"x={float(np.exp(np.mean(np.log(v)))):.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

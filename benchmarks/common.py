@@ -1,0 +1,90 @@
+"""Shared benchmark utilities + the paper's analytic machine models.
+
+This container is a single CPU core, so cross-machine speedups cannot be
+*measured*; they are *modeled* exactly the way the paper models its Ideal
+configurations (§IV: "constrained only by 32- and 64-way parallelism
+without any implementation artifacts"), then cross-checked against the
+structure of the paper's results.  Wall-clock numbers reported alongside
+are real measurements of the JAX software strategies on this host.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+# --- the paper's hardware constants (Table V, §III-B) ---------------------
+MEM_BW = 400e9              # sustained DRAM bandwidth, all machines
+IDEAL_CPU = dict(parallelism=32, clock=2.2e9, name="ideal_32core")
+IDEAL_GPU = dict(parallelism=64, clock=2.2e9, name="ideal_gpu")
+BOOSTER = dict(parallelism=3200, clock=1.0e9, name="booster")
+CYCLES_PER_UPDATE = 8       # §III-B: subtract + SRAM read + 2 FP adds + write
+BYTES_PER_FIELD = 1         # uint8 bin code
+GH_BYTES = 8                # g + h as f32
+
+
+def time_call(fn: Callable, *args, repeat: int = 3, warmup: int = 1,
+              **kwargs) -> float:
+    """Median wall-time in seconds of a blocking call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def machine_step1_time(machine: Dict, n_records: int, n_fields: int,
+                       serialization: float = 1.0) -> float:
+    """Histogram binning (step ①) time under the paper's ideal-machine
+    model: update work at `parallelism`-way / clock vs the shared memory
+    stream; whichever bounds.  `serialization` models naive bin packing
+    (several fields' bins behind one SRAM port)."""
+    updates = n_records * n_fields * serialization
+    compute = updates * CYCLES_PER_UPDATE / (machine["parallelism"]
+                                             * machine["clock"])
+    memory = n_records * (n_fields * BYTES_PER_FIELD + GH_BYTES) / MEM_BW
+    return max(compute, memory)
+
+
+def host_step2_time(n_nodes: int, n_fields: int, n_bins: int,
+                    ops_per_bin: int = 1000) -> float:
+    """Split selection (step ②): offloaded to the host 32-core on EVERY
+    machine (§IV adds this time to all systems), so it is the Amdahl
+    residual that dominates Booster's residual time (Fig 8) and caps its
+    speedup on small datasets.  ``ops_per_bin`` is calibrated so step ②
+    lands in the paper's measured 2–10% of *sequential* time (Fig 6) —
+    the gain formula with divisions + cache-unfriendly bin walks costs
+    far more than the naive 4 flops/bin."""
+    work = n_nodes * n_fields * n_bins * ops_per_bin
+    return work / (IDEAL_CPU["parallelism"] * IDEAL_CPU["clock"])
+
+
+def machine_step3_time(machine: Dict, n_records: int, n_fields: int,
+                       column_major: bool) -> float:
+    """Single-predicate evaluation: one compare per record; traffic is one
+    field column (column-major) or the full record (row-major)."""
+    compute = n_records * 2 / (machine["parallelism"] * machine["clock"])
+    bytes_ = n_records * (BYTES_PER_FIELD if column_major
+                          else n_fields * BYTES_PER_FIELD)
+    return max(compute, bytes_ / MEM_BW)
+
+
+def machine_step5_time(machine: Dict, n_records: int, n_fields: int,
+                       depth: int, used_fields: int,
+                       column_major: bool) -> float:
+    """One-tree traversal: depth hops per record; traffic is the used
+    columns (column-major) or whole records (row-major), plus g/h update."""
+    compute = n_records * depth * CYCLES_PER_UPDATE / (
+        machine["parallelism"] * machine["clock"])
+    fetch = used_fields if column_major else n_fields
+    bytes_ = n_records * (fetch * BYTES_PER_FIELD + 2 * GH_BYTES)
+    return max(compute, bytes_ / MEM_BW)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

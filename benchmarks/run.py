@@ -1,0 +1,52 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Figures covered:
+  Fig 6  step breakdown            bench_breakdown
+  Fig 7  machine/strategy speedups bench_training
+  Fig 9  optimization isolation    bench_opts
+  Fig 12 dataset-size sensitivity  bench_scaling
+  Fig 13 batch inference           bench_inference
+The roofline table (EXPERIMENTS.md §Roofline) is produced by the dry-run
+artifacts via ``python -m repro.launch.report``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.3,
+                    help="dataset scale vs the (already scaled-down) specs")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_breakdown, bench_inference, bench_opts,
+                            bench_scaling, bench_training)
+    benches = {
+        "breakdown": lambda: bench_breakdown.run(scale=args.scale),
+        "training": lambda: bench_training.run(scale=args.scale),
+        "opts": lambda: bench_opts.run(scale=args.scale),
+        "scaling": lambda: bench_scaling.run(base_scale=args.scale),
+        "inference": lambda: bench_inference.run(
+            n=max(2000, int(20000 * args.scale))),
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    for name in selected:
+        t0 = time.time()
+        try:
+            for row in benches[name]():
+                print(row)
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_FAILED,0,{e!r}")
+            raise
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

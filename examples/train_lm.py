@@ -1,0 +1,67 @@
+"""Train a reduced LM config for a few hundred steps on synthetic text.
+
+Shows the LM substrate (the assigned-architecture stack) end to end:
+any of the ten --arch ids runs with its smoke-scale config on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-14b --steps 200
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.models import lm, optim
+
+
+def synthetic_batch(cfg, rng, batch=8, seq=32):
+    """Learnable synthetic language: next token = (3*t + 7) % vocab-ish."""
+    start = rng.integers(0, cfg.vocab, (batch, 1))
+    toks = [start]
+    for _ in range(seq):
+        toks.append((3 * toks[-1] + 7) % max(cfg.vocab - 3, 2))
+    seqs = np.concatenate(toks, axis=1)
+    b = {"tokens": jnp.asarray(seqs[:, :-1], jnp.int32),
+         "labels": jnp.asarray(seqs[:, 1:], jnp.int32)}
+    if cfg.mrope:
+        b["positions"] = jnp.broadcast_to(
+            jnp.arange(seq)[None, None], (3, batch, seq)).astype(jnp.int32)
+    if cfg.family == "vlm":
+        b["patch_embeds"] = jnp.zeros((batch, 4, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        b["audio_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.frontend_len, cfg.d_model)),
+            jnp.float32)
+    return b
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = optim.adamw_init(params)
+    step = jax.jit(lm.make_train_step(cfg, base_lr=3e-3, warmup=20,
+                                      total_steps=args.steps))
+    rng = np.random.default_rng(0)
+    first = last = None
+    t0 = time.time()
+    for i in range(args.steps):
+        params, opt, m = step(params, opt, synthetic_batch(cfg, rng))
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        last = loss
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {loss:.4f}  lr {float(m['lr']):.2e}")
+    print(f"\n{args.arch} ({cfg.lr_schedule} schedule): "
+          f"loss {first:.3f} -> {last:.3f} in {time.time()-t0:.1f}s")
+    assert last < first, "training should reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.registry import (ARCH_IDS, SHAPES, ArchConfig, ShapeConfig,
+                                    all_cells, cell_is_runnable, get_arch,
+                                    get_smoke)

@@ -1,0 +1,148 @@
+"""Batch inference extensions (paper §III-D).
+
+* ``sharded_predict`` — "the case of too many trees ... can be addressed
+  by distributing the trees to multiple Booster chips (in a simple
+  round-robin manner)": trees shard over the "model" mesh axis, records
+  over the data axes; each shard runs its resident trees over its record
+  block and one psum combines the ensemble sum — tree-parallel x
+  record-parallel, exactly the paper's multi-chip scheme.
+* ``feature_importance`` — gain / cover / split-count importances from the
+  fixed-shape tree arrays (production-model introspection).
+* ``GBDTPipeline`` — binner + model bundle: predicts raw (unbinned,
+  NaN-carrying) feature matrices and round-trips through the checkpoint
+  layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.binning import Binner, BinnedDataset
+from repro.core.gbdt import GBDTModel
+from repro.kernels import ops
+from repro.kernels.ref import TreeArrays
+from repro.launch.mesh import data_axes
+
+
+def sharded_predict(mesh: Mesh, model: GBDTModel, codes) -> jax.Array:
+    """Tree-parallel x record-parallel ensemble inference on ``mesh``.
+
+    Requires n_trees % mesh"model" == 0 (pad the ensemble with zero-value
+    trees via ``pad_trees`` otherwise).  Returns margins (n,).
+    """
+    da = data_axes(mesh)
+    m = mesh.shape["model"]
+    T = model.n_trees
+    if T % m:
+        raise ValueError(f"{T} trees do not divide the model axis ({m}); "
+                         "use pad_trees() first")
+
+    def local(codes_l, *tree_leaves):
+        trees_l = TreeArrays(*tree_leaves)       # (T/m, ...) local trees
+        out = ops.predict_ensemble(trees_l, codes_l,
+                                   missing_bin=model.missing_bin,
+                                   depth=model.max_depth,
+                                   strategy="reference")
+        # paper §III-D: combine the per-chip tree outputs
+        return jax.lax.psum(out, "model")
+
+    # the scan-carry zeros inside predict_ensemble are unvarying; skip the
+    # static varying-axes check (the psum makes the output well-defined)
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(da, None),) + tuple(P("model") for _ in range(5)),
+        out_specs=P(da), check_vma=False)
+    return fn(codes, *model.trees) + model.base_margin
+
+
+def pad_trees(model: GBDTModel, multiple: int) -> GBDTModel:
+    """Append zero-output pass-through trees so n_trees divides a mesh axis."""
+    T = model.n_trees
+    pad = -T % multiple
+    if pad == 0:
+        return model
+    t = model.trees
+
+    def pad0(a):
+        return jnp.concatenate(
+            [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0)
+
+    padded = TreeArrays(
+        feature=jnp.concatenate(
+            [t.feature, jnp.full((pad,) + t.feature.shape[1:], -1,
+                                 t.feature.dtype)]),
+        threshold=pad0(t.threshold), is_cat=pad0(t.is_cat),
+        default_left=pad0(t.default_left), leaf_value=pad0(t.leaf_value))
+    return dataclasses.replace(model, trees=padded)
+
+
+def feature_importance(model: GBDTModel, kind: str = "gain"
+                       ) -> np.ndarray:
+    """Per-field importance over the ensemble.
+
+    kind: "split" (split counts), "gain" (sum of leaf-weight variance
+    proxy per split — exact gains are not stored in the compact arrays,
+    so subtree leaf-value spread stands in), or "cover" (uniform count
+    weighting by subtree width).
+    """
+    feats = np.asarray(model.trees.feature)        # (T, n_int)
+    leaves = np.asarray(model.trees.leaf_value)    # (T, n_leaf)
+    F = model.n_fields
+    imp = np.zeros((F,), np.float64)
+    T, n_int = feats.shape
+    depth = model.max_depth
+    for t in range(T):
+        for pos in range(n_int):
+            f = feats[t, pos]
+            if f < 0:
+                continue
+            if kind == "split":
+                imp[f] += 1.0
+            else:
+                level = (pos + 1).bit_length() - 1
+                reps = 2 ** (depth - level)
+                base = (pos - (2 ** level - 1)) * reps
+                vals = leaves[t, base:base + reps]
+                w = reps if kind == "cover" else 1.0
+                imp[f] += w * float(np.var(vals))
+    s = imp.sum()
+    return imp / s if s > 0 else imp
+
+
+@dataclasses.dataclass
+class GBDTPipeline:
+    """Binner + model bundle: raw float/NaN matrices in, predictions out."""
+
+    binner: Binner
+    model: GBDTModel
+
+    def predict(self, X: np.ndarray, strategy: str = "auto") -> jax.Array:
+        data = self.binner.transform(np.asarray(X, dtype=np.float64))
+        return self.model.predict(data, strategy=strategy)
+
+    def to_state(self) -> Dict:
+        return {
+            "model": self.model.to_state(),
+            "binner": {
+                "max_bins": self.binner.max_bins,
+                "categorical": sorted(self.binner.categorical_fields),
+                "edges": self.binner._edges,
+                "is_cat": self.binner._is_cat,
+                "n_value_bins": self.binner._n_value_bins,
+            },
+        }
+
+    @classmethod
+    def from_state(cls, state: Dict) -> "GBDTPipeline":
+        b = Binner(int(state["binner"]["max_bins"]),
+                   [int(c) for c in np.asarray(
+                       state["binner"]["categorical"]).ravel()])
+        b._edges = np.asarray(state["binner"]["edges"])
+        b._is_cat = np.asarray(state["binner"]["is_cat"])
+        b._n_value_bins = np.asarray(state["binner"]["n_value_bins"])
+        return cls(binner=b, model=GBDTModel.from_state(state["model"]))

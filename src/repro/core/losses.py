@@ -1,0 +1,117 @@
+"""Differentiable losses for gradient boosting.
+
+GB is agnostic to the loss as long as it is differentiable and convex
+(paper §II-A); training only ever consumes the per-record first/second
+order gradient statistics (g_i, h_i) of the loss at the current margin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    """A boosting loss: value + (g, h) statistics at the current margin."""
+
+    name: str
+    # (margin, y) -> per-record loss
+    value_fn: Callable[[Array, Array], Array]
+    # (margin, y) -> (g, h)
+    grad_hess_fn: Callable[[Array, Array], Tuple[Array, Array]]
+    # margin -> prediction in output space (e.g. sigmoid for logistic)
+    transform_fn: Callable[[Array], Array]
+    # constant initial margin given labels
+    base_margin_fn: Callable[[Array], Array]
+
+    def value(self, margin: Array, y: Array) -> Array:
+        return self.value_fn(margin, y)
+
+    def grad_hess(self, margin: Array, y: Array) -> Tuple[Array, Array]:
+        return self.grad_hess_fn(margin, y)
+
+    def transform(self, margin: Array) -> Array:
+        return self.transform_fn(margin)
+
+    def base_margin(self, y: Array) -> Array:
+        return self.base_margin_fn(y)
+
+
+def _sq_value(margin, y):
+    return 0.5 * (margin - y) ** 2
+
+
+def _sq_grad_hess(margin, y):
+    return margin - y, jnp.ones_like(margin)
+
+
+squared_error = Loss(
+    name="reg:squarederror",
+    value_fn=_sq_value,
+    grad_hess_fn=_sq_grad_hess,
+    transform_fn=lambda m: m,
+    base_margin_fn=lambda y: jnp.mean(y),
+)
+
+
+def _logistic_value(margin, y):
+    # numerically stable log(1 + exp(-y'm)) with y in {0, 1}
+    return jnp.logaddexp(0.0, margin) - y * margin
+
+
+def _logistic_grad_hess(margin, y):
+    p = jax.nn.sigmoid(margin)
+    return p - y, jnp.maximum(p * (1.0 - p), 1e-16)
+
+
+def _logistic_base(y):
+    p = jnp.clip(jnp.mean(y), 1e-6, 1.0 - 1e-6)
+    return jnp.log(p / (1.0 - p))
+
+
+binary_logistic = Loss(
+    name="binary:logistic",
+    value_fn=_logistic_value,
+    grad_hess_fn=_logistic_grad_hess,
+    transform_fn=jax.nn.sigmoid,
+    base_margin_fn=_logistic_base,
+)
+
+
+def _huber_value(margin, y, delta=1.0):
+    r = margin - y
+    a = jnp.abs(r)
+    return jnp.where(a <= delta, 0.5 * r * r, delta * (a - 0.5 * delta))
+
+
+def _huber_grad_hess(margin, y, delta=1.0):
+    r = margin - y
+    g = jnp.clip(r, -delta, delta)
+    h = jnp.where(jnp.abs(r) <= delta, jnp.ones_like(r), 1e-2)
+    return g, h
+
+
+pseudo_huber = Loss(
+    name="reg:huber",
+    value_fn=_huber_value,
+    grad_hess_fn=_huber_grad_hess,
+    transform_fn=lambda m: m,
+    base_margin_fn=lambda y: jnp.median(y),
+)
+
+LOSSES = {
+    squared_error.name: squared_error,
+    binary_logistic.name: binary_logistic,
+    pseudo_huber.name: pseudo_huber,
+}
+
+
+def get_loss(name: str) -> Loss:
+    if name not in LOSSES:
+        raise KeyError(f"unknown loss {name!r}; available: {sorted(LOSSES)}")
+    return LOSSES[name]

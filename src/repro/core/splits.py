@@ -1,0 +1,179 @@
+"""Step ② — evaluating histogram bins to pick split points.
+
+Paper §II-A/III-B: this step is short (O(bins), not O(records)), uses
+"hardware-unfriendly" formulae that vary across implementations, and is
+therefore *offloaded to the host* by Booster.  We keep both paths:
+
+  * ``find_best_splits``     — fused jnp reduction (default; a TPU handles
+                               the argmax fine and avoids a device→host trip)
+  * ``find_best_splits_host`` — numpy twin, invoked through
+                               ``jax.pure_callback`` so the step literally
+                               runs on the host CPU even under jit on TPU,
+                               reproducing the paper's offload.
+
+Split semantics (paper Fig 3 + missing-value handling):
+  numeric field f, bin t:  "code <= t" goes left;
+  categorical field f, category c: "code == c" goes left (one-vs-rest — the
+      collapsed form of the paper's one-hot features);
+  the missing bin is tried on BOTH sides ("GB considers placing records with
+      missing fields in both the left and the right sub-trees") — the better
+      direction is stored as ``default_left``.
+
+gain = 1/2 [ GL²/(HL+λ) + GR²/(HR+λ) − Gp²/(Hp+λ) ] − γ   (XGBoost eq. 7)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NEG = -jnp.inf
+
+
+class SplitDecision(NamedTuple):
+    gain: jax.Array          # (NN,) float32; <= 0 means "do not split"
+    feature: jax.Array       # (NN,) int32 global field id
+    threshold: jax.Array     # (NN,) int32 bin code (numeric: <=, cat: ==)
+    is_cat: jax.Array        # (NN,) int32
+    default_left: jax.Array  # (NN,) int32 missing direction
+    node_g: jax.Array        # (NN,) float32 parent G (for leaf weights)
+    node_h: jax.Array        # (NN,) float32 parent H
+
+
+def leaf_weight(G, H, lambda_):
+    return -G / (H + lambda_)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def find_best_splits(hist, is_cat_field, field_mask, lambda_, gamma,
+                     min_child_weight) -> SplitDecision:
+    """hist: (NN, F, NB, 2); last bin of every field is the missing bin.
+
+    field_mask: (F,) bool — colsample / field-availability mask.
+    Vectorized over nodes, fields and candidate bins; per-candidate the
+    better missing-direction is chosen, then argmax over bins then fields.
+    """
+    NN, F, NB, _ = hist.shape
+    G = hist[..., 0].sum(-1)                               # (NN, F)
+    H = hist[..., 1].sum(-1)
+    # Every record carries every field exactly once (the density property
+    # behind group-by-field), so per-field totals are identical: field 0
+    # supplies the parent statistics.
+    Gp, Hp = G[:, 0], H[:, 0]                              # (NN,)
+    Gm = hist[:, :, NB - 1, 0]                             # (NN, F) missing
+    Hm = hist[:, :, NB - 1, 1]
+    v = hist[:, :, : NB - 1, :]                            # value bins
+    parent_score = (Gp ** 2 / (Hp + lambda_))[:, None, None]
+
+    def gain_of(GL, HL):
+        GR = Gp[:, None, None] - GL
+        HR = Hp[:, None, None] - HL
+        ok = (HL >= min_child_weight) & (HR >= min_child_weight)
+        gain = 0.5 * (GL ** 2 / (HL + lambda_) + GR ** 2 / (HR + lambda_)
+                      - parent_score) - gamma
+        return jnp.where(ok, gain, _NEG)
+
+    cumG = jnp.cumsum(v[..., 0], axis=-1)                  # (NN, F, NB-1)
+    cumH = jnp.cumsum(v[..., 1], axis=-1)
+    num_dr = gain_of(cumG, cumH)                           # missing -> right
+    num_dl = gain_of(cumG + Gm[..., None], cumH + Hm[..., None])
+    cat_dr = gain_of(v[..., 0], v[..., 1])
+    cat_dl = gain_of(v[..., 0] + Gm[..., None], v[..., 1] + Hm[..., None])
+
+    cat_f = is_cat_field[None, :, None]
+    cand_dr = jnp.where(cat_f, cat_dr, num_dr)
+    cand_dl = jnp.where(cat_f, cat_dl, num_dl)
+    go_dl = cand_dl > cand_dr
+    cand = jnp.maximum(cand_dl, cand_dr)                   # (NN, F, NB-1)
+    cand = jnp.where(field_mask[None, :, None], cand, _NEG)
+
+    t_best = jnp.argmax(cand, axis=-1)                     # (NN, F)
+    gain_f = jnp.take_along_axis(cand, t_best[..., None], -1)[..., 0]
+    dl_f = jnp.take_along_axis(go_dl, t_best[..., None], -1)[..., 0]
+    f_best = jnp.argmax(gain_f, axis=-1)                   # (NN,)
+    gain = jnp.take_along_axis(gain_f, f_best[:, None], 1)[:, 0]
+    thr = jnp.take_along_axis(t_best, f_best[:, None], 1)[:, 0]
+    dl = jnp.take_along_axis(dl_f, f_best[:, None], 1)[:, 0]
+    gain = jnp.where(jnp.isfinite(gain), gain, jnp.float32(-1.0))
+    return SplitDecision(
+        gain=gain.astype(jnp.float32),
+        feature=f_best.astype(jnp.int32),
+        threshold=thr.astype(jnp.int32),
+        is_cat=is_cat_field[f_best].astype(jnp.int32),
+        default_left=dl.astype(jnp.int32),
+        node_g=Gp.astype(jnp.float32),
+        node_h=Hp.astype(jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------------
+# host-offloaded twin (paper's step-② offload, via pure_callback)
+# --------------------------------------------------------------------------
+def _np_best_splits(hist, is_cat_field, field_mask, lambda_, gamma,
+                    min_child_weight):
+    NN, F, NB, _ = hist.shape
+    G = hist[..., 0].sum(-1)
+    H = hist[..., 1].sum(-1)
+    Gp, Hp = G[:, 0], H[:, 0]
+    Gm, Hm = hist[:, :, NB - 1, 0], hist[:, :, NB - 1, 1]
+    v = hist[:, :, : NB - 1, :]
+    parent = (Gp ** 2 / (Hp + lambda_))[:, None, None]
+
+    def gain_of(GL, HL):
+        GR, HR = Gp[:, None, None] - GL, Hp[:, None, None] - HL
+        ok = (HL >= min_child_weight) & (HR >= min_child_weight)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            gn = 0.5 * (GL ** 2 / (HL + lambda_) + GR ** 2 / (HR + lambda_)
+                        - parent) - gamma
+        return np.where(ok, gn, -np.inf)
+
+    cumG, cumH = np.cumsum(v[..., 0], -1), np.cumsum(v[..., 1], -1)
+    num_dr, num_dl = gain_of(cumG, cumH), gain_of(cumG + Gm[..., None],
+                                                  cumH + Hm[..., None])
+    cat_dr, cat_dl = gain_of(v[..., 0], v[..., 1]), gain_of(
+        v[..., 0] + Gm[..., None], v[..., 1] + Hm[..., None])
+    catf = is_cat_field[None, :, None]
+    cand_dr = np.where(catf, cat_dr, num_dr)
+    cand_dl = np.where(catf, cat_dl, num_dl)
+    go_dl = cand_dl > cand_dr
+    cand = np.where(field_mask[None, :, None],
+                    np.maximum(cand_dl, cand_dr), -np.inf)
+    t_best = np.argmax(cand, -1)
+    gain_f = np.take_along_axis(cand, t_best[..., None], -1)[..., 0]
+    dl_f = np.take_along_axis(go_dl, t_best[..., None], -1)[..., 0]
+    f_best = np.argmax(gain_f, -1)
+    gain = np.take_along_axis(gain_f, f_best[:, None], 1)[:, 0]
+    thr = np.take_along_axis(t_best, f_best[:, None], 1)[:, 0]
+    dl = np.take_along_axis(dl_f, f_best[:, None], 1)[:, 0]
+    gain = np.where(np.isfinite(gain), gain, -1.0)
+    return (gain.astype(np.float32), f_best.astype(np.int32),
+            thr.astype(np.int32), is_cat_field[f_best].astype(np.int32),
+            dl.astype(np.int32), Gp.astype(np.float32), Hp.astype(np.float32))
+
+
+def find_best_splits_host(hist, is_cat_field, field_mask, lambda_, gamma,
+                          min_child_weight) -> SplitDecision:
+    """Step ② on the host CPU via pure_callback (paper's offload path)."""
+    NN = hist.shape[0]
+    shapes = (
+        jax.ShapeDtypeStruct((NN,), jnp.float32),
+        jax.ShapeDtypeStruct((NN,), jnp.int32),
+        jax.ShapeDtypeStruct((NN,), jnp.int32),
+        jax.ShapeDtypeStruct((NN,), jnp.int32),
+        jax.ShapeDtypeStruct((NN,), jnp.int32),
+        jax.ShapeDtypeStruct((NN,), jnp.float32),
+        jax.ShapeDtypeStruct((NN,), jnp.float32),
+    )
+
+    def cb(h, c, m, lam, gam, mcw):
+        return _np_best_splits(np.asarray(h), np.asarray(c), np.asarray(m),
+                               float(lam), float(gam), float(mcw))
+
+    out = jax.pure_callback(
+        cb, shapes, hist, is_cat_field, field_mask,
+        jnp.asarray(lambda_, jnp.float32), jnp.asarray(gamma, jnp.float32),
+        jnp.asarray(min_child_weight, jnp.float32))
+    return SplitDecision(*out)

@@ -1,0 +1,230 @@
+"""Tree growing — steps ①–④ of the paper's training algorithm.
+
+Two growers, matching the two configurations described in §II-A:
+
+  * ``fit_tree``          — the *level-by-level* configuration ("streams in
+    all the input records and histogram-bins the relevant records at each
+    vertex ... maintains a separate histogram per vertex").  This is the
+    fixed-shape, fully jittable primary path: every record carries a
+    level-local node id; one histogram pass per level computes all vertex
+    histograms at once; the partition kernel routes records to children.
+    One full-data scan per level — the same total work the smaller-child
+    subtraction trick achieves in vertex mode.
+
+  * ``fit_tree_lossguide`` — the *vertex-by-vertex* (leaf-wise, best-first)
+    configuration with the paper's step-① optimization applied literally:
+    bin only the smaller child and derive the sibling by subtracting from
+    the parent's histogram ("without any explicit binning at the other
+    child", §II-A).  Host-driven control flow (a gain heap), device math.
+
+Both emit the same fixed-shape ``TreeArrays`` (complete binary tree with
+pass-through nodes), so every downstream consumer (partition, traversal,
+inference, checkpointing, sharding) is grower-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+import heapq
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import splits as splits_mod
+from repro.kernels import ops
+from repro.kernels.ref import TreeArrays
+
+
+def _repeat_to_bottom(x, level: int, depth: int):
+    """Broadcast per-node values at ``level`` onto their bottom-level slots."""
+    return jnp.repeat(x, 2 ** (depth - level))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "n_bins", "missing_bin", "hist_strategy",
+                     "partition_strategy", "host_offload_split"))
+def fit_tree(codes, codes_cm, g, h, *, depth: int, n_bins: int,
+             missing_bin: int, is_cat_field, field_mask,
+             lambda_: float, gamma: float, min_child_weight: float,
+             hist_strategy: str = "auto", partition_strategy: str = "auto",
+             host_offload_split: bool = False) -> TreeArrays:
+    """Grow one depth-``depth`` tree level-by-level (fixed shapes, jittable).
+
+    codes: (n, F) uint8 row-major (step-① input);
+    codes_cm: (F, n) uint8 column-major redundant copy (step-③ input);
+    g, h: (n,) float32 gradient statistics.
+    """
+    n, F = codes.shape
+    n_int = 2 ** depth - 1
+    n_leaf = 2 ** depth
+
+    feature = jnp.full((n_int,), -1, jnp.int32)
+    threshold = jnp.zeros((n_int,), jnp.int32)
+    is_cat = jnp.zeros((n_int,), jnp.int32)
+    default_left = jnp.zeros((n_int,), jnp.int32)
+    value_bottom = jnp.zeros((n_leaf,), jnp.float32)
+    value_set = jnp.zeros((n_leaf,), bool)
+
+    node_ids = jnp.zeros((n,), jnp.int32)          # level-local vertex ids
+    find = (splits_mod.find_best_splits_host if host_offload_split
+            else splits_mod.find_best_splits)
+
+    for level in range(depth):
+        nn = 2 ** level
+        off = nn - 1                               # level offset in the heap
+        reps = 2 ** (depth - level)
+
+        # step ① — histogram-bin the gradient statistics of every vertex
+        hist = ops.build_histogram(codes, g, h, node_ids, n_nodes=nn,
+                                   n_bins=n_bins, strategy=hist_strategy)
+        # step ② — best split per vertex (host-offloadable)
+        best = find(hist, is_cat_field, field_mask, lambda_, gamma,
+                    min_child_weight)
+
+        # a vertex whose ancestor already became a leaf is pass-through
+        resolved = value_set[jnp.arange(nn) * reps]
+        do_split = (best.gain > 0.0) & (~resolved)
+
+        # vertices that stop here: fix their leaf weight into the bottom row
+        w = splits_mod.leaf_weight(best.node_g, best.node_h, lambda_)
+        newly_leaf = (~do_split) & (~resolved)
+        mask_b = _repeat_to_bottom(newly_leaf, level, depth)
+        value_bottom = jnp.where(mask_b & (~value_set),
+                                 _repeat_to_bottom(w, level, depth),
+                                 value_bottom)
+        value_set = value_set | mask_b
+
+        feature = jax.lax.dynamic_update_slice(
+            feature, jnp.where(do_split, best.feature, -1), (off,))
+        threshold = jax.lax.dynamic_update_slice(threshold, best.threshold,
+                                                 (off,))
+        is_cat = jax.lax.dynamic_update_slice(is_cat, best.is_cat, (off,))
+        default_left = jax.lax.dynamic_update_slice(default_left,
+                                                    best.default_left, (off,))
+
+        # step ③ — single-predicate partition into children.  Only the <= nn
+        # predicate columns travel: gathered as rows of the *column-major*
+        # redundant copy (contiguous reads — the §III bandwidth saving).
+        codes_lvl = codes_cm[jnp.where(do_split, best.feature, 0)]  # (nn, n)
+        node_ids = ops.partition_level(
+            node_ids, codes_lvl.T,
+            jnp.where(do_split, jnp.arange(nn, dtype=jnp.int32), -1),
+            best.threshold, best.is_cat, best.default_left,
+            missing_bin=missing_bin, strategy=partition_strategy)
+
+    # bottom level: remaining vertices get leaf weights from a segment-sum
+    Gb = jax.ops.segment_sum(g.astype(jnp.float32), node_ids, n_leaf)
+    Hb = jax.ops.segment_sum(h.astype(jnp.float32), node_ids, n_leaf)
+    wb = splits_mod.leaf_weight(Gb, Hb, lambda_)
+    value_bottom = jnp.where(value_set, value_bottom, wb)
+
+    return TreeArrays(feature=feature, threshold=threshold, is_cat=is_cat,
+                      default_left=default_left, leaf_value=value_bottom)
+
+
+# --------------------------------------------------------------------------
+# vertex-by-vertex (leaf-wise) grower with the smaller-child subtraction trick
+# --------------------------------------------------------------------------
+def fit_tree_lossguide(codes, codes_cm, g, h, *, depth: int, n_bins: int,
+                       missing_bin: int, is_cat_field, field_mask,
+                       lambda_: float, gamma: float, min_child_weight: float,
+                       max_leaves: Optional[int] = None,
+                       hist_strategy: str = "auto") -> TreeArrays:
+    """Best-first growth; bins only the smaller child per split (§II-A).
+
+    Control flow (the gain heap) runs on host — the paper itself argues this
+    coordination is cheap relative to the record scans; the scans themselves
+    (histogram of the smaller child, predicate masks) run on device.
+    """
+    n, F = codes.shape
+    n_int = 2 ** depth - 1
+    n_leaf_slots = 2 ** depth
+    max_leaves = max_leaves or n_leaf_slots
+    g = jnp.asarray(g, jnp.float32)
+    h = jnp.asarray(h, jnp.float32)
+
+    feature = np.full((n_int,), -1, np.int32)
+    threshold = np.zeros((n_int,), np.int32)
+    is_cat_a = np.zeros((n_int,), np.int32)
+    default_left = np.zeros((n_int,), np.int32)
+    value_bottom = np.zeros((n_leaf_slots,), np.float32)
+
+    def hist_of(mask):
+        return ops.build_histogram(
+            codes, g * mask, h * mask, jnp.zeros((n,), jnp.int32),
+            n_nodes=1, n_bins=n_bins, strategy=hist_strategy)[0]  # (F, NB, 2)
+
+    def best_of(hist):
+        d = splits_mod.find_best_splits(hist[None], is_cat_field, field_mask,
+                                        lambda_, gamma, min_child_weight)
+        return jax.device_get(
+            (d.gain[0], d.feature[0], d.threshold[0], d.is_cat[0],
+             d.default_left[0], d.node_g[0], d.node_h[0]))
+
+    root_mask = jnp.ones((n,), jnp.float32)
+    root_hist = hist_of(root_mask)
+    heap = []
+    counter = 0  # tie-break: deterministic heap order
+
+    def push(pos, level, hist, mask):
+        nonlocal counter
+        gain, f, t, c, dl, G, H = best_of(hist)
+        heapq.heappush(heap, (-float(gain), counter,
+                              dict(pos=pos, level=level, hist=hist, mask=mask,
+                                   f=int(f), t=int(t), c=int(c), dl=int(dl),
+                                   G=float(G), H=float(H),
+                                   gain=float(gain))))
+        counter += 1
+
+    def settle_leaf(e):
+        reps = 2 ** (depth - e["level"])
+        base = e["pos"] - (2 ** e["level"] - 1)
+        w = -e["G"] / (e["H"] + lambda_)
+        value_bottom[base * reps:(base + 1) * reps] = w
+
+    push(0, 0, root_hist, root_mask)
+    n_leaves = 1
+    while heap and n_leaves < max_leaves:
+        _, _, e = heapq.heappop(heap)
+        if e["gain"] <= 0.0 or e["level"] >= depth:
+            settle_leaf(e)
+            continue
+        pos, lvl = e["pos"], e["level"]
+        feature[pos], threshold[pos] = e["f"], e["t"]
+        is_cat_a[pos], default_left[pos] = e["c"], e["dl"]
+
+        # step ③ — one predicate, one column from the column-major copy
+        col = codes_cm[e["f"]].astype(jnp.int32)
+        miss = col == missing_bin
+        left = jnp.where(jnp.asarray(e["c"] == 1), col == e["t"],
+                         col <= e["t"])
+        left = jnp.where(miss, e["dl"] == 1, left)
+        mask_l = e["mask"] * left.astype(jnp.float32)
+        mask_r = e["mask"] - mask_l
+
+        # the paper's step-① optimization: bin ONLY the smaller child, the
+        # sibling histogram is parent − child (no explicit binning).
+        hl = float(jnp.sum(mask_l))
+        hr = float(jnp.sum(mask_r))
+        if hl <= hr:
+            hist_small = hist_of(mask_l)
+            hist_l, hist_r = hist_small, e["hist"] - hist_small
+        else:
+            hist_small = hist_of(mask_r)
+            hist_l, hist_r = e["hist"] - hist_small, hist_small
+
+        push(2 * pos + 1, lvl + 1, hist_l, mask_l)
+        push(2 * pos + 2, lvl + 1, hist_r, mask_r)
+        n_leaves += 1
+
+    while heap:  # settle everything left on the heap as leaves
+        _, _, e = heapq.heappop(heap)
+        settle_leaf(e)
+
+    return TreeArrays(feature=jnp.asarray(feature),
+                      threshold=jnp.asarray(threshold),
+                      is_cat=jnp.asarray(is_cat_a),
+                      default_left=jnp.asarray(default_left),
+                      leaf_value=jnp.asarray(value_bottom))

@@ -1,0 +1,1 @@
+from repro.data.synthetic import make_tabular, paper_dataset, PAPER_DATASETS

@@ -1,0 +1,130 @@
+"""Atomic, content-verified checkpointing for fault-tolerant training.
+
+Layout per step:  <dir>/step_<k>/arrays.npz + manifest.json
+  * two-phase commit: write into ``step_<k>.tmp``, fsync, atomic rename —
+    a crash mid-write never corrupts the latest valid checkpoint;
+  * the manifest stores a sha256 of the array payload; restore verifies it
+    (a half-written or bit-rotted checkpoint is skipped, falling back to
+    the previous one);
+  * ``keep_last`` bounds disk usage; restore picks the newest *valid* step.
+
+State is any pytree of arrays; restore reshapes it onto the caller's target
+sharding (``like=`` gives structure, ``mesh_sharding`` gives placement), so
+the same checkpoint restores onto a different mesh — the elastic-scaling
+path (see ``repro.distributed.elastic``).
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import re
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(state: Any) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    arrays = {f"leaf_{i:05d}": np.asarray(x) for i, x in enumerate(leaves)}
+    return arrays, treedef
+
+
+def save(directory: str, state: Any, step: int, *,
+         keep_last: int = 3, extra_meta: Optional[Dict] = None) -> str:
+    """Two-phase atomic checkpoint write; returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    arrays, _ = _flatten(state)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    payload = buf.getvalue()
+    digest = hashlib.sha256(payload).hexdigest()
+
+    final = os.path.join(directory, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    manifest = {"step": step, "sha256": digest,
+                "n_leaves": len(arrays), "meta": extra_meta or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+
+    _gc(directory, keep_last)
+    return final
+
+
+def _gc(directory: str, keep_last: int) -> None:
+    steps = list_steps(directory)
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"),
+                      ignore_errors=True)
+
+
+def list_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def _validate(path: str) -> Optional[Dict]:
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with open(os.path.join(path, "arrays.npz"), "rb") as f:
+            payload = f.read()
+        if hashlib.sha256(payload).hexdigest() != manifest["sha256"]:
+            return None
+        return manifest
+    except (OSError, json.JSONDecodeError, KeyError):
+        return None
+
+
+def restore(directory: str, like: Any, *,
+            step: Optional[int] = None, shardings: Any = None
+            ) -> Tuple[Any, int, Dict]:
+    """Restore the newest valid checkpoint (or an explicit ``step``).
+
+    ``like`` provides the pytree structure; ``shardings`` (optional, same
+    structure or a single sharding) places leaves on a (possibly different)
+    mesh — elastic restarts restore onto whatever mesh is alive.
+    """
+    steps = list_steps(directory)
+    if step is not None:
+        steps = [s for s in steps if s == step]
+    for s in reversed(steps):
+        path = os.path.join(directory, f"step_{s}")
+        manifest = _validate(path)
+        if manifest is None:
+            continue  # corrupt/partial — fall back to an older checkpoint
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            arrays = [z[f"leaf_{i:05d}"] for i in range(manifest["n_leaves"])]
+        treedef = jax.tree_util.tree_structure(like)
+        state = jax.tree_util.tree_unflatten(treedef, arrays)
+        if shardings is not None:
+            if jax.tree_util.tree_structure(shardings) == treedef:
+                state = jax.tree.map(jax.device_put, state, shardings)
+            else:
+                state = jax.tree.map(
+                    lambda x: jax.device_put(x, shardings), state)
+        return state, s, manifest["meta"]
+    raise FileNotFoundError(f"no valid checkpoint under {directory!r}")

@@ -1,0 +1,72 @@
+"""Elastic scaling: re-mesh live training state onto a changed device set.
+
+A shrink (node loss) or grow (capacity arrival) event produces a new device
+list; we rebuild the largest usable (data x model) mesh and re-place both
+the dataset shards and the model state with ``device_put`` — JAX global
+arrays make the re-shard a single collective-free relayout (host-mediated
+here, ICI/DCN-mediated on real hardware).  Checkpoints are mesh-agnostic
+(see ``checkpoint.py``), so shrink→restore→grow round-trips are exact.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import make_mesh
+
+
+def largest_mesh_shape(n_devices: int, model_parallel: int
+                       ) -> Tuple[int, int]:
+    """Largest (data, model) grid using ≤ n_devices with fixed model width.
+
+    Model parallelism is dictated by the workload (field/TP sharding), so
+    elasticity moves along the data axis — drop to the largest multiple.
+    """
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"need ≥ {model_parallel} devices for model_parallel="
+            f"{model_parallel}, have {n_devices}")
+    return n_devices // model_parallel, model_parallel
+
+
+def remesh(devices: Sequence, model_parallel: int) -> Mesh:
+    """Build the largest (data, model) mesh from the surviving devices."""
+    d, m = largest_mesh_shape(len(devices), model_parallel)
+    return make_mesh((d, m), ("data", "model"), devices=list(devices)[: d * m])
+
+
+def reshard_tree(state: Any, shardings: Any) -> Any:
+    """Relayout a pytree onto new shardings (same structure or single)."""
+    if jax.tree_util.tree_structure(shardings) == \
+            jax.tree_util.tree_structure(state):
+        return jax.tree.map(jax.device_put, state, shardings)
+    return jax.tree.map(lambda x: jax.device_put(x, shardings), state)
+
+
+class ElasticContext:
+    """Tracks the live mesh; ``resize`` re-places registered state.
+
+    Usage:
+        ctx = ElasticContext(model_parallel=2)
+        mesh = ctx.mesh
+        ...
+        mesh = ctx.resize(surviving_devices)      # after a failure
+        data = ctx.reshard_dataset(data)          # re-place inputs
+    """
+
+    def __init__(self, model_parallel: int,
+                 devices: Optional[List] = None):
+        self.model_parallel = model_parallel
+        self.devices = list(devices) if devices else list(jax.devices())
+        self.mesh = remesh(self.devices, model_parallel)
+
+    def resize(self, devices: Sequence) -> Mesh:
+        self.devices = list(devices)
+        self.mesh = remesh(self.devices, self.model_parallel)
+        return self.mesh
+
+    def sharding(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))

@@ -1,0 +1,1 @@
+from repro.kernels.ref import TreeArrays

@@ -1,0 +1,217 @@
+"""jit'd dispatch wrappers over the Pallas kernels and their alternatives.
+
+Every accelerated GBDT step exposes a ``strategy`` switch so the benchmark
+harness can reproduce the paper's machine comparison *as algorithm
+strategies at equal memory traffic*:
+
+  histogram (step ①):
+    * ``scatter``          — single shared scatter-RMW (multicore analog;
+                             also the fastest path on this CPU container)
+    * ``scatter_private``  — W privatized replicas + reduce (the GPU
+                             shared-memory privatization of §II-D)
+    * ``sort``             — sort-by-key + segment-sum (GPU-alternative)
+    * ``onehot``           — blocked one-hot einsum in pure jnp (XLA)
+    * ``pallas_grouped``   — the Booster kernel (group-by-field, MXU)
+    * ``pallas_packed``    — the naive-packing ablation kernel
+
+  traversal / inference (step ⑤, §III-D) and partition (step ③):
+    * ``reference`` (gather walk)  vs  ``pallas`` (one-hot walk)
+
+On non-TPU backends the Pallas kernels run in interpret mode (Python
+execution of the kernel body) — numerically identical, used for validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import histogram as _hist_k
+from repro.kernels import partition as _part_k
+from repro.kernels import traversal as _trav_k
+from repro.kernels import ref as _ref
+from repro.kernels.ref import TreeArrays
+
+HIST_STRATEGIES = ("scatter", "scatter_private", "sort", "onehot",
+                   "pallas_grouped", "pallas_packed")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_hist_strategy() -> str:
+    return "pallas_grouped" if _on_tpu() else "scatter"
+
+
+# --------------------------------------------------------------------------
+# generic primitive: one-hot contraction (shared with the MoE dispatch layer)
+# --------------------------------------------------------------------------
+def onehot_matmul(idx: jax.Array, values: jax.Array, width: int) -> jax.Array:
+    """out[j] = sum_{i : idx[i] == j} values[i]  via a dense MXU contraction.
+
+    idx: (n,) int; values: (n, ...) — returns (width, ...).  This is the
+    paper's core primitive (irregular scatter -> dense one-hot matmul) in
+    reusable form; the MoE layers use it for token->expert dispatch.
+    """
+    oh = jax.nn.one_hot(idx, width, dtype=values.dtype)        # (n, width)
+    flat = values.reshape(values.shape[0], -1)
+    out = jax.lax.dot_general(oh, flat, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return out.reshape((width,) + values.shape[1:])
+
+
+# --------------------------------------------------------------------------
+# step ① — histogram strategies
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
+def _hist_scatter(codes, g, h, node_ids, n_nodes, n_bins):
+    return _ref.histogram_ref(codes, g, h, node_ids, n_nodes, n_bins)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "n_private"))
+def _hist_scatter_private(codes, g, h, node_ids, n_nodes, n_bins,
+                          n_private=32):
+    """GPU-style privatization: W replica histograms, then reduce (§II-D)."""
+    n, F = codes.shape
+    pad = -n % n_private
+    codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    g = jnp.pad(g, (0, pad))
+    h = jnp.pad(h, (0, pad))
+    node_ids = jnp.pad(node_ids, (0, pad))
+    cw = codes.reshape(n_private, -1, F)
+    gw = g.reshape(n_private, -1)
+    hw = h.reshape(n_private, -1)
+    nw = node_ids.reshape(n_private, -1)
+    per = jax.vmap(lambda c, gg, hh, nn: _ref.histogram_ref(
+        c, gg, hh, nn, n_nodes, n_bins))(cw, gw, hw, nw)
+    return per.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
+def _hist_sort(codes, g, h, node_ids, n_nodes, n_bins):
+    """Sort-by-key + segment-sum per field (regularized-GPU alternative)."""
+    n, F = codes.shape
+    stats = jnp.stack([g, h], -1).astype(jnp.float32)
+
+    def per_field(col):
+        comb = node_ids.astype(jnp.int32) * n_bins + col.astype(jnp.int32)
+        order = jnp.argsort(comb)
+        return jax.ops.segment_sum(stats[order], comb[order],
+                                   num_segments=n_nodes * n_bins)
+
+    hist = jax.vmap(per_field, in_axes=1)(codes)               # (F, NN*NB, 2)
+    return hist.reshape(F, n_nodes, n_bins, 2).transpose(1, 0, 2, 3)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_nodes", "n_bins", "chunk", "fblk"))
+def _hist_onehot(codes, g, h, node_ids, n_nodes, n_bins, chunk=2048, fblk=8):
+    """Blocked pure-jnp one-hot contraction (the kernel's XLA twin)."""
+    n, F = codes.shape
+    pad = -n % chunk
+    codes = jnp.pad(codes, ((0, pad), (0, -F % fblk)))
+    g = jnp.pad(g, (0, pad))
+    h = jnp.pad(h, (0, pad))
+    node_ids = jnp.pad(node_ids, (0, pad))
+    np_, Fp = codes.shape
+    stats = jnp.stack([g, h], -1).astype(jnp.float32)
+
+    def body(acc, xs):
+        c, s, nid = xs                                         # (chunk, Fp) ...
+        oh_node = jax.nn.one_hot(nid, n_nodes, dtype=jnp.float32)
+        sn = (oh_node[:, :, None] * s[:, None, :]).reshape(chunk, n_nodes * 2)
+        oh_bin = jax.nn.one_hot(c.astype(jnp.int32), n_bins,
+                                dtype=jnp.float32)             # (chunk, Fp, NB)
+        contrib = jnp.einsum("nfb,ns->fbs", oh_bin, sn,
+                             preferred_element_type=jnp.float32)
+        return acc + contrib, None
+
+    init = jnp.zeros((Fp, n_bins, n_nodes * 2), jnp.float32)
+    xs = (codes.reshape(-1, chunk, Fp), stats.reshape(-1, chunk, 2),
+          node_ids.reshape(-1, chunk))
+    hist, _ = jax.lax.scan(body, init, xs)
+    hist = hist[:F].reshape(F, n_bins, n_nodes, 2)
+    return hist.transpose(2, 0, 1, 3)
+
+
+def build_histogram(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
+                    strategy: str = "auto", interpret: bool | None = None,
+                    records_per_block: int = 512, fields_per_block: int = 8):
+    """Dispatch: (n, F) codes -> (n_nodes, F, n_bins, 2) float32 histogram."""
+    if strategy == "auto":
+        strategy = default_hist_strategy()
+    if interpret is None:
+        interpret = not _on_tpu()
+    if strategy == "scatter":
+        return _hist_scatter(codes, g, h, node_ids, n_nodes, n_bins)
+    if strategy == "scatter_private":
+        return _hist_scatter_private(codes, g, h, node_ids, n_nodes, n_bins)
+    if strategy == "sort":
+        return _hist_sort(codes, g, h, node_ids, n_nodes, n_bins)
+    if strategy == "onehot":
+        return _hist_onehot(codes, g, h, node_ids, n_nodes, n_bins)
+    if strategy in ("pallas_grouped", "pallas_packed"):
+        return _hist_k.histogram_pallas(
+            codes, g, h, node_ids, n_nodes=n_nodes, n_bins=n_bins,
+            records_per_block=records_per_block,
+            fields_per_block=fields_per_block,
+            packed=(strategy == "pallas_packed"), interpret=interpret)
+    raise ValueError(f"unknown histogram strategy {strategy!r}; "
+                     f"choose from {HIST_STRATEGIES}")
+
+
+# --------------------------------------------------------------------------
+# step ③ — partition
+# --------------------------------------------------------------------------
+def partition_level(node_ids, codes_lvl, split_feature, split_threshold,
+                    split_is_cat, split_default_left, *, missing_bin: int,
+                    strategy: str = "auto", interpret: bool | None = None):
+    if strategy == "auto":
+        strategy = "pallas" if _on_tpu() else "reference"
+    if interpret is None:
+        interpret = not _on_tpu()
+    if strategy == "reference":
+        return _ref.partition_ref(node_ids, codes_lvl, split_feature,
+                                  split_threshold, split_is_cat,
+                                  split_default_left, missing_bin)
+    if strategy == "pallas":
+        return _part_k.partition_pallas(
+            node_ids, codes_lvl, split_feature, split_threshold,
+            split_is_cat, split_default_left, missing_bin=missing_bin,
+            interpret=interpret)
+    raise ValueError(f"unknown partition strategy {strategy!r}")
+
+
+# --------------------------------------------------------------------------
+# step ⑤ — traversal / batch inference
+# --------------------------------------------------------------------------
+def traverse_tree(tree: TreeArrays, codes, *, missing_bin: int,
+                  strategy: str = "auto", interpret: bool | None = None):
+    if strategy == "auto":
+        strategy = "pallas" if _on_tpu() else "reference"
+    if interpret is None:
+        interpret = not _on_tpu()
+    if strategy == "reference":
+        return _ref.traverse_ref(tree, codes, missing_bin)
+    if strategy == "pallas":
+        return _trav_k.traverse_pallas(tree, codes, missing_bin=missing_bin,
+                                       interpret=interpret)
+    raise ValueError(f"unknown traversal strategy {strategy!r}")
+
+
+def predict_ensemble(trees: TreeArrays, codes, *, missing_bin: int,
+                     depth: int, strategy: str = "auto",
+                     interpret: bool | None = None):
+    if strategy == "auto":
+        strategy = "pallas" if _on_tpu() else "reference"
+    if interpret is None:
+        interpret = not _on_tpu()
+    if strategy == "reference":
+        return _ref.predict_ensemble_ref(trees, codes, missing_bin)
+    if strategy == "pallas":
+        return _trav_k.predict_ensemble_pallas(
+            trees, codes, missing_bin=missing_bin, depth=depth,
+            interpret=interpret)
+    raise ValueError(f"unknown ensemble strategy {strategy!r}")

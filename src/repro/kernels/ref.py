@@ -1,0 +1,132 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth used by the per-kernel allclose tests and by the
+benchmark harness as the "software baseline" implementations.  They mirror
+the three dominant GBDT training steps the paper accelerates:
+
+  * ``histogram_ref``    — step ① histogram binning of gradient statistics
+  * ``partition_ref``    — step ③ single-predicate evaluation / partition
+  * ``traverse_ref``     — step ⑤ one-tree traversal (+ batch inference)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class TreeArrays(NamedTuple):
+    """Fixed-shape complete-binary-tree table (depth ``D`` static).
+
+    ``feature`` is -1 for pass-through nodes (a leaf decided above them);
+    internal layout matches the paper's step-⑤ "map the tree to a table"
+    (feature id, split point, child pointers are implicit: 2i+1 / 2i+2).
+    """
+
+    feature: Array       # (2**D - 1,) int32; -1 == pass-through
+    threshold: Array     # (2**D - 1,) int32 bin code
+    is_cat: Array        # (2**D - 1,) int32 {0,1}; ==1: go left iff code == thr
+    default_left: Array  # (2**D - 1,) int32 {0,1}; missing-value direction
+    leaf_value: Array    # (2**D,) float32 values at the bottom level
+
+    @property
+    def depth(self) -> int:
+        return int(self.leaf_value.shape[-1]).bit_length() - 1
+
+
+# --------------------------------------------------------------------------
+# step ① — histogram binning
+# --------------------------------------------------------------------------
+def histogram_ref(codes: Array, g: Array, h: Array, node_ids: Array,
+                  n_nodes: int, n_bins: int) -> Array:
+    """Scatter-add oracle: hist[node, f, bin] += (g, h).
+
+    codes: (n, F) uint; g, h: (n,); node_ids: (n,) int32 in [0, n_nodes).
+    Returns (n_nodes, F, n_bins, 2) float32.
+    """
+    n, F = codes.shape
+    stats = jnp.stack([g, h], axis=-1).astype(jnp.float32)          # (n, 2)
+    comb = node_ids.astype(jnp.int32)[:, None] * n_bins + codes.astype(jnp.int32)
+    hist = jnp.zeros((F, n_nodes * n_bins, 2), jnp.float32)
+    hist = hist.at[jnp.arange(F)[None, :], comb].add(stats[:, None, :])
+    return hist.reshape(F, n_nodes, n_bins, 2).transpose(1, 0, 2, 3)
+
+
+def _decide_go_left(code: Array, feature: Array, threshold: Array,
+                    is_cat: Array, default_left: Array, missing_bin: int
+                    ) -> Array:
+    """Shared predicate semantics (paper Fig 2/3 + missing-bin handling)."""
+    is_missing = code == missing_bin
+    left_num = code <= threshold
+    left_cat = code == threshold
+    go_left = jnp.where(is_cat == 1, left_cat, left_num)
+    go_left = jnp.where(is_missing, default_left == 1, go_left)
+    return jnp.where(feature < 0, True, go_left)
+
+
+# --------------------------------------------------------------------------
+# step ③ — single-predicate evaluation (one level of partitioning)
+# --------------------------------------------------------------------------
+def partition_ref(node_ids: Array, codes_lvl: Array, split_feature: Array,
+                  split_threshold: Array, split_is_cat: Array,
+                  split_default_left: Array, missing_bin: int) -> Array:
+    """Route each record to its child given the level's chosen splits.
+
+    node_ids: (n,) level-local node index in [0, NN).
+    codes_lvl: (n, C) compact per-level field columns; split_feature indexes
+        into [0, C) (the paper's field *renumbering*), or -1 for non-splitting
+        nodes (records go left, i.e. follow the pass-through spine).
+    Returns new (n,) node ids in [0, 2*NN).
+    """
+    f = split_feature[node_ids]                                     # (n,)
+    thr = split_threshold[node_ids]
+    cat = split_is_cat[node_ids]
+    dl = split_default_left[node_ids]
+    code = jnp.take_along_axis(
+        codes_lvl, jnp.maximum(f, 0).astype(jnp.int32)[:, None], axis=1)[:, 0]
+    go_left = _decide_go_left(code.astype(jnp.int32), f, thr, cat, dl,
+                              missing_bin)
+    return 2 * node_ids + (1 - go_left.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# step ⑤ — one-tree traversal (and the batch-inference building block)
+# --------------------------------------------------------------------------
+def traverse_ref(tree: TreeArrays, codes: Array, missing_bin: int) -> Array:
+    """Walk every record through one tree; returns (n,) leaf values.
+
+    codes: (n, C) — columns indexed by ``tree.feature`` (full field set or
+    the compacted/renumbered subset, caller's choice).
+    """
+    n = codes.shape[0]
+    depth = tree.depth
+    codes = codes.astype(jnp.int32)
+    node = jnp.zeros((n,), jnp.int32)
+    for _ in range(depth):
+        f = tree.feature[node]
+        code = jnp.take_along_axis(
+            codes, jnp.maximum(f, 0)[:, None], axis=1)[:, 0]
+        go_left = _decide_go_left(code, f, tree.threshold[node],
+                                  tree.is_cat[node], tree.default_left[node],
+                                  missing_bin)
+        node = 2 * node + 2 - go_left.astype(jnp.int32)
+    leaf = node - (2 ** depth - 1)
+    return tree.leaf_value[leaf]
+
+
+def predict_ensemble_ref(trees: TreeArrays, codes: Array, missing_bin: int
+                         ) -> Array:
+    """Batch inference oracle: sum of per-tree outputs (paper §II-B).
+
+    ``trees`` holds stacked arrays with a leading tree dimension (T, ...).
+    """
+    def body(carry, t):
+        tree = TreeArrays(*t)
+        return carry + traverse_ref(tree, codes, missing_bin), None
+
+    init = jnp.zeros((codes.shape[0],), jnp.float32)
+    out, _ = jax.lax.scan(body, init, tuple(trees))
+    return out

@@ -1,0 +1,175 @@
+"""Pallas TPU kernels for step ⑤ (one-tree traversal) and batch inference.
+
+Paper §III-B maps the grown tree to a table replicated in every BU's SRAM;
+each record walks the table with data-dependent reads.  A TPU lane cannot do
+independent VMEM gathers, so the walk is re-expressed gather-free:
+
+  * the whole node table (≤ 2 KB — the paper's own SRAM-residency argument)
+    lives in VMEM and is *replicated across grid steps* via a constant
+    index_map, exactly like the paper replicates the tree per BU;
+  * per hop, the record's node parameters are fetched with a one-hot MXU
+    contraction ``one_hot(node) @ table`` and the record's field value with a
+    one-hot row-reduction — the same renumbered-field trick as §III-B (the
+    table stores *compacted* field indices into the fetched columns);
+  * child pointers are implicit (node <- 2*node + 1 + go_right), so a D-hop
+    walk is D dense vector steps, zero irregular accesses.
+
+Batch inference (§III-D) adds a tree grid dimension: record blocks stream
+while each grid step holds one tree's table resident, accumulating the
+ensemble sum in the revisited output block — the analog of Booster pinning
+one tree per BU and averaging load across records.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import TreeArrays
+
+
+def _iota(shape, dim):
+    return lax.broadcasted_iota(jnp.int32, shape, dim)
+
+
+def _iota_f(shape, dim):
+    return lax.broadcasted_iota(jnp.float32, shape, dim)
+
+
+def pack_node_table(tree: TreeArrays) -> jax.Array:
+    """(N_int, 4) float32 [feature, threshold, is_cat, default_left].
+
+    All entries are small integers — exact in f32, which lets a single MXU
+    matmul fetch all four per-record node parameters at once.
+    """
+    return jnp.stack(
+        [tree.feature, tree.threshold, tree.is_cat, tree.default_left],
+        axis=1).astype(jnp.float32)
+
+
+def _walk_step(node, codes_f32, table, missing_bin: float):
+    """One tree hop for a (RBLK, 1) vector of node indices (gather-free)."""
+    rblk = node.shape[0]
+    n_int = table.shape[0]
+    n_cols = codes_f32.shape[1]
+    oh_node = (node == _iota((rblk, n_int), 1)).astype(jnp.float32)
+    params = lax.dot_general(oh_node, table, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (RBLK, 4)
+    f = params[:, 0:1]
+    thr = params[:, 1:2]
+    cat = params[:, 2:3]
+    dl = params[:, 3:4]
+    oh_f = (f == _iota_f((rblk, n_cols), 1)).astype(jnp.float32)
+    code = jnp.sum(oh_f * codes_f32, axis=1, keepdims=True)     # (RBLK, 1)
+    go_left = jnp.where(cat == 1.0, code == thr, code <= thr)
+    go_left = jnp.where(code == missing_bin, dl == 1.0, go_left)
+    go_left = jnp.where(f < 0.0, True, go_left)
+    return 2 * node + 2 - go_left.astype(jnp.int32)
+
+
+def _traverse_kernel(codes_ref, table_ref, leaf_ref, out_ref, *,
+                     depth: int, missing_bin: int):
+    rblk = codes_ref.shape[0]
+    codes = codes_ref[...].astype(jnp.float32)
+    table = table_ref[...]
+    node = jnp.zeros((rblk, 1), jnp.int32)
+    for _ in range(depth):  # static: fixed-depth walk, paper §III-B
+        node = _walk_step(node, codes, table, float(missing_bin))
+    leaf = node - table.shape[0]
+    n_leaf = leaf_ref.shape[0]
+    oh_leaf = (leaf == _iota((rblk, n_leaf), 1)).astype(jnp.float32)
+    out_ref[...] = lax.dot_general(oh_leaf, leaf_ref[...],
+                                   (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("missing_bin",
+                                             "records_per_block", "interpret"))
+def traverse_pallas(tree: TreeArrays, codes, *, missing_bin: int,
+                    records_per_block: int = 1024, interpret: bool = True):
+    """One-tree traversal; codes (n, C) with C matching tree.feature ids.
+
+    Returns (n,) float32 leaf values.
+    """
+    n, n_cols = codes.shape
+    rblk = min(records_per_block, max(8, n))
+    n_pad = -n % rblk
+    codes = jnp.pad(codes, ((0, n_pad), (0, 0)))
+    np_ = codes.shape[0]
+    n_int = tree.feature.shape[0]
+    n_leaf = tree.leaf_value.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_traverse_kernel, depth=tree.depth,
+                          missing_bin=missing_bin),
+        grid=(np_ // rblk,),
+        in_specs=[
+            pl.BlockSpec((rblk, n_cols), lambda ri: (ri, 0)),
+            pl.BlockSpec((n_int, 4), lambda ri: (0, 0)),      # replicated
+            pl.BlockSpec((n_leaf, 1), lambda ri: (0, 0)),     # replicated
+        ],
+        out_specs=pl.BlockSpec((rblk, 1), lambda ri: (ri, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+        interpret=interpret,
+    )(codes, pack_node_table(tree), tree.leaf_value[:, None])
+    return out[:n, 0]
+
+
+def _ensemble_kernel(codes_ref, table_ref, leaf_ref, out_ref, *,
+                     depth: int, missing_bin: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    rblk = codes_ref.shape[0]
+    codes = codes_ref[...].astype(jnp.float32)
+    table = table_ref[0]                                      # (N_int, 4)
+    node = jnp.zeros((rblk, 1), jnp.int32)
+    for _ in range(depth):
+        node = _walk_step(node, codes, table, float(missing_bin))
+    leaf = node - table.shape[0]
+    n_leaf = leaf_ref.shape[1]
+    oh_leaf = (leaf == _iota((rblk, n_leaf), 1)).astype(jnp.float32)
+    out_ref[...] += lax.dot_general(oh_leaf, leaf_ref[0],
+                                    (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("missing_bin", "depth",
+                                             "records_per_block", "interpret"))
+def predict_ensemble_pallas(trees: TreeArrays, codes, *, missing_bin: int,
+                            depth: int, records_per_block: int = 1024,
+                            interpret: bool = True):
+    """Batch inference: trees hold stacked (T, ...) arrays; codes (n, F).
+
+    Grid = (record blocks, trees): each step holds one tree table resident
+    in VMEM (paper: one tree per BU) and accumulates into the revisited
+    output block.  Returns (n,) float32 ensemble sums.
+    """
+    n, n_cols = codes.shape
+    T = trees.feature.shape[0]
+    rblk = min(records_per_block, max(8, n))
+    n_pad = -n % rblk
+    codes = jnp.pad(codes, ((0, n_pad), (0, 0)))
+    np_ = codes.shape[0]
+    n_int = trees.feature.shape[1]
+    n_leaf = trees.leaf_value.shape[1]
+    tables = jax.vmap(lambda f, t, c, d: pack_node_table(
+        TreeArrays(f, t, c, d, jnp.zeros((n_leaf,)))))(
+            trees.feature, trees.threshold, trees.is_cat, trees.default_left)
+    out = pl.pallas_call(
+        functools.partial(_ensemble_kernel, depth=depth,
+                          missing_bin=missing_bin),
+        grid=(np_ // rblk, T),
+        in_specs=[
+            pl.BlockSpec((rblk, n_cols), lambda ri, ti: (ri, 0)),
+            pl.BlockSpec((1, n_int, 4), lambda ri, ti: (ti, 0, 0)),
+            pl.BlockSpec((1, n_leaf, 1), lambda ri, ti: (ti, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rblk, 1), lambda ri, ti: (ri, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+        interpret=interpret,
+    )(codes, tables, trees.leaf_value[:, :, None])
+    return out[:n, 0]

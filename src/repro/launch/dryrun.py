@@ -1,0 +1,450 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
+# ^^ MUST precede every other import: jax locks the device count on first
+# init, and the production meshes below need 512 placeholder devices.
+
+import argparse      # noqa: E402
+import contextlib    # noqa: E402
+import dataclasses   # noqa: E402
+import gzip          # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, ARCH_IDS, get_arch, cell_is_runnable  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm, optim  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, then dump per-cell roofline artifacts.
+
+No arrays are ever allocated: parameters, optimizer state, caches and
+batches are ShapeDtypeStructs; ``.lower().compile()`` exercises the full
+XLA SPMD pipeline (sharding propagation, collective insertion, memory
+assignment) — sharding mismatches, compile-time OOM and unsupported
+collectives surface here exactly as they would on hardware.
+
+Variants (--variant) apply the §Perf hillclimb changes; "base" is the
+paper-faithful/default configuration recorded in the roofline table.
+"""
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+# --------------------------------------------------------------------------
+# per-variant config/step transforms (§Perf hillclimbing hooks)
+# --------------------------------------------------------------------------
+def _variant_base(cfg, shape):
+    return cfg, {}
+
+
+def _variant_no_remat(cfg, shape):
+    return dataclasses.replace(cfg, remat=False), {}
+
+
+def _variant_blocked_xent(cfg, shape):
+    # vocab-blocked cross entropy: no (B,S,V) logits materialization
+    return cfg, {"vocab_blocks": 8}
+
+
+def _variant_ssd_chunk64(cfg, shape):
+    # SSD intra-chunk L matrix bytes scale with S*chunk: 256 -> 64 quarters
+    # the mamba memory-term transient
+    return dataclasses.replace(cfg, ssm_chunk=64), {}
+
+
+def _variant_ssd_chunk128(cfg, shape):
+    return dataclasses.replace(cfg, ssm_chunk=128), {}
+
+
+def _variant_kv_shard_seq(cfg, shape):
+    # shard the decode cache on its sequence dim instead of head_dim
+    return cfg, {"kv_shard": "seq"}
+
+
+def _variant_kv_shard_kv(cfg, shape):
+    return cfg, {"kv_shard": "kv"}
+
+
+def _variant_blocked_xent_chunk64(cfg, shape):
+    return dataclasses.replace(cfg, ssm_chunk=64), {"vocab_blocks": 8}
+
+
+def _variant_remat_dots(cfg, shape):
+    # save matmul outputs in remat: backward skips recompute (and its FSDP
+    # parameter re-gathers) at the cost of more resident activations
+    return dataclasses.replace(cfg, remat_policy="dots"), {}
+
+
+def _variant_remat_dots_blocked_xent(cfg, shape):
+    return dataclasses.replace(cfg, remat_policy="dots"), {"vocab_blocks": 8}
+
+
+def _variant_flash_attn(cfg, shape):
+    # chunked online-softmax attention: O(Sq*Sk) logits never materialize
+    return dataclasses.replace(cfg, attn_chunk=2048), {}
+
+
+def _variant_flash_attn_blocked_xent(cfg, shape):
+    return dataclasses.replace(cfg, attn_chunk=2048), {"vocab_blocks": 8}
+
+
+def _variant_act_pin(cfg, shape):
+    # pin block-boundary activations batch-sharded: GSPMD must all-gather
+    # weights instead of all-reducing activations (MaxText-style)
+    return cfg, {"act_pin": True}
+
+
+def _variant_act_pin_flash(cfg, shape):
+    return dataclasses.replace(cfg, attn_chunk=2048), {"act_pin": True}
+
+
+def _variant_act_pin_remat_dots(cfg, shape):
+    return dataclasses.replace(cfg, remat_policy="dots"), {"act_pin": True}
+
+
+def _variant_act_pin_all(cfg, shape):
+    # everything: pin + flash attention + blocked xent
+    return dataclasses.replace(cfg, attn_chunk=2048), \
+        {"act_pin": True, "vocab_blocks": 8}
+
+
+def _variant_head_pin_flash(cfg, shape):
+    # head-sharded q/k/v (padded) keeps per-head attention shard-local
+    return dataclasses.replace(cfg, attn_chunk=2048), \
+        {"act_pin": True, "head_pin": True}
+
+
+def _variant_head_pin_all(cfg, shape):
+    return dataclasses.replace(cfg, attn_chunk=2048), \
+        {"act_pin": True, "head_pin": True, "vocab_blocks": 8}
+
+
+def _variant_head_pin_flash4k(cfg, shape):
+    # double the KV chunk: halves per-chunk Q re-reads in the chunk scan
+    return dataclasses.replace(cfg, attn_chunk=4096), \
+        {"act_pin": True, "head_pin": True}
+
+
+def _variant_moe_ff_fsdp_all(cfg, shape):
+    # TP-MoE fix: shard expert ff over data x model so expert matmuls
+    # never contract a sharded d (mixtral's collective driver)
+    return dataclasses.replace(cfg, attn_chunk=2048, moe_ff_fsdp=True), \
+        {"act_pin": True, "head_pin": True, "vocab_blocks": 8}
+
+
+VARIANTS = {
+    "base": _variant_base,
+    "no_remat": _variant_no_remat,
+    "blocked_xent": _variant_blocked_xent,
+    "ssd_chunk64": _variant_ssd_chunk64,
+    "ssd_chunk128": _variant_ssd_chunk128,
+    "kv_shard_seq": _variant_kv_shard_seq,
+    "kv_shard_kv": _variant_kv_shard_kv,
+    "blocked_xent_chunk64": _variant_blocked_xent_chunk64,
+    "remat_dots": _variant_remat_dots,
+    "remat_dots_blocked_xent": _variant_remat_dots_blocked_xent,
+    "flash_attn": _variant_flash_attn,
+    "flash_attn_blocked_xent": _variant_flash_attn_blocked_xent,
+    "act_pin": _variant_act_pin,
+    "act_pin_flash": _variant_act_pin_flash,
+    "act_pin_remat_dots": _variant_act_pin_remat_dots,
+    "act_pin_all": _variant_act_pin_all,
+    "head_pin_flash": _variant_head_pin_flash,
+    "head_pin_all": _variant_head_pin_all,
+    "head_pin_flash4k": _variant_head_pin_flash4k,
+    "moe_ff_fsdp_all": _variant_moe_ff_fsdp_all,
+}
+
+
+def _data_axes(mesh):
+    da = tuple(a for a in mesh.axis_names if a != "model")
+    return da if len(da) > 1 else da[0]
+
+
+def _batch_specs(cfg, shape, mesh, opts):
+    """ShapeDtypeStructs + shardings for the cell's inputs."""
+    da = _data_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    seq_spec = "model" if opts.get("seq_shard") else None
+
+    if shape.kind == "train":
+        batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        specs = {"tokens": P(da, None), "labels": P(da, None)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": sds((B, S), i32)}
+        specs = {"tokens": P(da, seq_spec)}
+    else:  # decode
+        batch = {"token": sds((B, 1), i32)}
+        specs = {"token": P(da if B > 1 else None, None)}
+
+    if cfg.mrope and shape.kind != "decode":
+        batch["positions"] = sds((3, B, S), i32)
+        specs["positions"] = P(None, da, None)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        batch["patch_embeds"] = sds((B, 256, cfg.d_model), f32)
+        specs["patch_embeds"] = P(da, None, None)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        batch["audio_embeds"] = sds((B, cfg.frontend_len, cfg.d_model), f32)
+        specs["audio_embeds"] = P(da, None, None)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return batch, shardings
+
+
+def input_specs(arch_id: str, shape_name: str, mesh, variant: str = "base"):
+    """Public helper: the cell's abstract inputs (ShapeDtypeStructs)."""
+    cfg, opts = VARIANTS[variant](get_arch(arch_id), SHAPES[shape_name])
+    return _batch_specs(cfg, SHAPES[shape_name], mesh, opts)[0]
+
+
+def _with_groups(cfg, k: int):
+    """Reduced-depth clone: k layer-pattern groups, unrolled (cost probe)."""
+    period = cfg.scan_period()
+    kw = dict(n_layers=period * k, scan_unroll=True)
+    if cfg.family == "encdec":
+        kw["encoder_layers"] = k
+    return dataclasses.replace(cfg, **kw)
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh, variant: str = "base",
+               groups: int | None = None):
+    """Build + lower one (arch, shape) cell on ``mesh``.  Returns lowered.
+
+    ``groups=k`` lowers a reduced-depth unrolled clone (k pattern groups)
+    used by the two-point cost probe: XLA cost_analysis counts a while
+    body once regardless of trip count, so the honest full-depth numbers
+    are extrapolated linearly from unrolled k=1 and k=2 compiles (every
+    cost term is constant or exactly linear in the group count)."""
+    shape = SHAPES[shape_name]
+    cfg, opts = VARIANTS[variant](get_arch(arch_id), shape)
+    if groups is not None:
+        cfg = _with_groups(cfg, groups)
+    params_abs = lm.abstract_params(cfg)
+    pshard = lm.param_shardings(cfg, mesh)
+    da = _data_axes(mesh)
+    batch_abs, bshard = _batch_specs(cfg, shape, mesh, opts)
+    repl = NamedSharding(mesh, P())
+    if opts.get("act_pin") or opts.get("head_pin"):
+        hidden = (NamedSharding(mesh, P(da, None, None))
+                  if opts.get("act_pin") else None)
+        heads = (NamedSharding(mesh, P(da, None, "model", None))
+                 if opts.get("head_pin") else None)
+        act_ctx = lm.activation_pins(hidden=hidden, heads=heads)
+    else:
+        act_ctx = contextlib.nullcontext()
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(optim.adamw_init, params_abs)
+        oshard = optim.AdamWState(step=repl,
+                                  m=jax.tree.map(lambda s: s, pshard),
+                                  v=jax.tree.map(lambda s: s, pshard))
+        step = lm.make_train_step(cfg,
+                                  vocab_blocks=opts.get("vocab_blocks", 0))
+        fn = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, repl),
+                     donate_argnums=(0, 1))
+        with act_ctx:
+            return fn.lower(params_abs, opt_abs, batch_abs), cfg
+
+    if shape.kind == "prefill":
+        cache_dtype = jnp.bfloat16
+
+        def run_prefill(p, b):
+            return lm.prefill(cfg, p, b, cache_dtype=cache_dtype,
+                              max_len=shape.seq_len)
+
+        _, cshard = lm.cache_specs(cfg, mesh, shape.global_batch,
+                                   shape.seq_len, cache_dtype,
+                                   kv_shard=opts.get("kv_shard", "hd"))
+        fn = jax.jit(run_prefill, in_shardings=(pshard, bshard),
+                     out_shardings=(NamedSharding(mesh, P(da, "model")),
+                                    cshard))
+        with act_ctx:
+            return fn.lower(params_abs, batch_abs), cfg
+
+    # decode: one new token against a seq_len KV cache
+    cache_abs, cshard = lm.cache_specs(cfg, mesh, shape.global_batch,
+                                       shape.seq_len, jnp.bfloat16,
+                                       kv_shard=opts.get("kv_shard", "hd"))
+
+    def run_decode(p, c, t, pos):
+        return lm.decode_step(cfg, p, c, t, pos)
+
+    B = shape.global_batch
+    logit_shard = NamedSharding(mesh, P(da if B > 1 else None, "model"))
+    fn = jax.jit(run_decode,
+                 in_shardings=(pshard, cshard, bshard["token"], repl),
+                 out_shardings=(logit_shard, cshard),
+                 donate_argnums=(1,))
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    with act_ctx:
+        return fn.lower(params_abs, cache_abs, batch_abs["token"],
+                        pos_abs), cfg
+
+
+def _probe_costs(arch_id, shape_name, mesh, variant, k):
+    """Compile the k-group unrolled clone; return (flops, bytes, coll)."""
+    lowered, _ = lower_cell(arch_id, shape_name, mesh, variant, groups=k)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            rl.parse_collectives(hlo))
+
+
+def _extrapolate(c1, c2, g):
+    """linear-in-groups: cost(G) = c1 + (G-1) * (c2 - c1)."""
+    return c1 + (g - 1) * (c2 - c1)
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             variant: str = "base", save_hlo: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch_id, "shape": shape_name, "variant": variant,
+           "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+           "chips": n_chips}
+    t0 = time.time()
+    with mesh:
+        # 1) the production (scan) program: compile feasibility + memory
+        lowered, cfg = lower_cell(arch_id, shape_name, mesh, variant)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        # 2) two-point unrolled cost probe (see lower_cell docstring)
+        g_full = cfg.n_layers // cfg.scan_period()
+        t2 = time.time()
+        f1, b1, coll1 = _probe_costs(arch_id, shape_name, mesh, variant, 1)
+        if g_full > 1:
+            f2, b2, coll2 = _probe_costs(arch_id, shape_name, mesh,
+                                         variant, 2)
+        else:
+            f2, b2, coll2 = f1, b1, coll1
+        rec["probe_s"] = round(time.time() - t2, 1)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                rec[k] = int(v)
+        rec["bytes_per_device"] = int(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0))
+
+    rec["layer_groups"] = g_full
+    rec["flops_per_chip"] = _extrapolate(f1, f2, g_full)
+    rec["bytes_per_chip"] = _extrapolate(b1, b2, g_full)
+    coll = {}
+    for kind in coll1:
+        coll[kind] = {
+            "count": int(_extrapolate(coll1[kind]["count"],
+                                      coll2[kind]["count"], g_full)),
+            "bytes": int(_extrapolate(coll1[kind]["bytes"],
+                                      coll2[kind]["bytes"], g_full))}
+    rec["collectives"] = coll
+    rec["collective_bytes_per_chip"] = float(
+        sum(v["bytes"] for v in coll.values()))
+    hlo = compiled.as_text()
+    rec.update(rl.roofline_terms(rec["flops_per_chip"],
+                                 rec["bytes_per_chip"],
+                                 rec["collective_bytes_per_chip"]))
+    n_active = lm.active_param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    rec["model_flops"] = rl.model_flops(shape.kind, n_active, tokens)
+    total_hlo_flops = rec["flops_per_chip"] * n_chips
+    rec["model_flops_ratio"] = (rec["model_flops"] / total_hlo_flops
+                                if total_hlo_flops else 0.0)
+    rec["params_total"] = lm.param_count(cfg)
+    rec["params_active"] = n_active
+
+    if save_hlo:
+        os.makedirs(os.path.join(ARTIFACT_DIR, "hlo"), exist_ok=True)
+        fn = os.path.join(ARTIFACT_DIR, "hlo",
+                          f"{rec['mesh']}_{arch_id}_{shape_name}_"
+                          f"{variant}.hlo.gz")
+        with gzip.open(fn, "wt") as f:
+            f.write(hlo)
+        rec["hlo_path"] = fn
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_IDS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="base", choices=list(VARIANTS))
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=None, help="artifact directory")
+    args = ap.parse_args()
+
+    out_dir = args.out or os.path.abspath(ARTIFACT_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for multi in meshes:
+        for aid in archs:
+            cfg = get_arch(aid)
+            for sh in shapes:
+                ok, why = cell_is_runnable(cfg, SHAPES[sh])
+                tag = f"{'multi' if multi else 'single'}_{aid}_{sh}"
+                if args.variant != "base":
+                    tag += f"_{args.variant}"
+                path = os.path.join(out_dir, tag + ".json")
+                if not ok:
+                    rec = {"arch": aid, "shape": sh, "variant": args.variant,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "skipped": True, "reason": why}
+                    print(f"[dryrun] SKIP  {tag}: {why}")
+                else:
+                    print(f"[dryrun] CELL  {tag} ...", flush=True)
+                    try:
+                        rec = run_cell(aid, sh, multi_pod=multi,
+                                       variant=args.variant,
+                                       save_hlo=args.save_hlo)
+                        print(f"[dryrun]   ok  lower={rec['lower_s']}s "
+                              f"compile={rec['compile_s']}s "
+                              f"flops/chip={rec['flops_per_chip']:.3e} "
+                              f"coll B/chip="
+                              f"{rec['collective_bytes_per_chip']:.3e} "
+                              f"dominant={rec['dominant']}", flush=True)
+                    except Exception as e:  # noqa: BLE001
+                        failures += 1
+                        rec = {"arch": aid, "shape": sh, "mesh": tag,
+                               "variant": args.variant, "error": str(e),
+                               "traceback": traceback.format_exc()}
+                        print(f"[dryrun]   FAIL {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"[dryrun] done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+Axes:
+  * ``pod``   — cross-pod data parallelism (only gradient/histogram psums
+                cross this axis; DCI-friendly)
+  * ``data``  — in-pod data parallelism (records / batch)
+  * ``model`` — tensor / expert / field parallelism
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+SINGLE_POD_SHAPE: Tuple[int, int] = (16, 16)          # 256 chips / pod
+MULTI_POD_SHAPE: Tuple[int, int, int] = (2, 16, 16)   # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    """Arbitrary mesh over an explicit device list (elastic re-meshing)."""
+    if devices is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    devs = np.asarray(devices).reshape(tuple(shape))
+    return jax.sharding.Mesh(devs, tuple(axes))
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """Axes carrying record/batch parallelism (everything but 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def model_axis(mesh: jax.sharding.Mesh) -> str:
+    return "model"
+
+
+def n_data_shards(mesh: jax.sharding.Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))

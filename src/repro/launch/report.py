@@ -1,0 +1,108 @@
+"""Aggregate dry-run artifacts into the §Dry-run / §Roofline tables.
+
+Usage:  PYTHONPATH=src python -m repro.launch.report [--dir artifacts/dryrun]
+Emits markdown to stdout (pasted into EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCH_IDS, SHAPES
+from repro.launch.roofline import format_table
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def _fmt_b(x):
+    if x is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def load(directory: str, mesh: str = "single", variant: str = "base"):
+    recs = {}
+    for path in glob.glob(os.path.join(directory, f"{mesh}_*.json")):
+        name = os.path.basename(path)[:-5]
+        if variant == "base" and name.count("_") > 2:
+            # variant artifacts carry a 4th underscore-separated token
+            parts = name.split("_")
+            if parts[-1] in ("base",) or len(parts) == 3:
+                pass
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("variant", "base") != variant:
+            continue
+        recs[(rec["arch"], rec["shape"])] = rec
+    return recs
+
+
+def roofline_rows(recs):
+    rows = []
+    for aid in ARCH_IDS:
+        for sh in SHAPES:
+            rec = recs.get((aid, sh))
+            if rec is None:
+                continue
+            if rec.get("skipped"):
+                rows.append({"arch": aid, "shape": sh, "status": "SKIP",
+                             "dominant": "-", "compute": "-", "memory": "-",
+                             "collective": "-", "frac": "-", "mf_ratio": "-",
+                             "hbm/dev": "-"})
+                continue
+            if "error" in rec:
+                rows.append({"arch": aid, "shape": sh, "status": "FAIL",
+                             "dominant": "-", "compute": "-", "memory": "-",
+                             "collective": "-", "frac": "-", "mf_ratio": "-",
+                             "hbm/dev": "-"})
+                continue
+            rows.append({
+                "arch": aid, "shape": sh, "status": "ok",
+                "compute": _fmt_s(rec["compute_s"]),
+                "memory": _fmt_s(rec["memory_s"]),
+                "collective": _fmt_s(rec["collective_s"]),
+                "dominant": rec["dominant"],
+                "frac": f"{rec['roofline_fraction']:.3f}",
+                "mf_ratio": f"{rec.get('model_flops_ratio', 0):.3f}",
+                "hbm/dev": _fmt_b(rec.get("bytes_per_device")),
+            })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    default_dir = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                               "artifacts", "dryrun")
+    ap.add_argument("--dir", default=os.path.abspath(default_dir))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variant", default="base")
+    args = ap.parse_args()
+
+    recs = load(args.dir, args.mesh, args.variant)
+    rows = roofline_rows(recs)
+    keys = ["arch", "shape", "status", "compute", "memory", "collective",
+            "dominant", "frac", "mf_ratio", "hbm/dev"]
+    print(f"### Roofline — mesh={args.mesh}, variant={args.variant}\n")
+    print(format_table(rows, keys))
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"\ncells: {len(rows)} total, {len(ok)} compiled, "
+          f"{sum(1 for r in rows if r['status'] == 'SKIP')} skipped, "
+          f"{sum(1 for r in rows if r['status'] == 'FAIL')} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,352 @@
+"""Shared transformer layers: norm, rotary embeddings, GQA attention, MLP.
+
+Pure functions over parameter dicts (no framework): the same code path is
+traced for real arrays (smoke tests), ShapeDtypeStructs (the 512-device
+dry-run) and under pjit (production mesh).  Compute dtype is bf16 with f32
+softmax/norm accumulation, MaxText-style.
+
+Attention comes in three explicit modes:
+  * ``attn_train``   — full-sequence, no cache (also the encoder path)
+  * ``attn_prefill`` — full-sequence + writes the KV cache (ring-rolled
+                       when a sliding window bounds the cache)
+  * ``attn_decode``  — one token against a (possibly ring-buffer) cache;
+                       keys carry RoPE applied at *write* time, so a ring
+                       slot permutation never corrupts relative positions.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# activation sharding pins (set by the launcher during tracing)
+# --------------------------------------------------------------------------
+# "hidden": (B, S, d) block-boundary activations -> batch-sharded, so GSPMD
+#   all-gathers weights instead of all-reducing activations (MaxText-style);
+# "heads":  (B, S, H, D) q/k/v -> head-sharded on the model axis (padded
+#   when H doesn't divide it), so per-head attention math stays shard-local
+#   instead of psum-ing logits over a flat sharded head*dim contraction.
+_ACT_PINS = {"hidden": None, "heads": None}
+
+
+@contextlib.contextmanager
+def activation_pins(hidden=None, heads=None):
+    old = dict(_ACT_PINS)
+    _ACT_PINS.update(hidden=hidden, heads=heads)
+    try:
+        yield
+    finally:
+        _ACT_PINS.update(old)
+
+
+def pin_hidden(x):
+    if _ACT_PINS["hidden"] is not None and x.ndim == 3:
+        return jax.lax.with_sharding_constraint(x, _ACT_PINS["hidden"])
+    return x
+
+
+def _pin_heads(x):
+    if _ACT_PINS["heads"] is not None and x.ndim == 4:
+        return jax.lax.with_sharding_constraint(x, _ACT_PINS["heads"])
+    return x
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int, offset=0):
+    """Whisper-style fixed positional encoding (stands in for its learned
+    embeddings; noted in DESIGN.md)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32) + offset
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)
+    inv = jnp.exp(-dim * jnp.log(10000.0) / d_model)
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings (standard RoPE + Qwen2-VL's 3-section M-RoPE)
+# --------------------------------------------------------------------------
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions (B, S) -> cos/sin (B, S, head_dim/2) in f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions_3d, sections: Tuple[int, int, int],
+                  head_dim: int, theta: float):
+    """Qwen2-VL M-RoPE: head_dim/2 frequency slots split into (temporal,
+    height, width) sections, each rotated by its own position stream.
+    positions_3d (3, B, S) -> cos/sin (B, S, head_dim/2)."""
+    t_sec, h_sec, w_sec = sections
+    assert t_sec + h_sec + w_sec == head_dim // 2
+    sel = jnp.concatenate([jnp.zeros((t_sec,), jnp.int32),
+                           jnp.ones((h_sec,), jnp.int32),
+                           jnp.full((w_sec,), 2, jnp.int32)])
+    pos = jnp.take(positions_3d, sel, axis=0)      # (d2, B, S)
+    pos = jnp.moveaxis(pos, 0, -1)                 # (B, S, d2)
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    ang = pos.astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, S, H, D); cos/sin (B, S, D/2) — rotate-half convention."""
+    d2 = x.shape[-1] // 2
+    x1 = x[..., :d2].astype(jnp.float32)
+    x2 = x[..., d2:].astype(jnp.float32)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention core
+# --------------------------------------------------------------------------
+def _repeat_kv(x, n_rep: int):
+    if n_rep == 1:
+        return x
+    b, s, kv, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, d)
+                            ).reshape(b, s, kv * n_rep, d)
+
+
+def sdpa(q, k, v, *, causal: bool, sliding_window: Optional[int] = None,
+         kv_valid: Optional[jax.Array] = None):
+    """q (B,Sq,H,D); k,v (B,Sk,KV,D); f32 softmax accumulation.
+
+    ``kv_valid``: (Sk,) bool validity (decode ring caches); when given,
+    causal/sliding masks are assumed already encoded in validity.
+    """
+    b, sq, h, d = q.shape
+    q = _pin_heads(q)
+    k = _pin_heads(_repeat_kv(k, h // k.shape[2]))
+    v = _pin_heads(_repeat_kv(v, h // v.shape[2]))
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32) * scale
+    sk = k.shape[1]
+    if kv_valid is not None:
+        logits = jnp.where(kv_valid[None, None, None, :], logits, -1e30)
+    else:
+        q_pos = jnp.arange(sq)[:, None]
+        k_pos = jnp.arange(sk)[None, :]
+        mask = jnp.ones((sq, sk), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if sliding_window is not None:
+            mask &= k_pos > q_pos - sliding_window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def sdpa_chunked(q, k, v, *, causal: bool,
+                 sliding_window: Optional[int] = None,
+                 kv_chunk: int = 2048, unroll: bool = False):
+    """Flash-style attention: scan over KV chunks with an online softmax.
+
+    Never materializes the (B, H, Sq, Sk) logits — peak attention memory
+    drops from O(Sq*Sk) to O(Sq*kv_chunk).  §Perf beyond-paper
+    optimization for the 32k prefill / 4k train cells; numerically matches
+    ``sdpa`` (tested)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    q = _pin_heads(q)
+    k = _pin_heads(_repeat_kv(k, h // k.shape[2]))
+    v = _pin_heads(_repeat_kv(v, h // v.shape[2]))
+    pad = -sk % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (sk + pad) // kv_chunk
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qf = q.astype(jnp.float32)
+    q_pos = jnp.arange(sq)[:, None]
+
+    def body(carry, i):
+        o, m, s = carry
+        kc = jax.lax.dynamic_slice(k, (0, i * kv_chunk, 0, 0),
+                                   (b, kv_chunk, h, d)).astype(jnp.float32)
+        vc = jax.lax.dynamic_slice(v, (0, i * kv_chunk, 0, 0),
+                                   (b, kv_chunk, h, d)).astype(jnp.float32)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kc,
+                            preferred_element_type=jnp.float32) * scale
+        k_pos = i * kv_chunk + jnp.arange(kv_chunk)[None, :]
+        mask = k_pos < sk                       # drop the pad tail
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        if sliding_window is not None:
+            mask = mask & (k_pos > q_pos - sliding_window)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        s_new = s * corr + p.sum(-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vc, preferred_element_type=jnp.float32)
+        return (o_new, m_new, s_new), None
+
+    o0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((b, h, sq), jnp.float32)
+    (o, m, s), _ = jax.lax.scan(body, (o0, m0, s0),
+                                jnp.arange(n_chunks, dtype=jnp.int32),
+                                unroll=n_chunks if unroll else 1)
+    out = o / jnp.maximum(s[..., None], 1e-30)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)   # (B, Sq, H, D)
+
+
+def _qkv(params, x, x_kv, n_heads, n_kv_heads, head_dim, qk_norm, norm_eps):
+    b, sq, _ = x.shape
+    src = x if x_kv is None else x_kv
+    sk = src.shape[1]
+    q = x @ params["wq"]
+    k = src @ params["wk"]
+    v = src @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(b, sq, n_heads, head_dim)
+    k = k.reshape(b, sk, n_kv_heads, head_dim)
+    v = v.reshape(b, sk, n_kv_heads, head_dim)
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"], norm_eps)
+        k = rms_norm(k, params["k_norm"], norm_eps)
+    return q, k, v
+
+
+def attn_train(params, x, *, n_heads, n_kv_heads, head_dim, causal=True,
+               cos_sin=None, qk_norm=False, sliding_window=None,
+               norm_eps=1e-6, x_kv=None, attn_chunk=0,
+               chunk_unroll=False):
+    """Full-sequence attention (training / encoder / cross-attention).
+
+    ``attn_chunk > 0`` switches to the flash-style chunked kernel."""
+    b, sq, _ = x.shape
+    q, k, v = _qkv(params, x, x_kv, n_heads, n_kv_heads, head_dim,
+                   qk_norm, norm_eps)
+    if cos_sin is not None:
+        q = apply_rope(q, *cos_sin)
+        if x_kv is None:
+            k = apply_rope(k, *cos_sin)
+    if attn_chunk:
+        out = sdpa_chunked(q, k, v, causal=causal and x_kv is None,
+                           sliding_window=sliding_window,
+                           kv_chunk=attn_chunk, unroll=chunk_unroll)
+    else:
+        out = sdpa(q, k, v, causal=causal and x_kv is None,
+                   sliding_window=sliding_window)
+    return out.reshape(b, sq, n_heads * head_dim) @ params["wo"]
+
+
+def attn_prefill(params, x, cache, *, n_heads, n_kv_heads, head_dim,
+                 cos_sin=None, qk_norm=False, sliding_window=None,
+                 norm_eps=1e-6, attn_chunk=0, chunk_unroll=False):
+    """Causal prefill; fills ``cache`` {"k","v"} (B, W, KV, D).
+
+    W < S means a sliding-window ring cache: the last W (rope'd) keys are
+    rolled so token t lands in slot t mod W — decode then appends at
+    (pos mod W) with no relocation.
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, None, n_heads, n_kv_heads, head_dim,
+                   qk_norm, norm_eps)
+    if cos_sin is not None:
+        q = apply_rope(q, *cos_sin)
+        k = apply_rope(k, *cos_sin)
+    if attn_chunk:
+        out = sdpa_chunked(q, k, v, causal=True,
+                           sliding_window=sliding_window,
+                           kv_chunk=attn_chunk, unroll=chunk_unroll)
+    else:
+        out = sdpa(q, k, v, causal=True, sliding_window=sliding_window)
+    w = cache["k"].shape[1]
+    kd = k.astype(cache["k"].dtype)
+    vd = v.astype(cache["v"].dtype)
+    if w < s:
+        ck = jnp.roll(kd[:, -w:], s % w, axis=1)
+        cv = jnp.roll(vd[:, -w:], s % w, axis=1)
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], kd, (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vd, (0, 0, 0, 0))
+    new_cache = {"k": ck, "v": cv}
+    return out.reshape(b, s, n_heads * head_dim) @ params["wo"], new_cache
+
+
+def attn_decode(params, x, cache, pos, *, n_heads, n_kv_heads, head_dim,
+                cos_sin=None, qk_norm=False, norm_eps=1e-6):
+    """One-token decode against a (ring) cache; x (B, 1, d), pos scalar.
+
+    Keys in the cache already carry RoPE; masking is pure validity:
+    valid slots = min(pos+1, W) (a full ring holds exactly the last W
+    tokens, which is the sliding window by construction).
+    """
+    b = x.shape[0]
+    q, k, v = _qkv(params, x, None, n_heads, n_kv_heads, head_dim,
+                   qk_norm, norm_eps)
+    if cos_sin is not None:
+        q = apply_rope(q, *cos_sin)
+        k = apply_rope(k, *cos_sin)
+    w = cache["k"].shape[1]
+    slot = pos % w
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    kv_valid = jnp.arange(w) < jnp.minimum(pos + 1, w)
+    out = sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False,
+               kv_valid=kv_valid)
+    return (out.reshape(b, 1, n_heads * head_dim) @ params["wo"],
+            {"k": ck, "v": cv})
+
+
+def xattn_decode(params, x, cross_cache, *, n_heads, n_kv_heads, head_dim,
+                 norm_eps=1e-6):
+    """Cross-attention during decode: K/V fixed from the encoder (cached)."""
+    b = x.shape[0]
+    q = (x @ params["wq"])
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype)
+    q = q.reshape(b, 1, n_heads, head_dim)
+    out = sdpa(q, cross_cache["k"].astype(q.dtype),
+               cross_cache["v"].astype(q.dtype), causal=False)
+    return out.reshape(b, 1, n_heads * head_dim) @ params["wo"]
+
+
+def xattn_make_cache(params, enc, *, n_kv_heads, head_dim, dtype):
+    """Precompute cross-attention K/V from encoder states (prefill)."""
+    b, sk, _ = enc.shape
+    k = enc @ params["wk"]
+    v = enc @ params["wv"]
+    if "bk" in params:
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    return {"k": k.reshape(b, sk, n_kv_heads, head_dim).astype(dtype),
+            "v": v.reshape(b, sk, n_kv_heads, head_dim).astype(dtype)}
+
+
+# --------------------------------------------------------------------------
+# feed-forward
+# --------------------------------------------------------------------------
+def mlp(params, x, act: str = "silu"):
+    """SwiGLU (w_gate present) or plain 2-layer MLP."""
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    if "w_gate" in params:
+        hidden = a(x @ params["w_gate"]) * (x @ params["w_in"])
+    else:
+        hidden = a(x @ params["w_in"])
+    return hidden @ params["w_out"]

@@ -1,0 +1,701 @@
+"""Unified LM substrate covering all ten assigned architectures.
+
+One parameter schema + one forward pass handle dense / MoE / SSM / hybrid /
+enc-dec / VLM families, driven entirely by ``ArchConfig``:
+
+  * layers are grouped by the config's repeating pattern period and run
+    under ``jax.lax.scan`` (one compiled block body regardless of depth —
+    essential for 512-device dry-run compile times) with optional remat;
+  * three execution modes share the block code: train (no cache), prefill
+    (fills KV/SSM caches), decode (one token against ring caches);
+  * parameters exist in three forms: real arrays (``init_params``, smoke
+    scale), ShapeDtypeStructs (``abstract_params``, full scale — the
+    dry-run never allocates), and PartitionSpecs (``partition_specs``).
+
+Sharding rules (MaxText-flavored):
+  data axes = all mesh axes but "model" (i.e. ("pod","data") multi-pod).
+  embed (V, d)            -> ("model", fsdp)
+  in-proj  (d, X)         -> (fsdp, "model")
+  out-proj (X, d)         -> ("model", fsdp)
+  experts  (E, d, f)      -> EP ("model", fsdp, None) when E divides the
+                             model axis, else TP (None, fsdp, "model")
+  fsdp = data axes when cfg.fsdp (ZeRO-3: params+moments spread over data)
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.configs.registry import ArchConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import optim
+from repro.models.mamba import mamba2_mixer
+from repro.models.moe import moe_ffn
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+# activation sharding pins live in repro.models.layers (shared with the
+# attention kernels); re-exported here for the launcher.
+activation_pins = L.activation_pins
+_pin = L.pin_hidden
+
+
+def mrope_sections(cfg: ArchConfig) -> Tuple[int, int, int]:
+    d2 = cfg.head_dim // 2
+    hw = int(round(d2 * 3 / 8))
+    return (d2 - 2 * hw, hw, hw)       # (16, 24, 24) at head_dim=128
+
+
+# ==========================================================================
+# parameters
+# ==========================================================================
+def _init(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def _attn_params(cfg: ArchConfig, key, dt, *, cross: bool = False) -> Dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": _init(ks[0], (d, h * hd), dt),
+         "wk": _init(ks[1], (d, kv * hd), dt),
+         "wv": _init(ks[2], (d, kv * hd), dt),
+         "wo": _init(ks[3], (h * hd, d), dt)}
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _mlp_params(cfg: ArchConfig, key, dt) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_in": _init(ks[0], (d, f), dt),
+         "w_out": _init(ks[1], (f, d), dt)}
+    if cfg.act == "silu":
+        p["w_gate"] = _init(ks[2], (d, f), dt)
+    return p
+
+
+def _moe_params(cfg: ArchConfig, key, dt) -> Dict:
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 7)
+    p = {"router": _init(ks[0], (d, e), jnp.float32),
+         "w_in": _init(ks[1], (e, d, f), dt),
+         "w_gate": _init(ks[2], (e, d, f), dt),
+         "w_out": _init(ks[3], (e, f, d), dt)}
+    if cfg.shared_expert:
+        p["shared_w_in"] = _init(ks[4], (d, cfg.d_ff), dt)
+        p["shared_w_gate"] = _init(ks[5], (d, cfg.d_ff), dt)
+        p["shared_w_out"] = _init(ks[6], (cfg.d_ff, d), dt)
+    return p
+
+
+def _mamba_params(cfg: ArchConfig, key, dt) -> Dict:
+    d, di = cfg.d_model, cfg.d_inner
+    h, n, k = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di + 2 * n + h), dt),
+        "conv_w": _init(ks[1], (k, di + 2 * n), dt, scale=0.1),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),
+        "gate_norm": jnp.ones((di,), dt),
+        "out_proj": _init(ks[2], (di, d), dt),
+    }
+
+
+def _block_params(cfg: ArchConfig, kind, key, dt, *, decoder_cross: bool
+                  ) -> Dict:
+    mixer, ffn = kind
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), dt)}
+    p["mixer"] = (_attn_params(cfg, ks[0], dt) if mixer == "attn"
+                  else _mamba_params(cfg, ks[0], dt))
+    if decoder_cross and mixer == "attn":
+        p["lnx"] = jnp.ones((cfg.d_model,), dt)
+        p["xattn"] = _attn_params(cfg, ks[1], dt, cross=True)
+    if ffn != "none":
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+        p["ffn"] = (_mlp_params(cfg, ks[2], dt) if ffn == "mlp"
+                    else _moe_params(cfg, ks[2], dt))
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Dict:
+    dt = _dtype(cfg.param_dtype)
+    kinds = cfg.layer_kinds()
+    period = cfg.scan_period()
+    groups = cfg.n_layers // period
+    k_embed, k_dec, k_enc = jax.random.split(key, 3)
+
+    def stack_blocks(base_key, n_groups, kind, cross):
+        ks = jax.random.split(base_key, n_groups)
+        per = [_block_params(cfg, kind, ks[g], dt, decoder_cross=cross)
+               for g in range(n_groups)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+    dec_keys = jax.random.split(k_dec, period)
+    params: Dict[str, Any] = {
+        "embed": _init(k_embed, (cfg.vocab_padded, cfg.d_model), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "blocks": [stack_blocks(dec_keys[j], groups, kinds[j],
+                                cfg.family == "encdec")
+                   for j in range(period)],
+    }
+    if cfg.family == "encdec":
+        params["enc_blocks"] = [stack_blocks(k_enc, cfg.encoder_layers,
+                                             ("attn", "mlp"), False)]
+        params["enc_norm"] = jnp.ones((cfg.d_model,), dt)
+    return params
+
+
+def abstract_params(cfg: ArchConfig):
+    """Full-scale parameter ShapeDtypeStructs — no allocation (dry-run)."""
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def param_count(cfg: ArchConfig) -> int:
+    return sum(int(np.prod(l.shape))
+               for l in jax.tree.leaves(abstract_params(cfg)))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """MoE-aware active parameters (top_k / n_experts of expert weights)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(
+            abstract_params(cfg)):
+        n = int(np.prod(leaf.shape))
+        names = [p.key for p in path if isinstance(p, DictKey)]
+        if cfg.n_experts and leaf.ndim >= 3 and names[-1].startswith("w_"):
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total
+
+
+# ==========================================================================
+# partition specs
+# ==========================================================================
+_IN_W = ("wq", "wk", "wv", "w_in", "w_gate", "in_proj",
+         "shared_w_in", "shared_w_gate")
+_OUT_W = ("wo", "w_out", "out_proj", "shared_w_out")
+
+
+def partition_specs(cfg: ArchConfig, mesh: Mesh):
+    """PartitionSpec pytree matching ``init_params`` / ``abstract_params``."""
+    da = tuple(a for a in mesh.axis_names if a != "model")
+    da = da if len(da) > 1 else da[0]
+    m = mesh.shape["model"]
+    fsdp = da if cfg.fsdp else None
+    ep = cfg.n_experts >= m and cfg.n_experts % m == 0
+
+    def rule(path, leaf):
+        names = [p.key for p in path if isinstance(p, DictKey)]
+        stacked = "blocks" in names or "enc_blocks" in names
+        name = names[-1]
+        rank = leaf.ndim - (1 if stacked else 0)
+
+        def S(*spec):
+            return P(*(((None,) + spec) if stacked else spec))
+
+        if name == "embed":
+            return P("model", fsdp)
+        if name in _IN_W:
+            if rank == 3:                      # (E, d, ff) expert weights
+                if ep:
+                    return S("model", fsdp, None)
+                if cfg.moe_ff_fsdp:            # keep contracted d unsharded
+                    return S(None, None,
+                             (fsdp + ("model",)) if isinstance(fsdp, tuple)
+                             else ((fsdp, "model") if fsdp else "model"))
+                return S(None, fsdp, "model")
+            return S(fsdp, "model")
+        if name in _OUT_W:
+            if rank == 3:                      # (E, ff, d)
+                if ep:
+                    return S("model", fsdp, None)
+                if cfg.moe_ff_fsdp:
+                    return S(None,
+                             (fsdp + ("model",)) if isinstance(fsdp, tuple)
+                             else ((fsdp, "model") if fsdp else "model"),
+                             None)
+                return S(None, "model", fsdp)
+            return S("model", fsdp)
+        if name == "conv_w":
+            return S(None, "model")
+        if name in ("A_log", "D", "dt_bias"):
+            return S("model") if cfg.ssm_heads % m == 0 else S(None)
+        if name == "gate_norm":
+            return S("model") if cfg.d_inner % m == 0 else S(None)
+        return S(*([None] * rank))             # norms, biases, router
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params(cfg))
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        partition_specs(cfg, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ==========================================================================
+# forward
+# ==========================================================================
+def _rope(cfg: ArchConfig, positions, mrope_pos=None):
+    if not cfg.rope:
+        return None
+    if cfg.mrope:
+        return L.mrope_cos_sin(mrope_pos, mrope_sections(cfg), cfg.head_dim,
+                               cfg.rope_theta)
+    return L.rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+
+
+_KEEP_F32 = ("A_log", "D", "dt_bias", "router")
+
+
+def _cast_block(bp, cdt):
+    """Cast block weights to the compute dtype at use (MaxText-style);
+    SSM decay scalars and router weights stay f32 for stability."""
+    def cast(path, w):
+        name = path[-1].key if isinstance(path[-1], DictKey) else None
+        if name in _KEEP_F32 or not jnp.issubdtype(w.dtype, jnp.floating):
+            return w
+        return w.astype(cdt)
+    return jax.tree_util.tree_map_with_path(cast, bp)
+
+
+def _apply_block(cfg: ArchConfig, kind, bp, x, cos_sin, mode, cache=None,
+                 pos=None, enc=None, causal: bool = True):
+    mixer, ffn = kind
+    bp = _cast_block(bp, _dtype(cfg.compute_dtype))
+    new_cache: Dict[str, Any] = {}
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    akw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+               head_dim=cfg.head_dim, qk_norm=cfg.qk_norm,
+               norm_eps=cfg.norm_eps)
+    if mixer == "attn":
+        if mode == "train":
+            out = L.attn_train(bp["mixer"], h, causal=causal,
+                               cos_sin=cos_sin,
+                               sliding_window=cfg.sliding_window,
+                               attn_chunk=cfg.attn_chunk,
+                               chunk_unroll=cfg.scan_unroll, **akw)
+        elif mode == "prefill":
+            out, nc = L.attn_prefill(bp["mixer"], h, cache["self"],
+                                     cos_sin=cos_sin,
+                                     sliding_window=cfg.sliding_window,
+                                     attn_chunk=cfg.attn_chunk,
+                                     chunk_unroll=cfg.scan_unroll, **akw)
+            new_cache["self"] = nc
+        else:
+            out, nc = L.attn_decode(bp["mixer"], h, cache["self"], pos,
+                                    cos_sin=cos_sin, **akw)
+            new_cache["self"] = nc
+        x = _pin(x + out.astype(x.dtype))
+        if "xattn" in bp:
+            hx = L.rms_norm(x, bp["lnx"], cfg.norm_eps)
+            if mode == "decode":
+                out = L.xattn_decode(bp["xattn"], hx, cache["cross"],
+                                     n_heads=cfg.n_heads,
+                                     n_kv_heads=cfg.n_kv_heads,
+                                     head_dim=cfg.head_dim)
+                new_cache["cross"] = cache["cross"]
+            else:
+                out = L.attn_train(bp["xattn"], hx, causal=False,
+                                   cos_sin=None, x_kv=enc, **akw)
+                if mode == "prefill":
+                    new_cache["cross"] = L.xattn_make_cache(
+                        bp["xattn"], enc, n_kv_heads=cfg.n_kv_heads,
+                        head_dim=cfg.head_dim, dtype=cache["cross"]["k"].dtype)
+            x = _pin(x + out.astype(x.dtype))
+    else:  # mamba
+        mkw = dict(n_heads=cfg.ssm_heads, head_dim=cfg.ssm_head_dim,
+                   ssm_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+                   norm_eps=cfg.norm_eps, unroll=cfg.scan_unroll)
+        if mode == "train":
+            out, _ = mamba2_mixer(bp["mixer"], h, **mkw)
+        elif mode == "prefill":
+            out, nc = mamba2_mixer(bp["mixer"], h, return_cache=True, **mkw)
+            new_cache = nc
+        else:
+            out, nc = mamba2_mixer(bp["mixer"], h, cache=cache, **mkw)
+            new_cache = nc
+        x = _pin(x + out.astype(x.dtype))
+
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h2 = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if ffn == "mlp":
+            out = L.mlp(bp["ffn"], h2, act=cfg.act)
+        elif cfg.moe_aux_weight and mode == "train":
+            out, aux = moe_ffn(bp["ffn"], h2, n_experts=cfg.n_experts,
+                               top_k=cfg.top_k, act=cfg.act,
+                               capacity_factor=cfg.moe_capacity_factor,
+                               return_aux=True)
+        else:
+            out = moe_ffn(bp["ffn"], h2, n_experts=cfg.n_experts,
+                          top_k=cfg.top_k, act=cfg.act,
+                          capacity_factor=cfg.moe_capacity_factor)
+        x = _pin(x + out.astype(x.dtype))
+    return x, new_cache, aux
+
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _tree_slice(tree, g):
+    return jax.tree.map(lambda a: a[g], tree)
+
+
+def _run_stack_unrolled(cfg: ArchConfig, blocks: List, x, *, kinds, mode,
+                        cos_sin=None, caches=None, pos=None, enc=None,
+                        remat: bool = False, causal: bool = True):
+    """Python-unrolled twin of ``_run_stack`` (cfg.scan_unroll=True).
+
+    Used by the dry-run: XLA's cost_analysis counts a while-loop body once
+    regardless of trip count, so honest roofline FLOPs/bytes/collective
+    numbers need the layer loop unrolled in the HLO.  Semantically
+    identical to the scan path (tested)."""
+    p = len(blocks)
+    G = jax.tree.leaves(blocks[0])[0].shape[0]
+    new_caches = [[] for _ in range(p)] if caches is not None else None
+
+    def group_body(x, bps, cs):
+        ncs = []
+        aux = jnp.zeros((), jnp.float32)
+        for j in range(p):
+            x, nc, a = _apply_block(cfg, kinds[j], bps[j], x, cos_sin, mode,
+                                    cache=None if cs is None else cs[j],
+                                    pos=pos, enc=enc, causal=causal)
+            ncs.append(nc)
+            aux = aux + a
+        return x, ncs, aux
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for g in range(G):
+        bps = [_tree_slice(blocks[j], g) for j in range(p)]
+        cs = (None if caches is None
+              else [_tree_slice(caches[j], g) for j in range(p)])
+        if remat and caches is None:
+            x, ncs, aux = _remat(cfg,
+                                 lambda x_, bps_: group_body(x_, bps_, None)
+                                 )(x, bps)
+        else:
+            x, ncs, aux = group_body(x, bps, cs)
+        aux_total = aux_total + aux
+        if new_caches is not None:
+            for j in range(p):
+                new_caches[j].append(ncs[j])
+    if new_caches is not None:
+        new_caches = [jax.tree.map(lambda *xs: jnp.stack(xs), *nc)
+                      for nc in new_caches]
+    return x, new_caches, aux_total
+
+
+def _run_stack(cfg: ArchConfig, blocks: List, x, *, kinds, mode,
+               cos_sin=None, caches=None, pos=None, enc=None,
+               remat: bool = False, causal: bool = True):
+    """Scan over layer groups; ``blocks``/``caches`` are lists over the
+    pattern period, each leaf stacked (G, ...)."""
+    if cfg.scan_unroll:
+        return _run_stack_unrolled(cfg, blocks, x, kinds=kinds, mode=mode,
+                                   cos_sin=cos_sin, caches=caches, pos=pos,
+                                   enc=enc, remat=remat, causal=causal)
+    p = len(blocks)
+
+    if caches is None:
+        def body(carry, bps):
+            x_, aux_ = carry
+            for j in range(p):
+                x_, _, a = _apply_block(cfg, kinds[j], bps[j], x_,
+                                        cos_sin, mode, enc=enc,
+                                        causal=causal)
+                aux_ = aux_ + a
+            return (x_, aux_), None
+        body_fn = _remat(cfg, body) if remat else body
+        (x, aux), _ = jax.lax.scan(body_fn,
+                                   (x, jnp.zeros((), jnp.float32)),
+                                   tuple(blocks))
+        return x, None, aux
+
+    def body(carry, xs):
+        bps, cs = xs
+        ncs = []
+        for j in range(p):
+            carry, nc, _ = _apply_block(cfg, kinds[j], bps[j], carry,
+                                        cos_sin, mode, cache=cs[j],
+                                        pos=pos, enc=enc)
+            ncs.append(nc)
+        return carry, tuple(ncs)
+
+    x, new_caches = jax.lax.scan(body, x, (tuple(blocks), tuple(caches)))
+    return x, list(new_caches), jnp.zeros((), jnp.float32)
+
+
+def _encode(cfg: ArchConfig, params, audio_embeds, remat: bool):
+    cdt = _dtype(cfg.compute_dtype)
+    enc = audio_embeds.astype(cdt)
+    enc = enc + L.sinusoidal_positions(enc.shape[1], cfg.d_model
+                                       ).astype(cdt)[None]
+    enc, _, _ = _run_stack(cfg, params["enc_blocks"], enc,
+                           kinds=[("attn", "mlp")], mode="train",
+                           cos_sin=None, remat=remat, causal=False)
+    return L.rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+
+
+def _embed_tokens(cfg, params, tokens, batch):
+    cdt = _dtype(cfg.compute_dtype)
+    # cast BEFORE the gather: the vocab-sharded take needs a cross-shard
+    # all-reduce, which otherwise rides at f32 (2x traffic) — §Perf iter.
+    x = jnp.take(params["embed"].astype(cdt), tokens, axis=0)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = jax.lax.dynamic_update_slice(
+            x, batch["patch_embeds"].astype(cdt), (0, 0, 0))
+    return _pin(x)
+
+
+def forward_hidden(cfg: ArchConfig, params, batch):
+    """Forward pass up to the final norm.
+
+    Returns ((B, S, d) hidden states, moe aux loss scalar)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed_tokens(cfg, params, tokens, batch)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    cos_sin = _rope(cfg, positions, batch.get("positions"))
+    enc = (_encode(cfg, params, batch["audio_embeds"], cfg.remat)
+           if cfg.family == "encdec" else None)
+    x, _, aux = _run_stack(cfg, params["blocks"], x,
+                           kinds=cfg.layer_kinds(), mode="train",
+                           cos_sin=cos_sin, enc=enc, remat=cfg.remat)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def forward_train(cfg: ArchConfig, params, batch):
+    """batch: tokens (B,S) [+ labels], optional positions (3,B,S) for
+    M-RoPE, patch_embeds (B,P,d) for VLM, audio_embeds (B,F,d) for encdec.
+    Returns logits (B, S, vocab_padded) in compute dtype."""
+    x, _ = forward_hidden(cfg, params, batch)
+    return x @ params["embed"].T.astype(x.dtype)
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    x, aux = forward_hidden(cfg, params, batch)
+    logits = (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:  # mask the padded vocab rows
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    if cfg.moe_aux_weight:  # Python gate: DCE'd entirely when disabled
+        loss = loss + cfg.moe_aux_weight * aux
+    return loss
+
+
+def loss_fn_blocked(cfg: ArchConfig, params, batch, n_blocks: int = 8):
+    """Vocab-blocked cross entropy (§Perf beyond-paper optimization).
+
+    Never materializes the (B, S, vocab) logits: scans vocab chunks with an
+    online logsumexp (running max + rescaled sum) and picks the gold logit
+    from whichever chunk holds the label.  Peak logits memory drops by
+    ``n_blocks``x — targets the memory-term bottleneck of big-vocab train
+    cells (command-r 256k, llama4 202k)."""
+    h, aux = forward_hidden(cfg, params, batch)
+    h = h.astype(jnp.float32)                                    # (B,S,d)
+    labels = batch["labels"]
+    vp = cfg.vocab_padded
+    assert vp % n_blocks == 0
+    vb = vp // n_blocks
+    embed = params["embed"]
+
+    def body(carry, i):
+        m, s, gold = carry
+        emb_c = jax.lax.dynamic_slice(embed, (i * vb, 0),
+                                      (vb, embed.shape[1]))
+        logits = h @ emb_c.T.astype(h.dtype)                    # (B,S,vb)
+        vocab_ids = i * vb + jnp.arange(vb)
+        logits = jnp.where((vocab_ids >= cfg.vocab)[None, None],
+                           -1e30, logits)
+        m_new = jnp.maximum(m, logits.max(-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(
+            logits - m_new[..., None]).sum(-1)
+        in_chunk = (labels >= i * vb) & (labels < (i + 1) * vb)
+        local = jnp.take_along_axis(
+            logits, jnp.clip(labels - i * vb, 0, vb - 1)[..., None],
+            axis=-1)[..., 0]
+        gold = jnp.where(in_chunk, local, gold)
+        return (m_new, s, gold), None
+
+    init = (jnp.full(labels.shape, -jnp.inf, jnp.float32),
+            jnp.zeros(labels.shape, jnp.float32),
+            jnp.zeros(labels.shape, jnp.float32))
+    (m, s, gold), _ = jax.lax.scan(
+        body, init, jnp.arange(n_blocks, dtype=jnp.int32),
+        unroll=n_blocks if cfg.scan_unroll else 1)
+    loss = jnp.mean(m + jnp.log(s) - gold)
+    if cfg.moe_aux_weight:
+        loss = loss + cfg.moe_aux_weight * aux
+    return loss
+
+
+def make_train_step(cfg: ArchConfig, *, base_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    vocab_blocks: int = 0):
+    """Returns step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``vocab_blocks > 0`` switches to the blocked cross entropy."""
+    sched = optim.get_schedule(cfg.lr_schedule)
+    lfn = (loss_fn if not vocab_blocks
+           else functools.partial(loss_fn_blocked, n_blocks=vocab_blocks))
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lfn(cfg, p, batch))(params)
+        lr = sched(opt_state.step + 1, base_lr=base_lr, warmup=warmup,
+                   total=total_steps)
+        params, opt_state, gnorm = optim.adamw_update(
+            params, grads, opt_state, lr=lr)
+        return params, opt_state, {"loss": loss, "lr": lr, "gnorm": gnorm}
+
+    return step
+
+
+# ==========================================================================
+# serving (prefill + decode)
+# ==========================================================================
+def cache_len(cfg: ArchConfig, max_len: int) -> int:
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, abstract: bool = False):
+    """Cache pytree: list over the pattern period, leaves stacked (G,...)."""
+    kinds = cfg.layer_kinds()
+    period = cfg.scan_period()
+    groups = cfg.n_layers // period
+    w = cache_len(cfg, max_len)
+    mk = (jax.ShapeDtypeStruct if abstract
+          else (lambda sh, dt: jnp.zeros(sh, dt)))
+    caches = []
+    for j in range(period):
+        mixer, _ = kinds[j]
+        if mixer == "attn":
+            c = {"self": {
+                "k": mk((groups, batch, w, cfg.n_kv_heads, cfg.head_dim),
+                        dtype),
+                "v": mk((groups, batch, w, cfg.n_kv_heads, cfg.head_dim),
+                        dtype)}}
+            if cfg.family == "encdec":
+                c["cross"] = {
+                    "k": mk((groups, batch, cfg.frontend_len,
+                             cfg.n_kv_heads, cfg.head_dim), dtype),
+                    "v": mk((groups, batch, cfg.frontend_len,
+                             cfg.n_kv_heads, cfg.head_dim), dtype)}
+        else:
+            c = {"conv": mk((groups, batch, cfg.ssm_conv - 1,
+                             cfg.d_inner + 2 * cfg.ssm_state), dtype),
+                 "ssm": mk((groups, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32)}
+        caches.append(c)
+    return caches
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, batch: int, max_len: int,
+                dtype=jnp.bfloat16, kv_shard: str = "hd"):
+    """(abstract cache, shardings).  SSM state shards heads; batch shards
+    the data axes (replicated when it cannot divide them, e.g. long_500k's
+    B=1).  K/V model-axis placement is selectable (§Perf):
+      * ``hd``  — shard head_dim (always divisible; contraction psum)
+      * ``seq`` — shard the cache sequence dim (balanced attention read;
+                  the decode write touches one shard per step)
+      * ``kv``  — shard the KV-head dim (pads 8 heads -> model width)
+      * ``none``— replicate over the model axis
+    """
+    da_t = tuple(a for a in mesh.axis_names if a != "model")
+    n_da = int(np.prod([mesh.shape[a] for a in da_t]))
+    da = da_t if len(da_t) > 1 else da_t[0]
+    if batch % n_da:
+        da = None
+    cache = init_cache(cfg, batch, max_len, dtype, abstract=True)
+    kv_spec = {"hd": P(None, da, None, None, "model"),
+               "seq": P(None, da, "model", None, None),
+               "kv": P(None, da, None, "model", None),
+               "none": P(None, da, None, None, None)}[kv_shard]
+
+    def rule(path, leaf):
+        names = [p.key for p in path if isinstance(p, DictKey)]
+        if names[-1] in ("k", "v"):
+            return kv_spec
+        if names[-1] == "conv":
+            return P(None, da, None, "model")
+        return P(None, da, "model", None, None)   # ssm state
+
+    specs = jax.tree_util.tree_map_with_path(rule, cache)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return cache, shardings
+
+
+def prefill(cfg: ArchConfig, params, batch, *, cache_dtype=jnp.bfloat16,
+            max_len: Optional[int] = None):
+    """Full-prefix forward + cache fill.  Returns (last logits (B,V), cache).
+
+    ``max_len`` sizes the cache (prefix + generation headroom); without a
+    sliding window the ring must never wrap, so callers decoding beyond the
+    prefix must pass prefix + max_new_tokens here."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed_tokens(cfg, params, tokens, batch)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    cos_sin = _rope(cfg, positions, batch.get("positions"))
+    enc = (_encode(cfg, params, batch["audio_embeds"], False)
+           if cfg.family == "encdec" else None)
+    caches = init_cache(cfg, b, max_len or s, cache_dtype)
+    x, caches, _ = _run_stack(cfg, params["blocks"], x,
+                              kinds=cfg.layer_kinds(), mode="prefill",
+                              cos_sin=cos_sin, caches=caches, enc=enc)
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T.astype(x.dtype))[:, 0]
+    return logits.astype(jnp.float32), caches
+
+
+def decode_step(cfg: ArchConfig, params, caches, token, pos,
+                mrope_pos=None):
+    """One decode step.  token (B,1) int32; pos scalar int32 (absolute).
+    Returns (logits (B, vocab) f32, new caches)."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"].astype(_dtype(cfg.compute_dtype)),
+                 token, axis=0)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    if cfg.mrope and mrope_pos is None:
+        mrope_pos = jnp.broadcast_to(pos[None, None, None], (3, b, 1))
+    cos_sin = _rope(cfg, positions, mrope_pos)
+    x, caches, _ = _run_stack(cfg, params["blocks"], x,
+                              kinds=cfg.layer_kinds(), mode="decode",
+                              cos_sin=cos_sin, caches=caches, pos=pos)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T.astype(x.dtype))[:, 0]
+    return logits.astype(jnp.float32), caches

@@ -1,0 +1,163 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked-scan training form
+plus the O(1)-per-token recurrent decode form.
+
+Follows the minimal SSD algorithm of Dao & Gu (arXiv:2405.21060): split the
+sequence into chunks; compute intra-chunk outputs with a masked
+attention-like quadratic form, carry inter-chunk state with a scan.  Both
+forms share parameters, so prefill can hand its final state to decode.
+
+Shapes (single group, g=1, as in mamba2-370m):
+  x (B, S, d_model); d_inner = expand*d_model; H heads of head_dim P;
+  state size N; dt (B, S, H); A (H,) negative; B_, C_ (B, S, N).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+def _segsum(x):
+    """Stable 'segment sum' producing the lower-triangular decay matrix.
+
+    x (..., L) -> (..., L, L) with out[i, j] = sum_{k in (j, i]} x[k] for
+    j < i, 0 on diagonal, -inf above."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, B_, C_, *, chunk: int,
+                unroll: bool = False):
+    """Chunked SSD scan.
+
+    xh (B, S, H, P); dt (B, S, H) (already softplus'd); A (H,) < 0;
+    B_, C_ (B, S, N).  Returns (y (B, S, H, P), final_state (B, H, P, N)).
+    """
+    b, s, h, p = xh.shape
+    n = B_.shape[-1]
+    pad = -s % chunk
+    if pad:  # dt=0 padding is state-neutral (decay exp(0)=1, zero update)
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    s_p = s + pad
+    c = s_p // chunk
+
+    # chunked views
+    xc = xh.reshape(b, c, chunk, h, p)
+    dtc = dt.reshape(b, c, chunk, h)
+    Bc = B_.reshape(b, c, chunk, n)
+    Cc = C_.reshape(b, c, chunk, n)
+
+    dA = dtc * A[None, None, None, :]                      # (b,c,l,h) ≤ 0
+    dA_cum = jnp.cumsum(dA, axis=2)                        # (b,c,l,h)
+
+    # 1. intra-chunk (the "duality": masked attention within a chunk)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, 2, 3)))           # (b,c,h,l,l)
+    att = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)            # (b,c,l,l)
+    scores = att[:, :, None, :, :] * L                     # (b,c,h,l,m)
+    xw = xc * dtc[..., None]                               # dt-weighted input
+    y_diag = jnp.einsum("bchlm,bcmhp->bclhp", scores, xw)
+
+    # 2. per-chunk final states
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc,
+                        decay_states * dtc, xc)            # (b,c,h,p,n)
+
+    # 3. inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # (b,c,h)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                      # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                  # emit PREVIOUS
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)  # state carried in f32
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)),
+        unroll=c if unroll else 1)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (b,c,h,p,n)
+
+    # 4. state -> output contribution
+    state_decay = jnp.exp(dA_cum)                          # (b,c,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states,
+                       state_decay)
+    y = (y_diag + y_off).reshape(b, s_p, h, p)[:, :s]
+    return y, final
+
+
+def _causal_conv(x, w, cache: Optional[jax.Array] = None,
+                 cache_pos=None) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Depthwise causal conv1d, kernel K.  x (B, S, C); w (K, C).
+
+    With ``cache`` (B, K-1, C): decode mode (S == 1), returns new cache.
+    """
+    k = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None]
+                  for i in range(k))
+        return out, None
+    ctx = jnp.concatenate([cache, x], axis=1)              # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", ctx, w)[:, None, :]
+    return out, ctx[:, 1:, :]
+
+
+def mamba2_mixer(params, x, *, n_heads: int, head_dim: int, ssm_state: int,
+                 chunk: int = 256, norm_eps: float = 1e-6,
+                 cache: Optional[dict] = None, cache_pos=None,
+                 return_cache: bool = False, unroll: bool = False):
+    """Mamba-2 block mixer.  params:
+      in_proj (d, 2*di + 2*N + H), conv_w (K, di + 2*N), A_log (H,),
+      D (H,), dt_bias (H,), gate_norm (di,), out_proj (di, d).
+
+    cache (decode): {"conv": (B, K-1, di+2N), "ssm": (B, H, P, N)}.
+    Returns (y (B,S,d), new_cache | None).
+    """
+    b, s, d = x.shape
+    di = n_heads * head_dim
+    n = ssm_state
+
+    zxbcdt = x @ params["in_proj"]                         # (B,S,2di+2N+H)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])           # (B,S,H)
+
+    conv_cache = cache["conv"] if cache is not None else None
+    xbc_raw = xbc  # pre-conv stream (its tail seeds the decode conv cache)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], conv_cache)
+    xbc = jax.nn.silu(xbc)
+    xs, B_, C_ = jnp.split(xbc, [di, di + n], axis=-1)
+    xh = xs.reshape(b, s, n_heads, head_dim)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))      # (H,) < 0
+
+    if cache is None:
+        y, final = ssd_chunked(xh, dt, A, B_, C_, chunk=chunk,
+                               unroll=unroll)
+        new_cache = None
+        if return_cache:  # prefill: hand the final state to decode
+            k = params["conv_w"].shape[0]
+            new_cache = {"conv": xbc_raw[:, -(k - 1):, :], "ssm": final}
+    else:
+        # recurrent decode: h' = exp(dt*A) h + dt * B ⊗ x ; y = C·h
+        h_prev = cache["ssm"]                              # (B,H,P,N)
+        dA = jnp.exp(dt[:, 0, :] * A[None, :])             # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0], B_[:, 0])
+        h_new = h_prev * dA[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", C_[:, 0], h_new)[:, None]
+        y = y.reshape(b, 1, n_heads, head_dim)
+        final = h_new
+        new_cache = {"conv": new_conv, "ssm": h_new}
+
+    y = y + xh * params["D"][None, None, :, None]          # skip connection
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], norm_eps)
+    return y @ params["out_proj"], new_cache

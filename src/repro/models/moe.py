@@ -1,0 +1,90 @@
+"""Mixture-of-Experts layer (Mixtral / Llama-4 / Jamba style).
+
+Token→expert dispatch is the transformer-side transfer of the paper's core
+primitive: routing tokens to per-expert buffers is the same
+irregular-scatter-to-small-structures problem as histogram binning
+(group-by-expert ≙ group-by-field; see DESIGN.md §5).  At LM token counts a
+materialized one-hot would not fit, so the production layer uses the
+capacity-buffer scatter/gather formulation (GShard-style); the one-hot
+contraction form lives in ``repro.kernels.ops.onehot_matmul`` and is what
+the Pallas histogram kernel applies at VMEM-block granularity.
+
+Expert placement rule (see configs): expert-parallel over the "model" mesh
+axis when n_experts divides it, otherwise tensor-parallel inside each
+expert (small expert counts, e.g. Mixtral's 8 on a 16-wide axis).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import mlp
+
+
+def moe_ffn(params, x, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25, act: str = "silu",
+            router_dtype=jnp.float32, return_aux: bool = False):
+    """params: router (d, E), w_in/w_gate (E, d, ff), w_out (E, ff, d),
+    optional shared_* (plain MLP applied to every token).
+
+    x: (B, S, d) -> (B, S, d).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(router_dtype)
+              @ params["router"].astype(router_dtype))          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)                  # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(int(t * top_k * capacity_factor / n_experts), 4)
+
+    e_flat = top_e.reshape(-1)                                  # (T*k,)
+    w_flat = top_p.reshape(-1)
+    # position-in-expert via a cumulative count over dispatch order
+    oh = jax.nn.one_hot(e_flat, n_experts, dtype=jnp.int32)     # (T*k, E)
+    pos_flat = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - oh,
+                                   e_flat[:, None], axis=1)[:, 0]
+    keep = pos_flat < capacity
+    pos_c = jnp.minimum(pos_flat, capacity - 1)
+
+    tok_idx = jnp.repeat(jnp.arange(t), top_k)
+    # dispatch: scatter tokens into (E, C, d) expert buffers
+    buf = jnp.zeros((n_experts, capacity, d), x.dtype)
+    buf = buf.at[e_flat, pos_c].add(
+        xf[tok_idx] * keep[:, None].astype(x.dtype))
+
+    hidden = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, params["w_in"]) \
+        if "w_gate" in params else \
+        jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_in"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", hidden, params["w_out"])
+
+    # combine: gather each token's expert outputs, weight, and sum over k
+    y_flat = out_buf[e_flat, pos_c] * (w_flat * keep)[:, None].astype(x.dtype)
+    y = jax.ops.segment_sum(y_flat, tok_idx, num_segments=t)
+
+    if "shared_w_in" in params:
+        shared = {k[len("shared_"):]: v for k, v in params.items()
+                  if k.startswith("shared_")}
+        y = y + mlp(shared, xf, act=act)
+    y = y.reshape(b, s, d)
+    if return_aux:
+        return y, moe_aux_loss(logits, top_e, n_experts)
+    return y
+
+
+def moe_aux_loss(logits, top_e, n_experts: int):
+    """Load-balancing auxiliary loss (Switch-style): E * sum(f_i * p_i),
+    where f_i is the fraction of tokens whose top-1 pick is expert i and
+    p_i the mean router probability of expert i.  Minimized (=1) at a
+    perfectly uniform load."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    me = probs.mean(0)
+    oh = jax.nn.one_hot(top_e[:, 0], n_experts, dtype=jnp.float32)
+    ce = oh.mean(0)
+    return n_experts * jnp.sum(me * ce)

@@ -1,0 +1,85 @@
+"""AdamW + LR schedules (cosine and MiniCPM's WSD) on raw pytrees.
+
+m/v moments are f32 regardless of the parameter dtype; under the FSDP
+partition rules the moments inherit the parameter sharding (ZeRO-style:
+with ``fsdp=True`` params are already spread over the data axes, so
+optimizer state is too).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, grad_clip: float = 1.0):
+    """Returns (new_params, new_state, grad_norm)."""
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = jax.tree_util.tree_flatten(state.m)[0]
+    flat_v = jax.tree_util.tree_flatten(state.v)[0]
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5
+                     * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, base_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, min_ratio: float = 0.01):
+    """MiniCPM's Warmup-Stable-Decay: linear warmup, long flat stage, short
+    exponential-ish decay tail (arXiv:2404.06395 §4)."""
+    step = step.astype(jnp.float32)
+    decay_start = total * (1.0 - decay_frac)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1),
+                 0.0, 1.0)
+    decay = base_lr * (min_ratio ** t)
+    lr = jnp.where(step < warmup, warm,
+                   jnp.where(step < decay_start, base_lr, decay))
+    return lr
+
+
+def get_schedule(name: str):
+    return {"cosine": cosine_schedule, "wsd": wsd_schedule}[name]

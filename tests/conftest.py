@@ -1,0 +1,8 @@
+import os
+import sys
+
+# smoke tests and benches must see the default single CPU device; only the
+# dry-run launcher (a separate process) forces 512 placeholder devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

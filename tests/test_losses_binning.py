@@ -1,0 +1,60 @@
+"""Losses (g/h vs autodiff) and quantile binning."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import LOSSES, get_loss
+from repro.core.binning import Binner, bin_dataset
+
+
+@pytest.mark.parametrize("name", list(LOSSES))
+def test_grad_hess_match_autodiff(name):
+    loss = get_loss(name)
+    rng = np.random.default_rng(0)
+    m = jnp.asarray(rng.normal(size=64), jnp.float32)
+    y = jnp.asarray((rng.uniform(size=64) > .5).astype(np.float64)
+                    if name == "binary:logistic"
+                    else rng.normal(size=64), jnp.float32)
+    g, h = loss.grad_hess(m, y)
+    g_ad = jax.vmap(jax.grad(loss.value))(m, y)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ad),
+                               rtol=1e-5, atol=1e-6)
+    if name != "reg:huber":  # huber hessian is a smoothed surrogate
+        h_ad = jax.vmap(jax.grad(jax.grad(loss.value)))(m, y)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ad),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_binning_roundtrip_order_preserved():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(5000, 3))
+    data = bin_dataset(X, max_bins=32)
+    codes = np.asarray(data.codes)
+    for f in range(3):
+        order = np.argsort(X[:, f], kind="stable")
+        assert (np.diff(codes[order, f].astype(int)) >= 0).all()
+
+
+def test_binning_missing_and_categorical():
+    X = np.array([[1.0, 2.0], [np.nan, 0.0], [3.0, 1.0], [2.0, np.nan]])
+    data = bin_dataset(X, max_bins=16, categorical_fields=[1])
+    codes = np.asarray(data.codes)
+    assert codes[1, 0] == data.missing_bin
+    assert codes[3, 1] == data.missing_bin
+    assert codes[0, 1] == 2 and codes[1, 1] == 0 and codes[2, 1] == 1
+    assert bool(data.is_categorical[1]) and not bool(data.is_categorical[0])
+
+
+def test_binning_rejects_too_many_categories():
+    X = np.arange(600, dtype=np.float64).reshape(-1, 1)
+    with pytest.raises(ValueError):
+        Binner(max_bins=16, categorical_fields=[0]).fit(X)
+
+
+def test_column_major_copy_is_consistent():
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(100, 5))
+    data = bin_dataset(X, max_bins=8)
+    np.testing.assert_array_equal(np.asarray(data.codes).T,
+                                  np.asarray(data.codes_cm))

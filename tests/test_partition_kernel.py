@@ -1,0 +1,54 @@
+"""Step-③ partition kernel vs oracle + structural properties."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _case(rng, n, nn, n_cols, n_bins):
+    node_ids = jnp.asarray(rng.integers(0, nn, n), jnp.int32)
+    codes = jnp.asarray(rng.integers(0, n_bins, (n, n_cols)), jnp.uint8)
+    sf = jnp.asarray(rng.integers(-1, n_cols, nn), jnp.int32)
+    st = jnp.asarray(rng.integers(0, n_bins - 1, nn), jnp.int32)
+    sc = jnp.asarray(rng.integers(0, 2, nn), jnp.int32)
+    sd = jnp.asarray(rng.integers(0, 2, nn), jnp.int32)
+    return node_ids, codes, sf, st, sc, sd
+
+
+@pytest.mark.parametrize("n,nn,n_cols,n_bins", [
+    (64, 1, 1, 4), (511, 4, 4, 16), (1025, 16, 16, 32)])
+def test_partition_matches_oracle(n, nn, n_cols, n_bins):
+    rng = np.random.default_rng(n + nn)
+    args = _case(rng, n, nn, n_cols, n_bins)
+    want = ref.partition_ref(*args, n_bins - 1)
+    got = ops.partition_level(*args, missing_bin=n_bins - 1,
+                              strategy="pallas")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_children_are_consistent():
+    """Child ids land in [2*node, 2*node+1] — left ⊎ right partitions the
+    node's records (the paper's predicate-true/false streams)."""
+    rng = np.random.default_rng(7)
+    node_ids, codes, sf, st, sc, sd = _case(rng, 2048, 8, 8, 16)
+    child = ops.partition_level(node_ids, codes, sf, st, sc, sd,
+                                missing_bin=15, strategy="pallas")
+    child = np.asarray(child)
+    parent = np.asarray(node_ids)
+    assert ((child == 2 * parent) | (child == 2 * parent + 1)).all()
+    # record counts conserved per parent
+    for j in range(8):
+        assert (parent == j).sum() == ((child == 2 * j).sum()
+                                       + (child == 2 * j + 1).sum())
+
+
+def test_passthrough_goes_left():
+    node_ids = jnp.zeros((16,), jnp.int32)
+    codes = jnp.asarray(np.random.default_rng(0).integers(0, 4, (16, 2)),
+                        jnp.uint8)
+    child = ops.partition_level(
+        node_ids, codes, jnp.asarray([-1], jnp.int32),
+        jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
+        jnp.zeros((1,), jnp.int32), missing_bin=3, strategy="pallas")
+    assert (np.asarray(child) == 0).all()

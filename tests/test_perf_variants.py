@@ -1,0 +1,111 @@
+"""§Perf optimization variants must be semantics-preserving (tested)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import lm
+from repro.models.layers import sdpa, sdpa_chunked
+
+
+@pytest.mark.parametrize("case", [
+    dict(b=2, sq=16, sk=16, h=4, kv=2, d=8, causal=True, win=None, chunk=8),
+    dict(b=1, sq=32, sk=32, h=4, kv=4, d=16, causal=True, win=12, chunk=8),
+    dict(b=2, sq=8, sk=24, h=2, kv=1, d=8, causal=False, win=None, chunk=7),
+])
+def test_flash_attention_matches_dense(case):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(case["b"], case["sq"], case["h"],
+                                     case["d"])), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(case["b"], case["sk"], case["kv"],
+                                     case["d"])), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(case["b"], case["sk"], case["kv"],
+                                     case["d"])), jnp.float32)
+    a = sdpa(q, k, v, causal=case["causal"], sliding_window=case["win"])
+    c = sdpa_chunked(q, k, v, causal=case["causal"],
+                     sliding_window=case["win"], kv_chunk=case["chunk"])
+    np.testing.assert_allclose(np.asarray(c), np.asarray(a),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_xent_matches_dense():
+    cfg = get_smoke("command-r-35b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)),
+                                   jnp.int32)}
+    a = float(lm.loss_fn(cfg, params, batch))
+    b = float(lm.loss_fn_blocked(cfg, params, batch, n_blocks=8))
+    assert abs(a - b) < 1e-4
+    ga = jax.grad(lambda p: lm.loss_fn(cfg, p, batch))(params)
+    gb = jax.grad(lambda p: lm.loss_fn_blocked(cfg, p, batch,
+                                               n_blocks=8))(params)
+    for la, lb in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=2e-3, atol=1e-5)
+
+
+def test_flash_attn_config_preserves_forward():
+    for aid in ("qwen3-14b", "mixtral-8x22b"):
+        cfg = get_smoke(aid)
+        cfg_f = dataclasses.replace(cfg, attn_chunk=8)
+        params = lm.init_params(cfg, jax.random.PRNGKey(1))
+        rng = np.random.default_rng(1)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)),
+                                       jnp.int32)}
+        a = lm.forward_train(cfg, params, batch)
+        b = lm.forward_train(cfg_f, params, batch)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.slow
+def test_explicit_distributed_tree_variants_match_reference():
+    """Explicit shard_map schedule, bf16 histogram psum and owner-evaluates
+    partition all grow the reference tree."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env["PYTHONPATH"] = str(root / "src")
+    code = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import fit_tree
+from repro.distributed.sharding import distributed_fit_tree
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
+rng = np.random.default_rng(0)
+codes = jnp.asarray(rng.integers(0, 16, (4096, 8)), jnp.uint8)
+codes_cm = jnp.asarray(np.asarray(codes).T.copy())
+g = jnp.asarray(rng.normal(size=4096), jnp.float32)
+h = jnp.asarray(rng.uniform(.1, 1, 4096), jnp.float32)
+kw = dict(depth=4, n_bins=16, missing_bin=15,
+          is_cat_field=jnp.zeros((8,), bool),
+          field_mask=jnp.ones((8,), bool), lambda_=1.0, gamma=0.0,
+          min_child_weight=1.0)
+ref = fit_tree(codes, codes_cm, g, h, hist_strategy="scatter",
+               partition_strategy="reference", **kw)
+for bits in (False, True):
+    for hd in (None, jnp.bfloat16):
+        with mesh:
+            t = distributed_fit_tree(mesh, codes, codes_cm, g, h,
+                                     hist_strategy="scatter",
+                                     hist_dtype=hd, partition_bits=bits,
+                                     **kw)
+        for a, b in zip(t, ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-4)
+print("VARIANTS_OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "VARIANTS_OK" in out.stdout

@@ -1,0 +1,106 @@
+"""Hypothesis property tests on the system's core invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.splits import find_best_splits
+from repro.kernels import ops, ref
+from repro.kernels.ref import TreeArrays
+
+_shapes = st.tuples(
+    st.integers(min_value=1, max_value=400),   # n records
+    st.integers(min_value=1, max_value=9),     # fields
+    st.integers(min_value=2, max_value=16),    # bins
+    st.integers(min_value=1, max_value=4),     # nodes
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_shapes, st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(["scatter", "sort", "onehot", "pallas_grouped"]))
+def test_histogram_equivalence_property(shape, seed, strategy):
+    n, F, NB, NN = shape
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, NB, (n, F)), jnp.uint8)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    h = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+    nid = jnp.asarray(rng.integers(0, NN, n), jnp.int32)
+    want = ref.histogram_ref(codes, g, h, nid, NN, NB)
+    got = ops.build_histogram(codes, g, h, nid, n_nodes=NN, n_bins=NB,
+                              strategy=strategy)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 500), st.integers(0, 2 ** 31 - 1))
+def test_histogram_permutation_invariance(n, seed):
+    """Histogram is a sum — any record permutation yields the same result."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 8, (n, 3)).astype(np.uint8)
+    g = rng.normal(size=n).astype(np.float32)
+    h = rng.uniform(0, 1, n).astype(np.float32)
+    nid = rng.integers(0, 2, n).astype(np.int32)
+    perm = rng.permutation(n)
+    a = ops.build_histogram(jnp.asarray(codes), jnp.asarray(g),
+                            jnp.asarray(h), jnp.asarray(nid),
+                            n_nodes=2, n_bins=8, strategy="scatter")
+    b = ops.build_histogram(jnp.asarray(codes[perm]), jnp.asarray(g[perm]),
+                            jnp.asarray(h[perm]), jnp.asarray(nid[perm]),
+                            n_nodes=2, n_bins=8, strategy="scatter")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+def test_split_gain_nonneg_additivity(n_bins, seed):
+    """Children gradient sums reconstruct the parent (hist subtraction
+    trick soundness): GL + GR == Gp for the chosen split."""
+    rng = np.random.default_rng(seed)
+    hist = np.abs(rng.normal(size=(1, 2, n_bins, 2))).astype(np.float32)
+    hist[..., :] = hist[:, :1]
+    d = find_best_splits(jnp.asarray(hist), jnp.zeros((2,), bool),
+                         jnp.ones((2,), bool), 1.0, 0.0, 0.0)
+    f, t = int(d.feature[0]), int(d.threshold[0])
+    Gp = hist[0, f, :, 0].sum()
+    GL = hist[0, f, : t + 1, 0].sum() + (hist[0, f, -1, 0]
+                                         if int(d.default_left[0]) else 0.0)
+    GR = Gp - GL
+    np.testing.assert_allclose(GL + GR, Gp, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
+def test_traversal_reaches_valid_leaf(depth, n, seed):
+    rng = np.random.default_rng(seed)
+    n_int, n_leaf = 2 ** depth - 1, 2 ** depth
+    n_cols, n_bins = 4, 8
+    feat = rng.integers(-1, n_cols, n_int).astype(np.int32)
+    tree = TreeArrays(
+        feature=jnp.asarray(feat),
+        threshold=jnp.asarray(rng.integers(0, n_bins - 1, n_int), jnp.int32),
+        is_cat=jnp.asarray(rng.integers(0, 2, n_int), jnp.int32),
+        default_left=jnp.asarray(rng.integers(0, 2, n_int), jnp.int32),
+        leaf_value=jnp.asarray(np.arange(n_leaf, dtype=np.float32)))
+    codes = jnp.asarray(rng.integers(0, n_bins, (n, n_cols)), jnp.uint8)
+    out = np.asarray(ref.traverse_ref(tree, codes, n_bins - 1))
+    assert ((out >= 0) & (out <= n_leaf - 1)).all()
+    got = np.asarray(ops.traverse_tree(tree, codes, missing_bin=n_bins - 1,
+                                       strategy="pallas"))
+    np.testing.assert_allclose(got, out, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 400), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_partition_conserves_records(n, nn, seed):
+    rng = np.random.default_rng(seed)
+    node_ids = jnp.asarray(rng.integers(0, nn, n), jnp.int32)
+    codes = jnp.asarray(rng.integers(0, 8, (n, nn)), jnp.uint8)
+    sf = jnp.asarray(rng.integers(-1, nn, nn), jnp.int32)
+    st_ = jnp.asarray(rng.integers(0, 7, nn), jnp.int32)
+    sc = jnp.asarray(rng.integers(0, 2, nn), jnp.int32)
+    sd = jnp.asarray(rng.integers(0, 2, nn), jnp.int32)
+    child = np.asarray(ref.partition_ref(node_ids, codes, sf, st_, sc, sd, 7))
+    parent = np.asarray(node_ids)
+    assert (child // 2 == parent).all()

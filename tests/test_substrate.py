@@ -1,0 +1,93 @@
+"""Remaining substrate: LR schedules, prefetch pipeline, mesh helpers,
+dataset specs."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.data.pipeline import PrefetchIterator, record_shards, token_batches
+from repro.data.synthetic import PAPER_DATASETS, paper_dataset
+from repro.launch.mesh import data_axes, make_mesh, n_data_shards
+from repro.models.optim import (adamw_init, adamw_update, cosine_schedule,
+                                get_schedule, wsd_schedule)
+
+
+def test_cosine_schedule_shape():
+    lr0 = float(cosine_schedule(jnp.asarray(0.0), base_lr=1.0, warmup=10,
+                                total=100))
+    lr_w = float(cosine_schedule(jnp.asarray(10.0), base_lr=1.0, warmup=10,
+                                 total=100))
+    lr_end = float(cosine_schedule(jnp.asarray(100.0), base_lr=1.0,
+                                   warmup=10, total=100))
+    assert lr0 == 0.0 and abs(lr_w - 1.0) < 1e-6
+    assert abs(lr_end - 0.1) < 1e-6  # min_ratio floor
+
+
+def test_wsd_schedule_three_phases():
+    """MiniCPM WSD: warmup ramp, long flat stage, sharp decay tail."""
+    f = lambda s: float(wsd_schedule(jnp.asarray(float(s)), base_lr=1.0,
+                                     warmup=10, total=1000))
+    assert f(5) < 1.0                         # warming up
+    assert abs(f(500) - 1.0) < 1e-6           # stable plateau
+    assert abs(f(899) - 1.0) < 1e-6           # still stable at 90%
+    assert f(950) < 0.5                       # decaying
+    assert f(1000) < 0.02                     # near min at the end
+    assert get_schedule("wsd") is wsd_schedule
+
+
+def test_adamw_moves_toward_gradient():
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.ones((4,))}
+    state = adamw_init(params)
+    p2, s2, gnorm = adamw_update(params, grads, state, lr=0.1,
+                                 weight_decay=0.0)
+    assert float(gnorm) == 2.0
+    assert (np.asarray(p2["w"]) < 1.0).all()
+    assert int(s2.step) == 1
+
+
+def test_prefetch_iterator_preserves_order_and_errors():
+    rng = np.random.default_rng(0)
+    batches = list(token_batches(rng, vocab=100, batch=2, seq=8,
+                                 n_batches=5))
+    out = list(PrefetchIterator(iter(batches), depth=2))
+    assert len(out) == 5
+    for a, b in zip(batches, out):
+        np.testing.assert_array_equal(a["tokens"], np.asarray(b["tokens"]))
+
+    def boom():
+        yield batches[0]
+        raise RuntimeError("stream died")
+
+    it = PrefetchIterator(boom(), depth=1)
+    next(it)
+    try:
+        next(it)
+        raise AssertionError("expected the stream error to surface")
+    except RuntimeError as e:
+        assert "stream died" in str(e)
+
+
+def test_record_shards_cover_dataset():
+    codes = np.arange(20).reshape(10, 2).astype(np.uint8)
+    g = np.arange(10.0)
+    h = np.ones(10)
+    shards = list(record_shards(codes, g, h, shard_size=4))
+    assert [s["codes"].shape[0] for s in shards] == [4, 4, 2]
+    np.testing.assert_array_equal(
+        np.concatenate([s["g"] for s in shards]), g)
+
+
+def test_mesh_helpers():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    assert data_axes(mesh) == ("data",)
+    assert n_data_shards(mesh) == 1
+
+
+def test_paper_dataset_specs_match_table_iii():
+    assert set(PAPER_DATASETS) == {"iot", "higgs", "allstate", "mq2008",
+                                   "flight"}
+    assert PAPER_DATASETS["higgs"].n_numeric == 28
+    assert PAPER_DATASETS["allstate"].n_categorical == 16
+    assert PAPER_DATASETS["flight"].n_categorical == 7
+    X, y, cats, spec = paper_dataset("allstate", n_override=100)
+    assert X.shape == (100, 32) and len(cats) == 16
+    assert np.isnan(X).any()  # missing values present

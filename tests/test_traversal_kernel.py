@@ -1,0 +1,79 @@
+"""Step-⑤ traversal + batch-inference kernels vs the gather-walk oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.ref import TreeArrays
+
+
+def rand_tree(rng, depth, n_cols, n_bins, p_passthrough=0.2):
+    n_int, n_leaf = 2 ** depth - 1, 2 ** depth
+    feat = rng.integers(0, n_cols, n_int).astype(np.int32)
+    feat[rng.uniform(size=n_int) < p_passthrough] = -1
+    return TreeArrays(
+        feature=jnp.asarray(feat),
+        threshold=jnp.asarray(rng.integers(0, n_bins - 1, n_int), jnp.int32),
+        is_cat=jnp.asarray(rng.integers(0, 2, n_int), jnp.int32),
+        default_left=jnp.asarray(rng.integers(0, 2, n_int), jnp.int32),
+        leaf_value=jnp.asarray(rng.normal(size=n_leaf), jnp.float32))
+
+
+@pytest.mark.parametrize("depth", [1, 3, 6])
+@pytest.mark.parametrize("n,n_cols,n_bins", [
+    (64, 4, 8), (513, 7, 16), (1025, 63, 32)])
+def test_traverse_matches_oracle(depth, n, n_cols, n_bins):
+    rng = np.random.default_rng(depth * 100 + n)
+    codes = jnp.asarray(rng.integers(0, n_bins, (n, n_cols)), jnp.uint8)
+    tree = rand_tree(rng, depth, n_cols, n_bins)
+    want = ref.traverse_ref(tree, codes, n_bins - 1)
+    got = ops.traverse_tree(tree, codes, missing_bin=n_bins - 1,
+                            strategy="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("T", [1, 5, 17])
+def test_ensemble_matches_oracle(T):
+    rng = np.random.default_rng(T)
+    depth, n_cols, n_bins, n = 4, 9, 16, 300
+    codes = jnp.asarray(rng.integers(0, n_bins, (n, n_cols)), jnp.uint8)
+    trees = TreeArrays(*[jnp.stack(x) for x in zip(
+        *[tuple(rand_tree(rng, depth, n_cols, n_bins)) for _ in range(T)])])
+    want = ref.predict_ensemble_ref(trees, codes, n_bins - 1)
+    got = ops.predict_ensemble(trees, codes, missing_bin=n_bins - 1,
+                               depth=depth, strategy="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_missing_values_follow_default_direction():
+    rng = np.random.default_rng(0)
+    n_bins = 8
+    tree = TreeArrays(
+        feature=jnp.asarray([0], jnp.int32),
+        threshold=jnp.asarray([3], jnp.int32),
+        is_cat=jnp.asarray([0], jnp.int32),
+        default_left=jnp.asarray([1], jnp.int32),
+        leaf_value=jnp.asarray([10.0, 20.0], jnp.float32))
+    codes = jnp.asarray([[n_bins - 1]], jnp.uint8)  # missing
+    out = ops.traverse_tree(tree, codes, missing_bin=n_bins - 1,
+                            strategy="pallas")
+    assert float(out[0]) == 10.0  # default_left -> left leaf
+    tree2 = tree._replace(default_left=jnp.asarray([0], jnp.int32))
+    out2 = ops.traverse_tree(tree2, codes, missing_bin=n_bins - 1,
+                             strategy="pallas")
+    assert float(out2[0]) == 20.0
+
+
+def test_categorical_one_vs_rest():
+    n_bins = 8
+    tree = TreeArrays(
+        feature=jnp.asarray([0], jnp.int32),
+        threshold=jnp.asarray([5], jnp.int32),   # category == 5 -> left
+        is_cat=jnp.asarray([1], jnp.int32),
+        default_left=jnp.asarray([0], jnp.int32),
+        leaf_value=jnp.asarray([1.0, -1.0], jnp.float32))
+    codes = jnp.asarray([[5], [2], [6]], jnp.uint8)
+    out = ops.traverse_tree(tree, codes, missing_bin=n_bins - 1,
+                            strategy="pallas")
+    np.testing.assert_allclose(np.asarray(out), [1.0, -1.0, -1.0])

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, hist_plan
 from repro.core import bin_dataset
 from repro.core.splits import find_best_splits
 from repro.core.tree import fit_tree
@@ -22,7 +22,7 @@ from repro.data import paper_dataset
 from repro.kernels import ops
 
 
-def _one_tree_pass(data, g, h, depth, strategy, timers=None):
+def _one_tree_pass(data, g, h, depth, plan, timers=None):
     """One tree's steps ①②③ level loop; optionally accumulate timers."""
     n, F = data.codes.shape
     iscat = data.is_categorical
@@ -32,7 +32,7 @@ def _one_tree_pass(data, g, h, depth, strategy, timers=None):
         nn = 2 ** level
         t0 = time.perf_counter()
         hist = ops.build_histogram(data.codes, g, h, node_ids, n_nodes=nn,
-                                   n_bins=data.n_bins, strategy=strategy)
+                                   n_bins=data.n_bins, plan=plan)
         hist.block_until_ready()
         t1 = time.perf_counter()
         best = find_best_splits(hist, iscat, fmask, 1.0, 0.0, 1.0)
@@ -42,7 +42,7 @@ def _one_tree_pass(data, g, h, depth, strategy, timers=None):
         node_ids = ops.partition_level(
             node_ids, codes_lvl.T, jnp.arange(nn, dtype=jnp.int32),
             best.threshold, best.is_cat, best.default_left,
-            missing_bin=data.missing_bin, strategy="reference")
+            missing_bin=data.missing_bin, plan=plan)
         node_ids.block_until_ready()
         t3 = time.perf_counter()
         if timers is not None:
@@ -54,6 +54,8 @@ def _one_tree_pass(data, g, h, depth, strategy, timers=None):
 def run(scale: float = 1.0, max_bins: int = 128, depth: int = 6,
         strategy: str = "scatter"):
     rows = []
+    plan = hist_plan(strategy, partition_strategy="reference",
+                     traversal_strategy="reference")
     for name in ("iot", "higgs", "allstate", "mq2008", "flight"):
         X, y, cats, spec = paper_dataset(name, scale=scale)
         data = bin_dataset(X, max_bins=max_bins, categorical_fields=cats)
@@ -61,19 +63,17 @@ def run(scale: float = 1.0, max_bins: int = 128, depth: int = 6,
         g = jnp.asarray(np.random.default_rng(0).normal(size=n), jnp.float32)
         h = jnp.ones((n,), jnp.float32)
 
-        _one_tree_pass(data, g, h, depth, strategy)          # warm compiles
+        _one_tree_pass(data, g, h, depth, plan)              # warm compiles
         timers = {"hist": 0.0, "split": 0.0, "part": 0.0}
-        _one_tree_pass(data, g, h, depth, strategy, timers)  # measured
+        _one_tree_pass(data, g, h, depth, plan, timers)      # measured
 
         tree = fit_tree(data.codes, data.codes_cm, g, h, depth=depth,
                         n_bins=data.n_bins, missing_bin=data.missing_bin,
                         is_cat_field=data.is_categorical,
                         field_mask=jnp.ones((F,), bool), lambda_=1.0,
-                        gamma=0.0, min_child_weight=1.0,
-                        hist_strategy=strategy)
+                        gamma=0.0, min_child_weight=1.0, plan=plan)
         trav = lambda: ops.traverse_tree(  # noqa: E731
-            tree, data.codes, missing_bin=data.missing_bin,
-            strategy="reference")
+            tree, data.codes, missing_bin=data.missing_bin, plan=plan)
         trav().block_until_ready()                           # warm
         t0 = time.perf_counter()
         trav().block_until_ready()

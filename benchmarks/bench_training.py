@@ -19,7 +19,7 @@ import numpy as np
 from benchmarks.common import (BOOSTER, IDEAL_CPU, IDEAL_GPU, csv_row,
                                host_step2_time, machine_step1_time,
                                machine_step3_time, machine_step5_time,
-                               time_call)
+                               strategy_plans, time_call)
 from repro.core import bin_dataset
 from repro.data import paper_dataset
 from repro.kernels import ops
@@ -61,11 +61,11 @@ def run(scale: float = 1.0, max_bins: int = 128):
 
         # (a) measured software strategies
         times = {}
-        for s in STRATS:
+        for s, plan in strategy_plans(STRATS).items():
             times[s] = time_call(
-                lambda s=s: ops.build_histogram(
+                lambda plan=plan: ops.build_histogram(
                     data.codes, g, h, nid, n_nodes=8, n_bins=data.n_bins,
-                    strategy=s))
+                    plan=plan))
         base = times["scatter"]
         rows.append(csv_row(
             f"hist_strategies_{name}", base * 1e6,

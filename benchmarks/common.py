@@ -15,6 +15,8 @@ from typing import Callable, Dict
 import jax
 import numpy as np
 
+from repro.api import ExecutionPlan
+
 # --- the paper's hardware constants (Table V, §III-B) ---------------------
 MEM_BW = 400e9              # sustained DRAM bandwidth, all machines
 IDEAL_CPU = dict(parallelism=32, clock=2.2e9, name="ideal_32core")
@@ -23,6 +25,18 @@ BOOSTER = dict(parallelism=3200, clock=1.0e9, name="booster")
 CYCLES_PER_UPDATE = 8       # §III-B: subtract + SRAM read + 2 FP adds + write
 BYTES_PER_FIELD = 1         # uint8 bin code
 GH_BYTES = 8                # g + h as f32
+
+
+def hist_plan(strategy: str, **overrides) -> ExecutionPlan:
+    """ExecutionPlan pinned to one histogram strategy (benchmark sweeps
+    compare strategies at equal memory traffic, so everything else stays
+    at the backend default)."""
+    return ExecutionPlan.auto(hist_strategy=strategy, **overrides)
+
+
+def strategy_plans(strategies) -> Dict[str, ExecutionPlan]:
+    """name -> plan for a benchmark sweep over histogram strategies."""
+    return {s: hist_plan(s) for s in strategies}
 
 
 def time_call(fn: Callable, *args, repeat: int = 3, warmup: int = 1,

@@ -1,6 +1,8 @@
-"""Batch inference (paper §III-D): every record traverses a 500-tree
+"""Batch inference (paper §III-D): every record traverses a trained
 ensemble; each tree is pinned resident (one tree per BU / per VMEM table)
-while records stream.
+while records stream.  The traversal substrate is an ``ExecutionPlan``
+knob — the same ``predict`` call runs the gather walk or the Pallas
+one-hot walk.
 
     PYTHONPATH=src python examples/batch_inference.py --records 20000
 """
@@ -9,11 +11,8 @@ import time
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.core import GBDTConfig, bin_dataset, train
-from repro.data import make_tabular
-from repro.kernels import ops
+from repro.api import BoosterClassifier, ExecutionPlan, make_tabular
 
 
 def main():
@@ -25,27 +24,25 @@ def main():
 
     X, y, cats = make_tabular(args.records, 20, 8, n_cats=12,
                               task="binary", seed=0)
-    data = bin_dataset(X, max_bins=64, categorical_fields=cats)
-    res = train(GBDTConfig(n_trees=args.trees, max_depth=args.depth,
-                           learning_rate=0.2, objective="binary:logistic",
-                           hist_strategy="scatter"), data, y)
-    model = res.model
-    print(f"trained {model.n_trees} trees (depth {args.depth})")
+    est = BoosterClassifier(n_trees=args.trees, max_depth=args.depth,
+                            learning_rate=0.2, max_bins=64,
+                            categorical_fields=cats)
+    est.fit(X, y, plan=ExecutionPlan.auto(hist_strategy="scatter"))
+    print(f"trained {est.n_trees_} trees (depth {args.depth})")
 
-    for strategy in ("reference", "pallas"):
-        fn = lambda: ops.predict_ensemble(
-            model.trees, data.codes, missing_bin=data.missing_bin,
-            depth=args.depth, strategy=strategy)
+    # bin once up front so the timings isolate the traversal kernels
+    codes = est.binner_.transform(X)
+    for name in ("reference", "pallas"):
+        plan = ExecutionPlan.auto(traversal_strategy=name)
+        fn = lambda: est.model_.predict_margin(codes, plan=plan)
         jax.block_until_ready(fn())  # compile
         t0 = time.perf_counter()
-        out = fn()
-        jax.block_until_ready(out)
+        jax.block_until_ready(fn())
         dt = time.perf_counter() - t0
-        print(f"{strategy:10s}: {args.records/dt:12.0f} records/s "
+        print(f"{name:10s}: {args.records/dt:12.0f} records/s "
               f"({dt*1e3:.1f} ms)  [pallas runs in interpret mode on CPU]")
 
-    margins = np.asarray(model.predict_margin(data.codes))
-    acc = ((1 / (1 + np.exp(-margins)) > 0.5) == y).mean()
+    acc = (est.predict(X) == y).mean()
     print(f"batch accuracy = {acc:.4f}")
 
 

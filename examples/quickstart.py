@@ -1,32 +1,44 @@
 """Quickstart: train a GBDT on a synthetic tabular dataset and predict.
 
+Everything goes through the ``repro.api`` facade — raw NaN-carrying
+matrices in, predictions out; binning, kernel-strategy selection and
+training all happen behind ``fit``.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import GBDTConfig, bin_dataset, train
-from repro.data import make_tabular
+from repro.api import BoosterRegressor, ExecutionPlan, make_tabular
 
 
 def main():
     # 5k records, 8 numeric + 4 categorical fields, 5% missing values
     X, y, cat_ids = make_tabular(5000, 8, 4, n_cats=10, task="regression",
                                  missing_rate=0.05, seed=0)
-    data = bin_dataset(X, max_bins=64, categorical_fields=cat_ids)
 
-    config = GBDTConfig(
-        n_trees=40, max_depth=5, learning_rate=0.3,
-        lambda_=1.0, objective="reg:squarederror",
-        hist_strategy="auto",        # pallas one-hot kernel on TPU,
-    )                                # scatter on this CPU host
+    # ExecutionPlan.auto() probes the backend once: Pallas one-hot kernels
+    # on TPU, the scatter/reference software paths on this CPU host.
+    plan = ExecutionPlan.auto()
+    print(f"execution plan: {plan.describe()}")
 
-    result = train(config, data, y, verbose=True)
-    pred = np.asarray(result.model.predict(data))
+    est = BoosterRegressor(n_trees=40, max_depth=5, learning_rate=0.3,
+                           lambda_=1.0, max_bins=64,
+                           categorical_fields=cat_ids)
+    est.fit(X, y, plan=plan, verbose=True)
+
+    pred = np.asarray(est.predict(X))
     r2 = 1 - np.mean((pred - y) ** 2) / np.var(y)
     print(f"\ntrain R^2 = {r2:.4f}")
-    print(f"final loss = {result.history['train_loss'][-1]:.5f}")
-    print(f"step times = {result.step_times}")
+    print(f"final loss = {est.history_['train_loss'][-1]:.5f}")
+    print(f"top fields by gain importance = "
+          f"{np.argsort(est.feature_importances_)[::-1][:4].tolist()}")
+
+    # one serialization story: estimator -> bundle -> estimator
+    path = est.save("/tmp/quickstart_booster")
+    print(f"saved bundle at {path}")
+    est2 = BoosterRegressor.load(path)
+    assert np.allclose(np.asarray(est2.predict(X)), pred)
+    print("reloaded bundle reproduces predictions")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,8 @@
 
 Trains a few-hundred-tree GBDT (the paper trains 500 x depth-6) on a
 Higgs-like dataset analog with train/validation split, early stopping,
-periodic atomic checkpoints, a step journal, and crash recovery:
+periodic atomic checkpoints, a step journal, and crash recovery — all
+through the ``repro.api`` estimator facade:
 
     PYTHONPATH=src python examples/train_gbdt_e2e.py \
         --records 50000 --trees 200 --ckpt-dir /tmp/gbdt_ckpt
@@ -15,23 +16,9 @@ import argparse
 import os
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import GBDTConfig, GBDTModel, bin_dataset, train
-from repro.core.binning import BinnedDataset
-from repro.data import paper_dataset
-from repro.distributed import checkpoint as ckpt
+from repro.api import BoosterClassifier, ExecutionPlan, paper_dataset
 from repro.distributed.fault import StepJournal
-
-
-def split(data: BinnedDataset, y, n_tr: int):
-    def sub(sl):
-        return BinnedDataset(
-            data.codes[sl],
-            jnp.asarray(np.asarray(data.codes[sl]).T.copy()),
-            data.is_categorical, data.n_bins, data.bin_edges,
-            data.n_value_bins)
-    return sub(slice(0, n_tr)), y[:n_tr], sub(slice(n_tr, None)), y[n_tr:]
 
 
 def main():
@@ -46,46 +33,33 @@ def main():
     args = ap.parse_args()
 
     X, y, cats, spec = paper_dataset("higgs", n_override=args.records)
-    data = bin_dataset(X, max_bins=128, categorical_fields=cats)
     n_tr = int(args.records * 0.9)
-    tr, ytr, te, yte = split(data, y, n_tr)
+    Xtr, ytr = X[:n_tr], y[:n_tr]
+    Xte, yte = X[n_tr:], y[n_tr:]
     print(f"[e2e] {spec.comment}: {n_tr} train / {len(yte)} valid records, "
-          f"{data.n_fields} fields")
+          f"{X.shape[1]} fields")
 
     journal = StepJournal(os.path.join(args.ckpt_dir, "journal.jsonl"))
-    cfg = GBDTConfig(n_trees=args.trees, max_depth=args.depth,
-                     learning_rate=args.lr,
-                     objective="binary:logistic",
-                     early_stopping_rounds=20,
-                     hist_strategy=args.strategy, seed=0)
-
-    init_model = None
-    if ckpt.list_steps(args.ckpt_dir):
-        like = train(GBDTConfig(n_trees=1, max_depth=args.depth,
-                                objective=cfg.objective,
-                                hist_strategy="scatter"),
-                     tr, ytr).model.to_state()
-        state, step, _ = ckpt.restore(args.ckpt_dir, like=like)
-        init_model = GBDTModel.from_state(state)
-        print(f"[e2e] resuming from checkpoint at tree {step}")
-        import dataclasses
-        cfg = dataclasses.replace(cfg, n_trees=args.trees - step)
 
     def cb(t_idx, model):
         if (t_idx + 1) % args.ckpt_every == 0:
-            ckpt.save(args.ckpt_dir, model.to_state(), step=t_idx + 1)
             journal.append(t_idx, {"trees": model.n_trees})
 
-    res = train(cfg, tr, ytr, eval_set=(te, jnp.asarray(yte)),
-                init_model=init_model, callback=cb, verbose=True)
-    ckpt.save(args.ckpt_dir, res.model.to_state(), step=res.model.n_trees)
+    est = BoosterClassifier(n_trees=args.trees, max_depth=args.depth,
+                            learning_rate=args.lr, max_bins=128,
+                            categorical_fields=cats,
+                            early_stopping_rounds=20, seed=0)
+    est.fit(Xtr, ytr, eval_set=(Xte, yte),
+            plan=ExecutionPlan.auto(hist_strategy=args.strategy),
+            checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every,
+            callback=cb, verbose=True)
 
-    p = np.asarray(res.model.predict(te))
-    acc = ((p > 0.5) == yte).mean()
-    print(f"\n[e2e] {res.model.n_trees} trees")
+    acc = (est.predict(Xte) == yte).mean()
+    print(f"\n[e2e] {est.n_trees_} trees")
     print(f"[e2e] valid accuracy = {acc:.4f}")
-    print(f"[e2e] valid logloss  = {res.history['eval_loss'][-1]:.5f}")
-    print(f"[e2e] step times     = {res.step_times}")
+    if est.history_.get("eval_loss"):
+        print(f"[e2e] valid logloss  = {est.history_['eval_loss'][-1]:.5f}")
+    print(f"[e2e] step times     = {est.step_times_}")
 
 
 if __name__ == "__main__":

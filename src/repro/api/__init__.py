@@ -1,0 +1,49 @@
+"""``repro.api`` — the unified estimator facade over the Booster engine.
+
+Public surface:
+
+  * :class:`ExecutionPlan` — one object deciding where every GBDT step runs
+    (kernel strategies, Pallas interpret mode, optional inference mesh).
+  * :class:`BoosterRegressor` / :class:`BoosterClassifier` — sklearn/XGBoost
+    style estimators: raw NaN-carrying matrices in, predictions out; binning,
+    training, checkpointing and serving all behind ``fit`` / ``predict``.
+  * :func:`save` / :func:`load` (+ ``save_checkpoint`` / ``load_checkpoint``)
+    — the one serialization story: npz + json meta, shared by estimators,
+    pipelines and training checkpoints.
+
+Only :mod:`repro.api.plan` is imported eagerly — the kernels layer depends
+on it, so the estimator/serialize modules (which depend on the kernels
+layer) are loaded lazily to keep the import graph acyclic.
+"""
+from repro.api.plan import ExecutionPlan, resolve_plan
+
+_LAZY = {
+    "BoosterRegressor": ("repro.api.estimator", "BoosterRegressor"),
+    "BoosterClassifier": ("repro.api.estimator", "BoosterClassifier"),
+    "save": ("repro.api.serialize", "save"),
+    "load": ("repro.api.serialize", "load"),
+    "save_checkpoint": ("repro.api.serialize", "save_checkpoint"),
+    "load_checkpoint": ("repro.api.serialize", "load_checkpoint"),
+    "pack": ("repro.api.serialize", "pack"),
+    "unpack": ("repro.api.serialize", "unpack"),
+    # dataset helpers re-exported so the quickstart needs one import root
+    "make_tabular": ("repro.data.synthetic", "make_tabular"),
+    "paper_dataset": ("repro.data.synthetic", "paper_dataset"),
+}
+
+__all__ = ["ExecutionPlan", "resolve_plan"] + sorted(_LAZY)
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    value = getattr(importlib.import_module(mod_name), attr)
+    globals()[name] = value  # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

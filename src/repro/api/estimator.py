@@ -1,0 +1,373 @@
+"""sklearn/XGBoost-style estimators over the Booster training engine.
+
+``BoosterRegressor`` / ``BoosterClassifier`` own the whole vertical: raw
+NaN-carrying feature matrices in, predictions out.  Binning (quantile
+sketch + categorical collapse), kernel-strategy selection (via
+:class:`~repro.api.plan.ExecutionPlan`), training (``core.gbdt.train``),
+fault-tolerant checkpointing and sharded batch inference all live behind
+``fit`` / ``predict`` — callers never touch ``GBDTConfig`` or
+``bin_dataset`` directly.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.api import serialize
+from repro.api.plan import ExecutionPlan
+from repro.core.binning import Binner
+from repro.core.gbdt import (GBDTConfig, GBDTModel, TrainResult,
+                             _predict_one_tree, train)
+from repro.core.inference import (GBDTPipeline, feature_importance,
+                                  pad_trees, sharded_predict)
+from repro.kernels.ref import TreeArrays
+
+_PARAM_DEFAULTS: Dict[str, Any] = dict(
+    n_trees=100, max_depth=6, learning_rate=0.1, lambda_=1.0, gamma=0.0,
+    min_child_weight=1.0, objective=None, subsample=1.0,
+    colsample_bytree=1.0, grow_policy="depthwise", max_leaves=None,
+    early_stopping_rounds=None, max_bins=256, categorical_fields=None,
+    seed=0, plan=None)
+
+
+class NotFittedError(RuntimeError):
+    """Raised when predict/save is called before ``fit``."""
+
+
+class BoosterEstimator:
+    """Base estimator: hyper-parameters + a fitted (binner, model) pair.
+
+    ``get_params`` / ``set_params`` follow the sklearn contract; every
+    constructor argument is a tunable hyper-parameter.  ``plan`` (an
+    :class:`ExecutionPlan`) is the execution substrate choice and may be
+    overridden per ``fit``/``predict`` call.
+    """
+
+    _default_objective: str = "reg:squarederror"
+
+    def __init__(self, **params):
+        unknown = set(params) - set(_PARAM_DEFAULTS)
+        if unknown:
+            raise TypeError(f"unknown estimator parameter(s): "
+                            f"{sorted(unknown)}")
+        for name, default in _PARAM_DEFAULTS.items():
+            setattr(self, name, self._normalize(name,
+                                                params.get(name, default)))
+        self._model: Optional[GBDTModel] = None
+        self._binner: Optional[Binner] = None
+        self._result: Optional[TrainResult] = None
+
+    @staticmethod
+    def _normalize(name: str, value: Any) -> Any:
+        # sequences (lists/arrays of categorical field ids) become plain
+        # int tuples so params stay hashable, comparable and JSON-safe
+        if (name == "categorical_fields" and value is not None
+                and not isinstance(value, tuple)):
+            return tuple(int(c) for c in value)
+        return value
+
+    # -- sklearn plumbing --------------------------------------------------
+    def get_params(self, deep: bool = True) -> Dict[str, Any]:
+        return {name: getattr(self, name) for name in _PARAM_DEFAULTS}
+
+    def set_params(self, **params) -> "BoosterEstimator":
+        unknown = set(params) - set(_PARAM_DEFAULTS)
+        if unknown:
+            raise ValueError(f"invalid parameter(s) for "
+                             f"{type(self).__name__}: {sorted(unknown)}")
+        for name, value in params.items():
+            setattr(self, name, self._normalize(name, value))
+        return self
+
+    def __repr__(self) -> str:
+        changed = {k: v for k, v in self.get_params().items()
+                   if v != _PARAM_DEFAULTS[k]}
+        args = ", ".join(f"{k}={v!r}" for k, v in sorted(changed.items()))
+        return f"{type(self).__name__}({args})"
+
+    # -- fitted-state access ----------------------------------------------
+    @property
+    def is_fitted(self) -> bool:
+        return self._model is not None
+
+    def _check_fitted(self) -> GBDTModel:
+        if self._model is None:
+            raise NotFittedError(
+                f"this {type(self).__name__} instance is not fitted yet; "
+                "call fit(X, y) first")
+        return self._model
+
+    @property
+    def model_(self) -> GBDTModel:
+        return self._check_fitted()
+
+    @property
+    def binner_(self) -> Binner:
+        self._check_fitted()
+        return self._binner
+
+    @property
+    def n_trees_(self) -> int:
+        return self._check_fitted().n_trees
+
+    @property
+    def history_(self) -> Dict[str, list]:
+        self._check_fitted()
+        return self._result.history if self._result is not None else {}
+
+    def evals_result(self) -> Dict[str, list]:
+        return self.history_
+
+    @property
+    def step_times_(self) -> Dict[str, float]:
+        """Accumulated seconds per paper step from the last ``fit``."""
+        self._check_fitted()
+        return self._result.step_times if self._result is not None else {}
+
+    @property
+    def feature_importances_(self) -> np.ndarray:
+        """Gain-style per-field importances (normalized to sum 1)."""
+        return feature_importance(self._check_fitted(), kind="gain")
+
+    # -- plan resolution ---------------------------------------------------
+    def _resolve_plan(self, plan: Optional[ExecutionPlan]) -> ExecutionPlan:
+        if plan is None:
+            plan = self.plan
+        return (plan if plan is not None else ExecutionPlan()).resolved()
+
+    def _config(self, n_trees: int) -> GBDTConfig:
+        return GBDTConfig(
+            n_trees=n_trees, max_depth=self.max_depth,
+            learning_rate=self.learning_rate, lambda_=self.lambda_,
+            gamma=self.gamma, min_child_weight=self.min_child_weight,
+            objective=self.objective or self._default_objective,
+            subsample=self.subsample,
+            colsample_bytree=self.colsample_bytree,
+            grow_policy=self.grow_policy, max_leaves=self.max_leaves,
+            early_stopping_rounds=self.early_stopping_rounds,
+            seed=self.seed)
+
+    # -- fit ---------------------------------------------------------------
+    def fit(self, X, y, *, eval_set: Optional[Tuple] = None,
+            xgb_model: Any = None, plan: Optional[ExecutionPlan] = None,
+            checkpoint_dir: Optional[str] = None,
+            checkpoint_every: int = 25, callback=None,
+            verbose: bool = False) -> "BoosterEstimator":
+        """Bin ``X`` (raw floats, NaN == missing) and boost ``self.n_trees``
+        trees.
+
+        eval_set:        optional raw ``(X_val, y_val)`` pair — enables the
+                         eval history and ``early_stopping_rounds``.
+        xgb_model:       warm start: a fitted estimator, ``GBDTPipeline``,
+                         ``GBDTModel``, or a bundle path — ``n_trees``
+                         *additional* trees are grown (XGBoost semantics).
+        plan:            ExecutionPlan override for this fit.
+        checkpoint_dir:  when set, resumes from the newest valid step
+                         checkpoint and writes one every
+                         ``checkpoint_every`` trees (atomic, sha-verified).
+                         An explicit ``xgb_model`` takes precedence over
+                         any existing checkpoints (a warning is emitted).
+        """
+        plan = self._resolve_plan(plan)
+        X = np.asarray(X, dtype=np.float64)
+        n_trees = self.n_trees
+
+        init_model, binner = self._warm_start(xgb_model)
+        if checkpoint_dir is not None and serialize.has_checkpoint(
+                checkpoint_dir):
+            if xgb_model is not None:
+                warnings.warn(
+                    f"{checkpoint_dir!r} already holds checkpoints; the "
+                    "explicit xgb_model wins and they are ignored (new "
+                    "checkpoints will overwrite colliding steps)",
+                    UserWarning, stacklevel=2)
+            else:
+                try:
+                    restored, step = serialize.load_checkpoint(
+                        checkpoint_dir)
+                except (FileNotFoundError, ValueError, KeyError):
+                    # step dirs exist but none hold a valid bundle payload
+                    # (legacy format or corruption) — train fresh
+                    restored = None
+                if restored is not None:
+                    init_model, binner = self._warm_parts(restored)
+                    n_trees = max(0, self.n_trees - init_model.n_trees)
+                    if verbose:
+                        print(f"[{type(self).__name__}] resuming from "
+                              f"checkpoint step {step} "
+                              f"({init_model.n_trees} trees)")
+
+        if init_model is not None:
+            # fail early with a clear message instead of a shape error
+            # when stacking warm-start trees with freshly grown ones
+            obj = self.objective or self._default_objective
+            if init_model.max_depth != self.max_depth:
+                raise ValueError(
+                    f"warm-start/checkpoint model has max_depth="
+                    f"{init_model.max_depth} but this estimator is "
+                    f"configured with max_depth={self.max_depth}")
+            if init_model.objective != obj:
+                raise ValueError(
+                    f"warm-start/checkpoint model was trained with "
+                    f"objective={init_model.objective!r} but this "
+                    f"estimator uses {obj!r}")
+
+        if binner is None:
+            binner = Binner(max_bins=self.max_bins,
+                            categorical_fields=self.categorical_fields)
+            binner.fit(X)
+        data = binner.transform(X)
+        ev = None
+        if eval_set is not None:
+            X_val, y_val = eval_set
+            ev = (binner.transform(np.asarray(X_val, dtype=np.float64)),
+                  np.asarray(y_val, dtype=np.float32))
+
+        def cb(t_idx, model):
+            if callback is not None:
+                callback(t_idx, model)
+            if (checkpoint_dir is not None
+                    and (t_idx + 1) % checkpoint_every == 0):
+                serialize.save_checkpoint(
+                    checkpoint_dir,
+                    GBDTPipeline(binner=binner, model=model), t_idx + 1)
+
+        result = train(self._config(n_trees), data, y, eval_set=ev,
+                       init_model=init_model, callback=cb, verbose=verbose,
+                       plan=plan)
+        self._model, self._binner, self._result = result.model, binner, result
+        if checkpoint_dir is not None:
+            serialize.save_checkpoint(checkpoint_dir, self,
+                                      result.model.n_trees)
+        return self
+
+    def _warm_start(self, xgb_model: Any
+                    ) -> Tuple[Optional[GBDTModel], Optional[Binner]]:
+        if xgb_model is None:
+            return None, None
+        if isinstance(xgb_model, str):
+            xgb_model = serialize.load(xgb_model)
+        return self._warm_parts(xgb_model)
+
+    @staticmethod
+    def _warm_parts(obj: Any) -> Tuple[GBDTModel, Optional[Binner]]:
+        if isinstance(obj, BoosterEstimator):
+            return obj._check_fitted(), obj._binner
+        if isinstance(obj, GBDTPipeline):
+            return obj.model, obj.binner
+        if isinstance(obj, GBDTModel):
+            return obj, None
+        raise TypeError(f"cannot warm-start from {type(obj).__name__}")
+
+    # -- predict -----------------------------------------------------------
+    def _bin(self, X) -> Any:
+        self._check_fitted()
+        return self._binner.transform(np.asarray(X, dtype=np.float64))
+
+    def predict_margin(self, X, *, plan: Optional[ExecutionPlan] = None
+                       ) -> jax.Array:
+        """Raw ensemble margins for raw (unbinned) ``X``.
+
+        A plan carrying a ``mesh`` dispatches the paper's §III-D scheme:
+        trees shard round-robin over the mesh's ``"model"`` axis (the
+        ensemble is zero-padded to divide it), records over the data axes.
+        """
+        model = self._check_fitted()
+        plan = self._resolve_plan(plan)
+        data = self._bin(X)
+        if plan.mesh is not None:
+            padded = pad_trees(model, plan.mesh.shape["model"])
+            return sharded_predict(plan.mesh, padded, data.codes)
+        return model.predict_margin(data.codes, plan=plan)
+
+    def predict(self, X, *, plan: Optional[ExecutionPlan] = None
+                ) -> jax.Array:
+        model = self._check_fitted()
+        return model.loss.transform(self.predict_margin(X, plan=plan))
+
+    def staged_predict(self, X, *, plan: Optional[ExecutionPlan] = None
+                       ) -> Iterator[jax.Array]:
+        """Yield predictions after each boosting stage (1..n_trees trees).
+
+        The k-th yield equals ``predict`` of the k-tree prefix ensemble;
+        on the training matrix its loss reproduces
+        ``history_["train_loss"][k-1]`` exactly.
+        """
+        model = self._check_fitted()
+        plan = self._resolve_plan(plan)
+        data = self._bin(X)
+        n = data.codes.shape[0]
+        margin = jax.numpy.full((n,), model.base_margin, jax.numpy.float32)
+        for t in range(model.n_trees):
+            tree = TreeArrays(*[a[t] for a in model.trees])
+            margin = margin + _predict_one_tree(tree, data, plan)
+            yield model.loss.transform(margin)
+
+    # -- serialization -----------------------------------------------------
+    def _pack(self):
+        model = self._check_fitted()
+        meta = {"class": type(self).__name__,
+                "params": serialize.estimator_params_to_meta(
+                    self.get_params())}
+        return serialize._pack_parts(model, self._binner, meta)
+
+    @classmethod
+    def _from_parts(cls, est_meta: Dict, model: GBDTModel,
+                    binner: Binner) -> "BoosterEstimator":
+        klass = {c.__name__: c for c in (BoosterRegressor,
+                                         BoosterClassifier)}.get(
+            est_meta.get("class"), cls)
+        est = klass(**est_meta.get("params", {}))
+        est._model, est._binner = model, binner
+        return est
+
+    def save(self, path: str) -> str:
+        """Write this fitted estimator as an atomic npz+json bundle."""
+        return serialize.save(path, self)
+
+    @classmethod
+    def load(cls, path: str) -> "BoosterEstimator":
+        obj = serialize.load(path)
+        if isinstance(obj, GBDTPipeline):     # promote: same payload family
+            est = cls()
+            est._model, est._binner = obj.model, obj.binner
+            return est
+        if not isinstance(obj, BoosterEstimator):
+            raise TypeError(f"bundle at {path!r} holds a "
+                            f"{type(obj).__name__}, not an estimator")
+        return obj
+
+    def to_pipeline(self) -> GBDTPipeline:
+        """The binner+model bundle view (for the functional APIs)."""
+        return GBDTPipeline(binner=self.binner_, model=self.model_)
+
+
+class BoosterRegressor(BoosterEstimator):
+    """Gradient-boosted regression trees (default squared-error loss)."""
+
+    _default_objective = "reg:squarederror"
+
+
+class BoosterClassifier(BoosterEstimator):
+    """Gradient-boosted binary classifier (default logistic loss).
+
+    ``predict`` returns hard 0/1 labels; ``predict_proba`` the class
+    probabilities, XGBoost-style.
+    """
+
+    _default_objective = "binary:logistic"
+
+    def predict_proba(self, X, *, plan: Optional[ExecutionPlan] = None
+                      ) -> np.ndarray:
+        model = self._check_fitted()
+        p = np.asarray(model.loss.transform(
+            self.predict_margin(X, plan=plan)))
+        return np.stack([1.0 - p, p], axis=-1)
+
+    def predict(self, X, *, plan: Optional[ExecutionPlan] = None
+                ) -> np.ndarray:
+        return (self.predict_proba(X, plan=plan)[:, 1] > 0.5).astype(
+            np.int32)

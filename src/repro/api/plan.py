@@ -1,0 +1,148 @@
+"""ExecutionPlan — the single object that decides *where* each GBDT step runs.
+
+Every accelerated step (histogram ①, partition ③, traversal/inference ⑤)
+used to take its own ``strategy=`` / ``interpret=`` kwargs, and callers had
+to thread three strings plus an interpret flag through ``GBDTConfig``,
+``train``, the pipeline and the kernels.  An ``ExecutionPlan`` centralizes
+that selection: build one (or let ``ExecutionPlan.auto()`` probe the
+backend once), pass it down, and every dispatch layer reads from it.
+
+A plan is a frozen, hashable dataclass, so it can ride through ``jax.jit``
+as a static argument — strategy choices are compile-time decisions.
+
+Strategy fields accept ``"auto"``; ``resolved()`` replaces every ``"auto"``
+(and a ``None`` interpret flag) with the backend default, so kernels only
+ever see concrete choices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from typing import Optional
+
+import jax
+
+HIST_STRATEGIES = ("scatter", "scatter_private", "sort", "onehot",
+                   "pallas_grouped", "pallas_packed")
+PARTITION_STRATEGIES = ("reference", "pallas")
+TRAVERSAL_STRATEGIES = ("reference", "pallas")
+
+
+@functools.lru_cache(maxsize=None)
+def _backend() -> str:
+    """Probe the JAX backend exactly once per process."""
+    return jax.default_backend()
+
+
+def _on_tpu() -> bool:
+    return _backend() == "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Kernel/strategy/interpret/mesh selection for every GBDT step.
+
+    Fields
+    ------
+    hist_strategy:       step ① — one of ``HIST_STRATEGIES`` or ``"auto"``
+    partition_strategy:  step ③ — ``"reference"`` | ``"pallas"`` | ``"auto"``
+    traversal_strategy:  step ⑤ / batch inference — same choices as above
+    interpret:           run Pallas kernels in interpret mode (None = auto:
+                         interpret everywhere except a real TPU)
+    records_per_block:   Pallas histogram grid — records per kernel block
+    fields_per_block:    Pallas histogram grid — fields per kernel block
+    host_offload_split:  run step ② split selection on host (paper's offload)
+    mesh:                optional ``jax.sharding.Mesh``; when set, ensemble
+                         inference shards trees over the ``"model"`` axis and
+                         records over the data axes (paper §III-D)
+    """
+
+    hist_strategy: str = "auto"
+    partition_strategy: str = "auto"
+    traversal_strategy: str = "auto"
+    interpret: Optional[bool] = None
+    records_per_block: int = 512
+    fields_per_block: int = 8
+    host_offload_split: bool = False
+    mesh: Optional[jax.sharding.Mesh] = None
+
+    def __post_init__(self):
+        if self.hist_strategy not in HIST_STRATEGIES + ("auto",):
+            raise ValueError(
+                f"unknown histogram strategy {self.hist_strategy!r}; "
+                f"choose from {HIST_STRATEGIES + ('auto',)}")
+        if self.partition_strategy not in PARTITION_STRATEGIES + ("auto",):
+            raise ValueError(
+                f"unknown partition strategy {self.partition_strategy!r}")
+        if self.traversal_strategy not in TRAVERSAL_STRATEGIES + ("auto",):
+            raise ValueError(
+                f"unknown traversal strategy {self.traversal_strategy!r}")
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def auto(cls, mesh: Optional[jax.sharding.Mesh] = None,
+             **overrides) -> "ExecutionPlan":
+        """Backend-probed plan: Pallas kernels on TPU, software paths (with
+        Pallas interpret-mode validation available) everywhere else."""
+        return cls(mesh=mesh, **overrides).resolved()
+
+    @classmethod
+    def from_config(cls, config, mesh: Optional[jax.sharding.Mesh] = None
+                    ) -> "ExecutionPlan":
+        """Lift the legacy per-step strategy strings off a ``GBDTConfig``."""
+        return cls(hist_strategy=config.hist_strategy,
+                   partition_strategy=config.partition_strategy,
+                   traversal_strategy=config.traversal_strategy,
+                   host_offload_split=config.host_offload_split,
+                   mesh=mesh).resolved()
+
+    def resolved(self) -> "ExecutionPlan":
+        """Replace every ``"auto"`` / ``None`` with the backend default."""
+        tpu = _on_tpu()
+        kw = {}
+        if self.hist_strategy == "auto":
+            kw["hist_strategy"] = "pallas_grouped" if tpu else "scatter"
+        if self.partition_strategy == "auto":
+            kw["partition_strategy"] = "pallas" if tpu else "reference"
+        if self.traversal_strategy == "auto":
+            kw["traversal_strategy"] = "pallas" if tpu else "reference"
+        if self.interpret is None:
+            kw["interpret"] = not tpu
+        return dataclasses.replace(self, **kw) if kw else self
+
+    def replace(self, **changes) -> "ExecutionPlan":
+        return dataclasses.replace(self, **changes)
+
+    def describe(self) -> str:
+        m = (f"mesh{dict(self.mesh.shape)}" if self.mesh is not None
+             else "single-device")
+        return (f"ExecutionPlan(hist={self.hist_strategy}, "
+                f"partition={self.partition_strategy}, "
+                f"traversal={self.traversal_strategy}, "
+                f"interpret={self.interpret}, {m})")
+
+
+_DEPRECATION_MSG = (
+    "loose strategy/interpret kwargs to {caller} are deprecated; pass "
+    "plan=ExecutionPlan(...) (or ExecutionPlan.auto(...)) instead")
+
+
+def resolve_plan(plan: Optional[ExecutionPlan] = None, *,
+                 _caller: Optional[str] = None, **loose) -> ExecutionPlan:
+    """Resolve a plan plus legacy loose kwargs into a concrete plan.
+
+    ``loose`` entries that are ``None`` or ``"auto"`` are ignored; any other
+    value overrides the plan field of the same name and (when ``_caller``
+    is given) emits a DeprecationWarning — the thin shim that keeps old
+    ``strategy=`` call sites working.
+    """
+    loose = {k: v for k, v in loose.items()
+             if v is not None and v != "auto"}
+    base = plan if plan is not None else ExecutionPlan()
+    if loose:
+        if _caller is not None:
+            warnings.warn(_DEPRECATION_MSG.format(caller=_caller),
+                          DeprecationWarning, stacklevel=3)
+        base = dataclasses.replace(base, **loose)
+    return base.resolved()

@@ -1,0 +1,182 @@
+"""One serialization story for every GBDT artifact (npz + json meta).
+
+A *bundle* is a directory holding ``arrays.npz`` (all array payloads,
+slash-named) and ``manifest.json`` (scalars + a sha256 of the payload),
+written with the checkpoint layer's two-phase atomic commit.  The same
+packed format covers all three artifact shapes:
+
+  * a bare :class:`~repro.core.gbdt.GBDTModel`   (arrays + model meta)
+  * a :class:`~repro.core.inference.GBDTPipeline` (+ binner state)
+  * a fitted ``repro.api`` estimator              (+ constructor params)
+
+so a training checkpoint, a pipeline and an estimator all round-trip
+through :func:`save` / :func:`load` — and through the fault-tolerant step
+checkpoints via :func:`save_checkpoint` / :func:`load_checkpoint`, which
+ride :func:`repro.distributed.checkpoint.save_named` (atomic rename,
+sha256 verification, ``keep_last`` GC, corrupt-step fallback).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binning import Binner
+from repro.core.gbdt import GBDTModel
+from repro.core.inference import GBDTPipeline
+from repro.distributed import checkpoint as ckpt
+from repro.kernels.ref import TreeArrays
+
+FORMAT = "repro-gbdt-bundle"
+VERSION = 1
+
+
+# --------------------------------------------------------------------------
+# pack / unpack — the canonical in-memory form
+# --------------------------------------------------------------------------
+def _pack_parts(model: GBDTModel, binner: Optional[Binner] = None,
+                estimator_meta: Optional[Dict] = None
+                ) -> Tuple[Dict[str, np.ndarray], Dict]:
+    arrays = {f"model/trees/{k}": np.asarray(v)
+              for k, v in model.trees._asdict().items()}
+    meta: Dict[str, Any] = {
+        "format": FORMAT, "version": VERSION,
+        "model": {
+            "base_margin": float(model.base_margin),
+            "objective": model.objective,
+            "missing_bin": int(model.missing_bin),
+            "n_fields": int(model.n_fields),
+            "max_depth": int(model.max_depth),
+        },
+    }
+    if binner is not None:
+        arrays["binner/edges"] = np.asarray(binner._edges)
+        arrays["binner/is_cat"] = np.asarray(binner._is_cat)
+        arrays["binner/n_value_bins"] = np.asarray(binner._n_value_bins)
+        meta["binner"] = {
+            "max_bins": int(binner.max_bins),
+            "categorical_fields": sorted(int(c)
+                                         for c in binner.categorical_fields),
+        }
+    if estimator_meta is not None:
+        meta["estimator"] = estimator_meta
+    return arrays, meta
+
+
+def pack(obj: Any) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Decompose a model / pipeline / fitted estimator into the canonical
+    ``(arrays, meta)`` pair (arrays npz-able, meta pure JSON)."""
+    from repro.api.estimator import BoosterEstimator  # local: import cycle
+    if isinstance(obj, BoosterEstimator):
+        return obj._pack()
+    if isinstance(obj, GBDTPipeline):
+        return _pack_parts(obj.model, obj.binner)
+    if isinstance(obj, GBDTModel):
+        return _pack_parts(obj)
+    raise TypeError(f"cannot serialize {type(obj).__name__}; expected a "
+                    "GBDTModel, GBDTPipeline, or fitted estimator")
+
+
+def _unpack_model(arrays: Dict[str, np.ndarray], meta: Dict) -> GBDTModel:
+    trees = TreeArrays(**{f: jnp.asarray(arrays[f"model/trees/{f}"])
+                          for f in TreeArrays._fields})
+    m = meta["model"]
+    return GBDTModel(trees=trees, base_margin=float(m["base_margin"]),
+                     objective=str(m["objective"]),
+                     missing_bin=int(m["missing_bin"]),
+                     n_fields=int(m["n_fields"]),
+                     max_depth=int(m["max_depth"]))
+
+
+def _unpack_binner(arrays: Dict[str, np.ndarray], meta: Dict) -> Binner:
+    b = Binner(int(meta["binner"]["max_bins"]),
+               [int(c) for c in meta["binner"]["categorical_fields"]])
+    b._edges = np.asarray(arrays["binner/edges"])
+    b._is_cat = np.asarray(arrays["binner/is_cat"])
+    b._n_value_bins = np.asarray(arrays["binner/n_value_bins"])
+    return b
+
+
+def unpack(arrays: Dict[str, np.ndarray], meta: Dict) -> Any:
+    """Rebuild the richest artifact the payload describes: estimator when
+    constructor params are present, else pipeline when the binner is, else
+    the bare model."""
+    if meta.get("format") != FORMAT:
+        raise ValueError(f"not a {FORMAT} payload: format={meta.get('format')!r}")
+    model = _unpack_model(arrays, meta)
+    binner = _unpack_binner(arrays, meta) if "binner" in meta else None
+    if "estimator" in meta:
+        from repro.api.estimator import BoosterEstimator
+        if binner is None:
+            raise ValueError("estimator payload is missing its binner state")
+        return BoosterEstimator._from_parts(meta["estimator"], model, binner)
+    if binner is not None:
+        return GBDTPipeline(binner=binner, model=model)
+    return model
+
+
+# --------------------------------------------------------------------------
+# standalone bundles — save(path) / load(path)
+# --------------------------------------------------------------------------
+def save(path: str, obj: Any) -> str:
+    """Atomically write ``obj`` as a bundle directory at ``path``."""
+    arrays, meta = pack(obj)
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    return ckpt.write_payload_dir(os.path.abspath(path), arrays,
+                                  {"names": sorted(arrays), "meta": meta})
+
+
+def load(path: str) -> Any:
+    """Load a bundle written by :func:`save` (sha256-verified)."""
+    manifest = ckpt.validate_payload_dir(path)
+    if manifest is None:
+        raise FileNotFoundError(f"no valid bundle at {path!r}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in manifest["names"]}
+    return unpack(arrays, manifest["meta"])
+
+
+# --------------------------------------------------------------------------
+# step checkpoints — the fault-tolerant training flow
+# --------------------------------------------------------------------------
+def save_checkpoint(directory: str, obj: Any, step: int, *,
+                    keep_last: int = 3) -> str:
+    """Checkpoint ``obj`` under ``directory/step_<k>`` (atomic, GC'd)."""
+    arrays, meta = pack(obj)
+    return ckpt.save_named(directory, arrays, step, keep_last=keep_last,
+                           extra_meta=meta)
+
+
+def load_checkpoint(directory: str, *, step: Optional[int] = None
+                    ) -> Tuple[Any, int]:
+    """Restore the newest valid step checkpoint; returns ``(obj, step)``."""
+    arrays, s, meta = ckpt.restore_named(directory, step=step)
+    return unpack(arrays, meta), s
+
+
+def has_checkpoint(directory: str) -> bool:
+    return bool(ckpt.list_steps(directory))
+
+
+def _json_safe(value: Any) -> Any:
+    """Coerce estimator params to JSON-stable types (tuples/arrays of
+    categorical field ids become int lists, numpy scalars become python)."""
+    if isinstance(value, (list, tuple, np.ndarray, frozenset, set)):
+        return sorted(int(v) for v in value)
+    if isinstance(value, np.generic):
+        return value.item()
+    return value
+
+
+def estimator_params_to_meta(params: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for k, v in params.items():
+        if k == "plan":
+            continue  # plans are runtime substrate choices, not model state
+        out[k] = _json_safe(v)
+    json.dumps(out)  # fail fast on anything non-serializable
+    return out

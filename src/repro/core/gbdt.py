@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.plan import ExecutionPlan
 from repro.core import losses as losses_mod
 from repro.core import tree as tree_mod
 from repro.core.binning import BinnedDataset
@@ -72,15 +73,29 @@ class GBDTModel:
     def loss(self) -> losses_mod.Loss:
         return losses_mod.get_loss(self.objective)
 
-    def predict_margin(self, codes, strategy: str = "auto") -> jax.Array:
+    def predict_margin(self, codes, strategy: Optional[str] = None, *,
+                       plan: Optional[ExecutionPlan] = None) -> jax.Array:
         codes = codes.codes if isinstance(codes, BinnedDataset) else codes
+        plan = self._resolve_plan(plan, strategy)
         out = ops.predict_ensemble(self.trees, codes,
                                    missing_bin=self.missing_bin,
-                                   depth=self.max_depth, strategy=strategy)
+                                   depth=self.max_depth, plan=plan)
         return out + self.base_margin
 
-    def predict(self, codes, strategy: str = "auto") -> jax.Array:
-        return self.loss.transform(self.predict_margin(codes, strategy))
+    def predict(self, codes, strategy: Optional[str] = None, *,
+                plan: Optional[ExecutionPlan] = None) -> jax.Array:
+        return self.loss.transform(
+            self.predict_margin(codes, strategy, plan=plan))
+
+    @staticmethod
+    def _resolve_plan(plan: Optional[ExecutionPlan],
+                      strategy: Optional[str]) -> ExecutionPlan:
+        """Model-level shim: the positional ``strategy`` string predates
+        plans and stays supported (silently) at this layer."""
+        base = plan if plan is not None else ExecutionPlan()
+        if strategy is not None and strategy != "auto":
+            base = base.replace(traversal_strategy=strategy)
+        return base.resolved()
 
     # -- (de)serialization for checkpointing ------------------------------
     def to_state(self) -> Dict:
@@ -124,8 +139,16 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
           eval_set: Optional[Tuple[BinnedDataset, jax.Array]] = None,
           init_model: Optional[GBDTModel] = None,
           callback: Optional[Callable[[int, GBDTModel], None]] = None,
-          verbose: bool = False) -> TrainResult:
-    """Fit a GBDT ensemble.  Deterministic per-tree RNG (fault-replayable)."""
+          verbose: bool = False,
+          plan: Optional[ExecutionPlan] = None) -> TrainResult:
+    """Fit a GBDT ensemble.  Deterministic per-tree RNG (fault-replayable).
+
+    ``plan`` selects the kernel strategies for every step; when omitted it
+    is lifted from the config's legacy per-step strategy strings.
+    """
+    if plan is None:
+        plan = ExecutionPlan.from_config(config)
+    plan = plan.resolved()
     loss = losses_mod.get_loss(config.objective)
     y = jnp.asarray(y, jnp.float32)
     n, F = data.codes.shape
@@ -142,9 +165,9 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
         trees = [TreeArrays(*[a[i] for a in init_model.trees])
                  for i in range(init_model.n_trees)]
         base_margin = init_model.base_margin
-        margins = init_model.predict_margin(data.codes,
-                                            config.traversal_strategy)
-        eval_margins = (init_model.predict_margin(eval_set[0].codes)
+        margins = init_model.predict_margin(data.codes, plan=plan)
+        eval_margins = (init_model.predict_margin(eval_set[0].codes,
+                                                  plan=plan)
                         if eval_set is not None else None)
     else:
         base_margin = float(loss.base_margin(y))
@@ -177,13 +200,10 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
                       is_cat_field=data.is_categorical,
                       field_mask=field_mask, lambda_=config.lambda_,
                       gamma=config.gamma,
-                      min_child_weight=config.min_child_weight,
-                      hist_strategy=config.hist_strategy)
+                      min_child_weight=config.min_child_weight, plan=plan)
         if config.grow_policy == "depthwise":
-            tree = tree_mod.fit_tree(
-                data.codes, data.codes_cm, g, h,
-                partition_strategy=config.partition_strategy,
-                host_offload_split=config.host_offload_split, **common)
+            tree = tree_mod.fit_tree(data.codes, data.codes_cm, g, h,
+                                     **common)
         else:
             tree = tree_mod.fit_tree_lossguide(
                 data.codes, data.codes_cm, g, h,
@@ -197,7 +217,7 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
         step_times["binning_split"] += t1 - t0
 
         # step ⑤ — one-tree traversal refreshes margins (and thus g, h)
-        delta = _predict_one_tree(tree, data, config.traversal_strategy)
+        delta = _predict_one_tree(tree, data, plan)
         margins = margins + delta
         margins.block_until_ready()
         t2 = time.perf_counter()
@@ -208,8 +228,7 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
         history["train_loss"].append(train_loss)
 
         if eval_set is not None:
-            ev_delta = _predict_one_tree(tree, eval_set[0],
-                                         config.traversal_strategy)
+            ev_delta = _predict_one_tree(tree, eval_set[0], plan)
             eval_margins = eval_margins + ev_delta
             ev = float(jnp.mean(loss.value(eval_margins,
                                            jnp.asarray(eval_set[1],
@@ -242,7 +261,7 @@ def _as_model(trees, base_margin, config, data, F) -> GBDTModel:
 
 
 def _predict_one_tree(tree: TreeArrays, data: BinnedDataset,
-                      strategy: str) -> jax.Array:
+                      plan: ExecutionPlan) -> jax.Array:
     """Step-⑤ traversal, using the paper's renumbered-column fetch when it
     saves bandwidth: a depth-D tree touches ≤ 2^D − 1 columns, so for wide
     datasets only those columns are gathered from the column-major copy."""
@@ -255,7 +274,6 @@ def _predict_one_tree(tree: TreeArrays, data: BinnedDataset,
                           jnp.arange(n_int, dtype=jnp.int32), -1)
         tree_c = tree._replace(feature=renum)
         return ops.traverse_tree(tree_c, cols.T,
-                                 missing_bin=data.missing_bin,
-                                 strategy=strategy)
+                                 missing_bin=data.missing_bin, plan=plan)
     return ops.traverse_tree(tree, data.codes, missing_bin=data.missing_bin,
-                             strategy=strategy)
+                             plan=plan)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.api.plan import ExecutionPlan
 from repro.core.binning import Binner, BinnedDataset
 from repro.core.gbdt import GBDTModel
 from repro.kernels import ops
@@ -42,12 +43,13 @@ def sharded_predict(mesh: Mesh, model: GBDTModel, codes) -> jax.Array:
         raise ValueError(f"{T} trees do not divide the model axis ({m}); "
                          "use pad_trees() first")
 
+    plan = ExecutionPlan.auto(traversal_strategy="reference")
+
     def local(codes_l, *tree_leaves):
         trees_l = TreeArrays(*tree_leaves)       # (T/m, ...) local trees
         out = ops.predict_ensemble(trees_l, codes_l,
                                    missing_bin=model.missing_bin,
-                                   depth=model.max_depth,
-                                   strategy="reference")
+                                   depth=model.max_depth, plan=plan)
         # paper §III-D: combine the per-chip tree outputs
         return jax.lax.psum(out, "model")
 
@@ -91,25 +93,26 @@ def feature_importance(model: GBDTModel, kind: str = "gain"
     weighting by subtree width).
     """
     feats = np.asarray(model.trees.feature)        # (T, n_int)
-    leaves = np.asarray(model.trees.leaf_value)    # (T, n_leaf)
+    leaves = np.asarray(model.trees.leaf_value, np.float64)  # (T, n_leaf)
     F = model.n_fields
     imp = np.zeros((F,), np.float64)
-    T, n_int = feats.shape
+    T = feats.shape[0]
     depth = model.max_depth
-    for t in range(T):
-        for pos in range(n_int):
-            f = feats[t, pos]
-            if f < 0:
-                continue
-            if kind == "split":
-                imp[f] += 1.0
-            else:
-                level = (pos + 1).bit_length() - 1
-                reps = 2 ** (depth - level)
-                base = (pos - (2 ** level - 1)) * reps
-                vals = leaves[t, base:base + reps]
-                w = reps if kind == "cover" else 1.0
-                imp[f] += w * float(np.var(vals))
+    if kind == "split":
+        valid = feats >= 0
+        np.add.at(imp, feats[valid], 1.0)
+    else:
+        # vectorized per level: the heap positions at ``level`` cover the
+        # bottom row in contiguous runs of reps = 2**(depth - level) slots,
+        # so one reshape turns the subtree-leaf variance into a segment op
+        for level in range(depth):
+            nn = 2 ** level
+            reps = 2 ** (depth - level)
+            f_lvl = feats[:, nn - 1:2 * nn - 1]                # (T, nn)
+            var = leaves.reshape(T, nn, reps).var(axis=2)      # (T, nn)
+            w = float(reps) if kind == "cover" else 1.0
+            valid = f_lvl >= 0
+            np.add.at(imp, f_lvl[valid], w * var[valid])
     s = imp.sum()
     return imp / s if s > 0 else imp
 
@@ -121,9 +124,10 @@ class GBDTPipeline:
     binner: Binner
     model: GBDTModel
 
-    def predict(self, X: np.ndarray, strategy: str = "auto") -> jax.Array:
+    def predict(self, X: np.ndarray, strategy: Optional[str] = None, *,
+                plan: Optional[ExecutionPlan] = None) -> jax.Array:
         data = self.binner.transform(np.asarray(X, dtype=np.float64))
-        return self.model.predict(data, strategy=strategy)
+        return self.model.predict(data, strategy=strategy, plan=plan)
 
     def to_state(self) -> Dict:
         return {

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.plan import ExecutionPlan, resolve_plan
 from repro.core import splits as splits_mod
 from repro.kernels import ops
 from repro.kernels.ref import TreeArrays
@@ -43,19 +44,27 @@ def _repeat_to_bottom(x, level: int, depth: int):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("depth", "n_bins", "missing_bin", "hist_strategy",
-                     "partition_strategy", "host_offload_split"))
+    static_argnames=("depth", "n_bins", "missing_bin", "plan",
+                     "hist_strategy", "partition_strategy",
+                     "host_offload_split"))
 def fit_tree(codes, codes_cm, g, h, *, depth: int, n_bins: int,
              missing_bin: int, is_cat_field, field_mask,
              lambda_: float, gamma: float, min_child_weight: float,
-             hist_strategy: str = "auto", partition_strategy: str = "auto",
-             host_offload_split: bool = False) -> TreeArrays:
+             plan: Optional[ExecutionPlan] = None,
+             hist_strategy: Optional[str] = None,
+             partition_strategy: Optional[str] = None,
+             host_offload_split: Optional[bool] = None) -> TreeArrays:
     """Grow one depth-``depth`` tree level-by-level (fixed shapes, jittable).
 
     codes: (n, F) uint8 row-major (step-① input);
     codes_cm: (F, n) uint8 column-major redundant copy (step-③ input);
-    g, h: (n,) float32 gradient statistics.
+    g, h: (n,) float32 gradient statistics.  ``plan`` selects the kernel
+    strategies (the legacy per-step string kwargs still work and override
+    the plan's fields).
     """
+    plan = resolve_plan(plan, hist_strategy=hist_strategy,
+                        partition_strategy=partition_strategy,
+                        host_offload_split=host_offload_split)
     n, F = codes.shape
     n_int = 2 ** depth - 1
     n_leaf = 2 ** depth
@@ -68,7 +77,7 @@ def fit_tree(codes, codes_cm, g, h, *, depth: int, n_bins: int,
     value_set = jnp.zeros((n_leaf,), bool)
 
     node_ids = jnp.zeros((n,), jnp.int32)          # level-local vertex ids
-    find = (splits_mod.find_best_splits_host if host_offload_split
+    find = (splits_mod.find_best_splits_host if plan.host_offload_split
             else splits_mod.find_best_splits)
 
     for level in range(depth):
@@ -78,7 +87,7 @@ def fit_tree(codes, codes_cm, g, h, *, depth: int, n_bins: int,
 
         # step ① — histogram-bin the gradient statistics of every vertex
         hist = ops.build_histogram(codes, g, h, node_ids, n_nodes=nn,
-                                   n_bins=n_bins, strategy=hist_strategy)
+                                   n_bins=n_bins, plan=plan)
         # step ② — best split per vertex (host-offloadable)
         best = find(hist, is_cat_field, field_mask, lambda_, gamma,
                     min_child_weight)
@@ -112,7 +121,7 @@ def fit_tree(codes, codes_cm, g, h, *, depth: int, n_bins: int,
             node_ids, codes_lvl.T,
             jnp.where(do_split, jnp.arange(nn, dtype=jnp.int32), -1),
             best.threshold, best.is_cat, best.default_left,
-            missing_bin=missing_bin, strategy=partition_strategy)
+            missing_bin=missing_bin, plan=plan)
 
     # bottom level: remaining vertices get leaf weights from a segment-sum
     Gb = jax.ops.segment_sum(g.astype(jnp.float32), node_ids, n_leaf)
@@ -131,13 +140,15 @@ def fit_tree_lossguide(codes, codes_cm, g, h, *, depth: int, n_bins: int,
                        missing_bin: int, is_cat_field, field_mask,
                        lambda_: float, gamma: float, min_child_weight: float,
                        max_leaves: Optional[int] = None,
-                       hist_strategy: str = "auto") -> TreeArrays:
+                       plan: Optional[ExecutionPlan] = None,
+                       hist_strategy: Optional[str] = None) -> TreeArrays:
     """Best-first growth; bins only the smaller child per split (§II-A).
 
     Control flow (the gain heap) runs on host — the paper itself argues this
     coordination is cheap relative to the record scans; the scans themselves
     (histogram of the smaller child, predicate masks) run on device.
     """
+    plan = resolve_plan(plan, hist_strategy=hist_strategy)
     n, F = codes.shape
     n_int = 2 ** depth - 1
     n_leaf_slots = 2 ** depth
@@ -154,7 +165,7 @@ def fit_tree_lossguide(codes, codes_cm, g, h, *, depth: int, n_bins: int,
     def hist_of(mask):
         return ops.build_histogram(
             codes, g * mask, h * mask, jnp.zeros((n,), jnp.int32),
-            n_nodes=1, n_bins=n_bins, strategy=hist_strategy)[0]  # (F, NB, 2)
+            n_nodes=1, n_bins=n_bins, plan=plan)[0]               # (F, NB, 2)
 
     def best_of(hist):
         d = splits_mod.find_best_splits(hist[None], is_cat_field, field_mask,

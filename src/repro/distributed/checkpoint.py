@@ -35,18 +35,18 @@ def _flatten(state: Any) -> Tuple[Dict[str, np.ndarray], Any]:
     return arrays, treedef
 
 
-def save(directory: str, state: Any, step: int, *,
-         keep_last: int = 3, extra_meta: Optional[Dict] = None) -> str:
-    """Two-phase atomic checkpoint write; returns the final path."""
-    os.makedirs(directory, exist_ok=True)
-    arrays, _ = _flatten(state)
+def write_payload_dir(path: str, arrays: Dict[str, np.ndarray],
+                      manifest: Dict) -> str:
+    """Two-phase atomic write of ``arrays.npz`` + ``manifest.json`` at
+    ``path``: write into ``path.tmp``, fsync, atomic rename.  The payload
+    sha256 is stamped into the manifest.  Shared by step checkpoints and
+    the ``repro.api`` model bundles."""
     buf = io.BytesIO()
     np.savez(buf, **arrays)
     payload = buf.getvalue()
-    digest = hashlib.sha256(payload).hexdigest()
+    manifest = dict(manifest, sha256=hashlib.sha256(payload).hexdigest())
 
-    final = os.path.join(directory, f"step_{step}")
-    tmp = final + ".tmp"
+    tmp = path + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
@@ -54,16 +54,37 @@ def save(directory: str, state: Any, step: int, *,
         f.write(payload)
         f.flush()
         os.fsync(f.fileno())
-    manifest = {"step": step, "sha256": digest,
-                "n_leaves": len(arrays), "meta": extra_meta or {}}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)  # atomic commit
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)  # atomic commit
+    return path
 
+
+def save(directory: str, state: Any, step: int, *,
+         keep_last: int = 3, extra_meta: Optional[Dict] = None) -> str:
+    """Two-phase atomic checkpoint write; returns the final path."""
+    arrays, _ = _flatten(state)
+    return save_named(directory, arrays, step, keep_last=keep_last,
+                      extra_meta=extra_meta)
+
+
+def save_named(directory: str, arrays: Dict[str, np.ndarray], step: int, *,
+               keep_last: int = 3, extra_meta: Optional[Dict] = None) -> str:
+    """Checkpoint a flat ``{name: array}`` dict with its names preserved.
+
+    Unlike :func:`save` (whose positional leaf naming forces restore
+    callers to supply a ``like`` pytree), named payloads restore
+    self-describing — the unified ``repro.api`` serialization rides on
+    this."""
+    os.makedirs(directory, exist_ok=True)
+    final = write_payload_dir(
+        os.path.join(directory, f"step_{step}"), arrays,
+        {"step": step, "n_leaves": len(arrays),
+         "names": sorted(arrays), "meta": extra_meta or {}})
     _gc(directory, keep_last)
     return final
 
@@ -97,6 +118,29 @@ def _validate(path: str) -> Optional[Dict]:
         return manifest
     except (OSError, json.JSONDecodeError, KeyError):
         return None
+
+
+def validate_payload_dir(path: str) -> Optional[Dict]:
+    """Public alias of the manifest/sha256 validation (api.serialize)."""
+    return _validate(path)
+
+
+def restore_named(directory: str, *, step: Optional[int] = None
+                  ) -> Tuple[Dict[str, np.ndarray], int, Dict]:
+    """Restore the newest valid *named* checkpoint as a ``{name: array}``
+    dict (no ``like`` pytree needed — names travel in the payload)."""
+    steps = list_steps(directory)
+    if step is not None:
+        steps = [s for s in steps if s == step]
+    for s in reversed(steps):
+        path = os.path.join(directory, f"step_{s}")
+        manifest = _validate(path)
+        if manifest is None or "names" not in manifest:
+            continue  # corrupt/partial/legacy — fall back to older
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            arrays = {k: z[k] for k in manifest["names"]}
+        return arrays, s, manifest["meta"]
+    raise FileNotFoundError(f"no valid named checkpoint under {directory!r}")
 
 
 def restore(directory: str, like: Any, *,

@@ -26,11 +26,23 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.api.plan import ExecutionPlan, resolve_plan
 from repro.core import splits as splits_mod
 from repro.core import tree as tree_mod
 from repro.kernels import ops
 from repro.kernels.ref import TreeArrays
 from repro.launch.mesh import data_axes
+
+
+def _legacy_distributed_plan(plan: Optional[ExecutionPlan],
+                             hist_strategy: Optional[str]) -> ExecutionPlan:
+    """Resolve the growers' plan.  The partition step is pinned to the
+    reference kernel: it runs inside shard_map'd local functions where the
+    Pallas path is untested, and the pre-plan code hardcoded it."""
+    if plan is None:      # historical default: scatter histograms
+        plan = ExecutionPlan(hist_strategy=hist_strategy or "scatter")
+    plan = resolve_plan(plan, hist_strategy=hist_strategy)
+    return plan.replace(partition_strategy="reference")
 
 
 def gbdt_shardings(mesh: Mesh):
@@ -76,7 +88,9 @@ def shard_dataset(data, mesh: Mesh):
 # explicit shard_map path — the paper's communication schedule, verbatim
 # --------------------------------------------------------------------------
 def distributed_histogram(mesh: Mesh, codes, g, h, node_ids, *,
-                          n_nodes: int, n_bins: int, strategy: str = "auto"):
+                          n_nodes: int, n_bins: int,
+                          plan: Optional[ExecutionPlan] = None,
+                          strategy: Optional[str] = None):
     """Step ① with explicit collectives.
 
     Local kernel on (records/D, fields/M) shard, then one psum over the data
@@ -84,11 +98,12 @@ def distributed_histogram(mesh: Mesh, codes, g, h, node_ids, *,
     (group-by-field at chip granularity): (n_nodes, F, n_bins, 2).
     """
     da = data_axes(mesh)
+    plan = resolve_plan(plan, hist_strategy=strategy)
 
     def local(codes_l, g_l, h_l, node_l):
         hist_l = ops.build_histogram(codes_l, g_l, h_l, node_l,
                                      n_nodes=n_nodes, n_bins=n_bins,
-                                     strategy=strategy)
+                                     plan=plan)
         # the paper's end-of-step-① reduction across record partitions
         return jax.lax.psum(hist_l, da)
 
@@ -181,7 +196,8 @@ def distributed_fit_tree(mesh: Mesh, codes, codes_cm, g, h, *, depth: int,
                          n_bins: int, missing_bin: int, is_cat_field,
                          field_mask, lambda_: float, gamma: float,
                          min_child_weight: float,
-                         hist_strategy: str = "scatter",
+                         plan: Optional[ExecutionPlan] = None,
+                         hist_strategy: Optional[str] = None,
                          hist_dtype=None, partition_bits: bool = False):
     """Level-wise grower with the paper's EXPLICIT communication schedule.
 
@@ -195,6 +211,7 @@ def distributed_fit_tree(mesh: Mesh, codes, codes_cm, g, h, *, depth: int,
     from repro.kernels.ref import TreeArrays
     from repro.core.splits import leaf_weight
 
+    plan = _legacy_distributed_plan(plan, hist_strategy)
     da = data_axes(mesh)
     F = codes.shape[1]
     n = codes.shape[0]
@@ -210,7 +227,7 @@ def distributed_fit_tree(mesh: Mesh, codes, codes_cm, g, h, *, depth: int,
 
     def local_hist(codes_l, g_l, h_l, node_l, nn):
         hist_l = ops.build_histogram(codes_l, g_l, h_l, node_l, n_nodes=nn,
-                                     n_bins=n_bins, strategy=hist_strategy)
+                                     n_bins=n_bins, plan=plan)
         if hist_dtype is not None:      # compress the cross-shard reduction
             hist_l = hist_l.astype(hist_dtype)
         return jax.lax.psum(hist_l, da).astype(jnp.float32)
@@ -253,7 +270,7 @@ def distributed_fit_tree(mesh: Mesh, codes, codes_cm, g, h, *, depth: int,
                 node_ids, codes_lvl.T,
                 jnp.where(do_split, jnp.arange(nn, dtype=jnp.int32), -1),
                 best.threshold, best.is_cat, best.default_left,
-                missing_bin=missing_bin, strategy="reference")
+                missing_bin=missing_bin, plan=plan)
 
     Gb = jax.ops.segment_sum(g.astype(jnp.float32), node_ids, n_leaf)
     Hb = jax.ops.segment_sum(h.astype(jnp.float32), node_ids, n_leaf)
@@ -268,7 +285,8 @@ def distributed_fit_tree(mesh: Mesh, codes, codes_cm, g, h, *, depth: int,
 # --------------------------------------------------------------------------
 def pjit_fit_tree(mesh: Mesh, *, depth: int, n_bins: int, missing_bin: int,
                   lambda_: float, gamma: float, min_child_weight: float,
-                  hist_strategy: str = "scatter",
+                  plan: Optional[ExecutionPlan] = None,
+                  hist_strategy: Optional[str] = None,
                   donate: bool = False):
     """jit the unmodified level-wise grower with mesh shardings.
 
@@ -277,12 +295,12 @@ def pjit_fit_tree(mesh: Mesh, *, depth: int, n_bins: int, missing_bin: int,
     path spells out.
     """
     sh = gbdt_shardings(mesh)
+    plan = _legacy_distributed_plan(plan, hist_strategy)
 
     fn = functools.partial(
         tree_mod.fit_tree, depth=depth, n_bins=n_bins,
         missing_bin=missing_bin, lambda_=lambda_, gamma=gamma,
-        min_child_weight=min_child_weight, hist_strategy=hist_strategy,
-        partition_strategy="reference")
+        min_child_weight=min_child_weight, plan=plan)
 
     def wrapped(codes, codes_cm, g, h, is_cat_field, field_mask):
         return fn(codes, codes_cm, g, h, is_cat_field=is_cat_field,

@@ -1,8 +1,9 @@
 """jit'd dispatch wrappers over the Pallas kernels and their alternatives.
 
-Every accelerated GBDT step exposes a ``strategy`` switch so the benchmark
-harness can reproduce the paper's machine comparison *as algorithm
-strategies at equal memory traffic*:
+Every accelerated GBDT step dispatches through an
+:class:`repro.api.ExecutionPlan` so the benchmark harness can reproduce the
+paper's machine comparison *as algorithm strategies at equal memory
+traffic*:
 
   histogram (step ①):
     * ``scatter``          — single shared scatter-RMW (multicore analog;
@@ -19,22 +20,29 @@ strategies at equal memory traffic*:
 
 On non-TPU backends the Pallas kernels run in interpret mode (Python
 execution of the kernel body) — numerically identical, used for validation.
+
+Preferred calling convention: ``build_histogram(..., plan=plan)`` with a
+resolved plan.  The legacy loose ``strategy=`` / ``interpret=`` kwargs keep
+working through a thin deprecation shim (see ``repro.api.plan.resolve_plan``).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.api.plan import ExecutionPlan, HIST_STRATEGIES, resolve_plan
 from repro.kernels import histogram as _hist_k
 from repro.kernels import partition as _part_k
 from repro.kernels import traversal as _trav_k
 from repro.kernels import ref as _ref
 from repro.kernels.ref import TreeArrays
 
-HIST_STRATEGIES = ("scatter", "scatter_private", "sort", "onehot",
-                   "pallas_grouped", "pallas_packed")
+__all__ = ["HIST_STRATEGIES", "onehot_matmul", "build_histogram",
+           "partition_level", "traverse_tree", "predict_ensemble",
+           "default_hist_strategy"]
 
 
 def _on_tpu() -> bool:
@@ -42,7 +50,7 @@ def _on_tpu() -> bool:
 
 
 def default_hist_strategy() -> str:
-    return "pallas_grouped" if _on_tpu() else "scatter"
+    return ExecutionPlan().resolved().hist_strategy
 
 
 # --------------------------------------------------------------------------
@@ -137,13 +145,17 @@ def _hist_onehot(codes, g, h, node_ids, n_nodes, n_bins, chunk=2048, fblk=8):
 
 
 def build_histogram(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
-                    strategy: str = "auto", interpret: bool | None = None,
-                    records_per_block: int = 512, fields_per_block: int = 8):
+                    plan: Optional[ExecutionPlan] = None,
+                    strategy: Optional[str] = None,
+                    interpret: Optional[bool] = None,
+                    records_per_block: Optional[int] = None,
+                    fields_per_block: Optional[int] = None):
     """Dispatch: (n, F) codes -> (n_nodes, F, n_bins, 2) float32 histogram."""
-    if strategy == "auto":
-        strategy = default_hist_strategy()
-    if interpret is None:
-        interpret = not _on_tpu()
+    plan = resolve_plan(plan, _caller="build_histogram",
+                        hist_strategy=strategy, interpret=interpret,
+                        records_per_block=records_per_block,
+                        fields_per_block=fields_per_block)
+    strategy = plan.hist_strategy
     if strategy == "scatter":
         return _hist_scatter(codes, g, h, node_ids, n_nodes, n_bins)
     if strategy == "scatter_private":
@@ -155,9 +167,9 @@ def build_histogram(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
     if strategy in ("pallas_grouped", "pallas_packed"):
         return _hist_k.histogram_pallas(
             codes, g, h, node_ids, n_nodes=n_nodes, n_bins=n_bins,
-            records_per_block=records_per_block,
-            fields_per_block=fields_per_block,
-            packed=(strategy == "pallas_packed"), interpret=interpret)
+            records_per_block=plan.records_per_block,
+            fields_per_block=plan.fields_per_block,
+            packed=(strategy == "pallas_packed"), interpret=plan.interpret)
     raise ValueError(f"unknown histogram strategy {strategy!r}; "
                      f"choose from {HIST_STRATEGIES}")
 
@@ -167,51 +179,44 @@ def build_histogram(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
 # --------------------------------------------------------------------------
 def partition_level(node_ids, codes_lvl, split_feature, split_threshold,
                     split_is_cat, split_default_left, *, missing_bin: int,
-                    strategy: str = "auto", interpret: bool | None = None):
-    if strategy == "auto":
-        strategy = "pallas" if _on_tpu() else "reference"
-    if interpret is None:
-        interpret = not _on_tpu()
-    if strategy == "reference":
+                    plan: Optional[ExecutionPlan] = None,
+                    strategy: Optional[str] = None,
+                    interpret: Optional[bool] = None):
+    plan = resolve_plan(plan, _caller="partition_level",
+                        partition_strategy=strategy, interpret=interpret)
+    if plan.partition_strategy == "reference":
         return _ref.partition_ref(node_ids, codes_lvl, split_feature,
                                   split_threshold, split_is_cat,
                                   split_default_left, missing_bin)
-    if strategy == "pallas":
-        return _part_k.partition_pallas(
-            node_ids, codes_lvl, split_feature, split_threshold,
-            split_is_cat, split_default_left, missing_bin=missing_bin,
-            interpret=interpret)
-    raise ValueError(f"unknown partition strategy {strategy!r}")
+    return _part_k.partition_pallas(
+        node_ids, codes_lvl, split_feature, split_threshold,
+        split_is_cat, split_default_left, missing_bin=missing_bin,
+        interpret=plan.interpret)
 
 
 # --------------------------------------------------------------------------
 # step ⑤ — traversal / batch inference
 # --------------------------------------------------------------------------
 def traverse_tree(tree: TreeArrays, codes, *, missing_bin: int,
-                  strategy: str = "auto", interpret: bool | None = None):
-    if strategy == "auto":
-        strategy = "pallas" if _on_tpu() else "reference"
-    if interpret is None:
-        interpret = not _on_tpu()
-    if strategy == "reference":
+                  plan: Optional[ExecutionPlan] = None,
+                  strategy: Optional[str] = None,
+                  interpret: Optional[bool] = None):
+    plan = resolve_plan(plan, _caller="traverse_tree",
+                        traversal_strategy=strategy, interpret=interpret)
+    if plan.traversal_strategy == "reference":
         return _ref.traverse_ref(tree, codes, missing_bin)
-    if strategy == "pallas":
-        return _trav_k.traverse_pallas(tree, codes, missing_bin=missing_bin,
-                                       interpret=interpret)
-    raise ValueError(f"unknown traversal strategy {strategy!r}")
+    return _trav_k.traverse_pallas(tree, codes, missing_bin=missing_bin,
+                                   interpret=plan.interpret)
 
 
 def predict_ensemble(trees: TreeArrays, codes, *, missing_bin: int,
-                     depth: int, strategy: str = "auto",
-                     interpret: bool | None = None):
-    if strategy == "auto":
-        strategy = "pallas" if _on_tpu() else "reference"
-    if interpret is None:
-        interpret = not _on_tpu()
-    if strategy == "reference":
+                     depth: int, plan: Optional[ExecutionPlan] = None,
+                     strategy: Optional[str] = None,
+                     interpret: Optional[bool] = None):
+    plan = resolve_plan(plan, _caller="predict_ensemble",
+                        traversal_strategy=strategy, interpret=interpret)
+    if plan.traversal_strategy == "reference":
         return _ref.predict_ensemble_ref(trees, codes, missing_bin)
-    if strategy == "pallas":
-        return _trav_k.predict_ensemble_pallas(
-            trees, codes, missing_bin=missing_bin, depth=depth,
-            interpret=interpret)
-    raise ValueError(f"unknown ensemble strategy {strategy!r}")
+    return _trav_k.predict_ensemble_pallas(
+        trees, codes, missing_bin=missing_bin, depth=depth,
+        interpret=plan.interpret)

@@ -1,35 +1,72 @@
-"""Batched serving driver: prefill a batch of prompts, then decode.
+"""Batched serving drivers.
 
-Runs any --arch at smoke scale on CPU (full scale is exercised through
-launch.dryrun's prefill/decode cells).  Demonstrates the production
-serving loop: one prefill, then jit'd single-token decode steps against
-the (ring-buffered where SWA) KV/SSM caches.
+Two entry modes:
+  * ``--mode gbdt`` (default) — the paper's workload: load a trained GBDT
+    bundle through the unified ``repro.api`` serialization and stream
+    record batches through ensemble inference (§III-D).  When no bundle
+    exists at ``--model-dir`` a small demo model is trained and saved
+    first, so the driver is self-contained.
+  * ``--mode lm --arch <id>`` — the assigned-architecture LM stack at
+    smoke scale: one prefill, then jit'd single-token decode steps against
+    the (ring-buffered where SWA) KV/SSM caches.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b \
-        --batch 4 --prompt-len 32 --gen 32
+    PYTHONPATH=src python -m repro.launch.serve --mode gbdt --batch 4096
+    PYTHONPATH=src python -m repro.launch.serve --mode lm \
+        --arch mixtral-8x22b --batch 4 --prompt-len 32 --gen 32
 """
 from __future__ import annotations
 
 import argparse
 import functools
+import os
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCH_IDS, get_smoke
-from repro.models import lm
+
+def run_gbdt(args):
+    from repro.api import (BoosterClassifier, ExecutionPlan, load,
+                           make_tabular)
+
+    plan = ExecutionPlan.auto()
+    if not os.path.isdir(args.model_dir):
+        print(f"[serve] no bundle at {args.model_dir}; training demo model")
+        X, y, cats = make_tabular(20_000, 20, 8, n_cats=12, task="binary",
+                                  seed=0)
+        est = BoosterClassifier(n_trees=100, max_depth=6, learning_rate=0.2,
+                                max_bins=64, categorical_fields=cats)
+        est.fit(X, y, plan=plan)
+        est.save(args.model_dir)
+    est = load(args.model_dir)
+    print(f"[serve] loaded {type(est).__name__} with {est.n_trees_} trees "
+          f"({plan.describe()})")
+
+    # serving loop: raw NaN-carrying batches in, predictions out
+    n_fields = est.model_.n_fields
+    rng = np.random.default_rng(0)
+    warm = rng.normal(size=(args.batch, n_fields))
+    jax.block_until_ready(est.predict_margin(warm, plan=plan))  # compile
+
+    total, t_total = 0, 0.0
+    for i in range(args.requests):
+        Xb = rng.normal(size=(args.batch, n_fields))
+        Xb[rng.random(Xb.shape) < 0.02] = np.nan     # missing values
+        t0 = time.perf_counter()
+        out = np.asarray(est.predict(Xb, plan=plan))  # blocks: host labels
+        dt = time.perf_counter() - t0
+        total += args.batch
+        t_total += dt
+        print(f"[serve] request {i}: {args.batch} records in {dt*1e3:.1f} ms"
+              f" ({args.batch/dt:.0f} rec/s)")
+    print(f"[serve] sustained: {total/t_total:.0f} records/s "
+          f"over {args.requests} requests")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-14b", choices=ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--greedy", action="store_true", default=True)
-    args = ap.parse_args()
+def run_lm(args):
+    from repro.configs import get_smoke
+    from repro.models import lm
 
     cfg = get_smoke(args.arch)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
@@ -71,6 +108,28 @@ def main():
     print(f"[serve] decoded {args.gen - 1} steps x {B} seqs: "
           f"{t_dec*1e3:.1f} ms ({B*(args.gen-1)/t_dec:.0f} tok/s)")
     print(f"[serve] first sequence: {gen[0][:16].tolist()} ...")
+
+
+def main():
+    from repro.configs import ARCH_IDS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="gbdt", choices=["gbdt", "lm"])
+    # gbdt serving
+    ap.add_argument("--model-dir", default="/tmp/repro_serve_bundle")
+    ap.add_argument("--requests", type=int, default=8)
+    # lm serving
+    ap.add_argument("--arch", default="qwen3-14b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="records per request (gbdt, default 4096) or "
+                         "sequences (lm, default 4)")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--greedy", action="store_true", default=True)
+    args = ap.parse_args()
+    if args.batch is None:
+        args.batch = 4096 if args.mode == "gbdt" else 4
+    (run_gbdt if args.mode == "gbdt" else run_lm)(args)
 
 
 if __name__ == "__main__":

@@ -22,46 +22,29 @@ import jax.numpy as jnp
 
 
 def run_gbdt(args):
-    from repro.core import GBDTConfig, GBDTModel, bin_dataset, train
-    from repro.data import paper_dataset
-    from repro.distributed import checkpoint as ckpt
+    from repro.api import (BoosterClassifier, BoosterRegressor,
+                           ExecutionPlan, paper_dataset)
     from repro.distributed.fault import StepJournal
 
     X, y, cats, spec = paper_dataset(args.dataset,
                                      n_override=args.records)
-    data = bin_dataset(X, max_bins=args.max_bins,
-                       categorical_fields=cats)
-    objective = ("binary:logistic" if spec.task == "binary"
-                 else "reg:squarederror")
-    cfg = GBDTConfig(n_trees=args.trees, max_depth=args.depth,
-                     learning_rate=args.lr, objective=objective,
-                     hist_strategy=args.strategy, seed=args.seed)
+    klass = BoosterClassifier if spec.task == "binary" else BoosterRegressor
+    est = klass(n_trees=args.trees, max_depth=args.depth,
+                learning_rate=args.lr, max_bins=args.max_bins,
+                categorical_fields=cats, seed=args.seed)
     journal = StepJournal(os.path.join(args.ckpt_dir, "journal.jsonl"))
-
-    init_model = None
-    steps = ckpt.list_steps(args.ckpt_dir)
-    if steps:
-        probe = train(GBDTConfig(n_trees=1, max_depth=args.depth,
-                                 objective=objective,
-                                 hist_strategy="scatter"), data, y)
-        state, step, _ = ckpt.restore(args.ckpt_dir,
-                                      like=probe.model.to_state())
-        init_model = GBDTModel.from_state(state)
-        print(f"[train] resuming at tree {step}")
-        import dataclasses
-        cfg = dataclasses.replace(cfg, n_trees=args.trees - step)
 
     def cb(t_idx, model):
         if (t_idx + 1) % args.ckpt_every == 0:
-            ckpt.save(args.ckpt_dir, model.to_state(), step=t_idx + 1)
             journal.append(t_idx, {})
 
-    res = train(cfg, data, y, init_model=init_model, callback=cb,
-                verbose=True)
-    ckpt.save(args.ckpt_dir, res.model.to_state(),
-              step=res.model.n_trees)
-    print(f"[train] done: {res.model.n_trees} trees, "
-          f"loss {res.history['train_loss'][-1]:.5f}")
+    # checkpoint_dir resumes from the newest valid step and keeps writing
+    # atomic, sha-verified bundles every --ckpt-every trees
+    est.fit(X, y, plan=ExecutionPlan.auto(hist_strategy=args.strategy),
+            checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every,
+            callback=cb, verbose=True)
+    loss = est.history_.get("train_loss") or [float("nan")]
+    print(f"[train] done: {est.n_trees_} trees, loss {loss[-1]:.5f}")
 
 
 def run_lm(args):

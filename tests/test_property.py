@@ -1,24 +1,29 @@
-"""Hypothesis property tests on the system's core invariants."""
+"""Property tests on the system's core invariants.
+
+The randomized-search versions need ``hypothesis``; when it is missing
+(e.g. a minimal container) collection must not fail, so the import is
+guarded and a deterministic fixed-seed fallback of every invariant runs
+instead — same checks, fixed sample of the input space.
+"""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core.splits import find_best_splits
 from repro.kernels import ops, ref
 from repro.kernels.ref import TreeArrays
 
-_shapes = st.tuples(
-    st.integers(min_value=1, max_value=400),   # n records
-    st.integers(min_value=1, max_value=9),     # fields
-    st.integers(min_value=2, max_value=16),    # bins
-    st.integers(min_value=1, max_value=4),     # nodes
-)
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - depends on the container
+    HAVE_HYPOTHESIS = False
 
 
-@settings(max_examples=25, deadline=None)
-@given(_shapes, st.integers(0, 2 ** 31 - 1),
-       st.sampled_from(["scatter", "sort", "onehot", "pallas_grouped"]))
-def test_histogram_equivalence_property(shape, seed, strategy):
+# --------------------------------------------------------------------------
+# the invariants, parameterized over concrete draws (shared by both modes)
+# --------------------------------------------------------------------------
+def check_histogram_equivalence(shape, seed, strategy):
     n, F, NB, NN = shape
     rng = np.random.default_rng(seed)
     codes = jnp.asarray(rng.integers(0, NB, (n, F)), jnp.uint8)
@@ -32,9 +37,7 @@ def test_histogram_equivalence_property(shape, seed, strategy):
                                rtol=3e-4, atol=3e-4)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 500), st.integers(0, 2 ** 31 - 1))
-def test_histogram_permutation_invariance(n, seed):
+def check_histogram_permutation_invariance(n, seed):
     """Histogram is a sum — any record permutation yields the same result."""
     rng = np.random.default_rng(seed)
     codes = rng.integers(0, 8, (n, 3)).astype(np.uint8)
@@ -52,9 +55,7 @@ def test_histogram_permutation_invariance(n, seed):
                                rtol=1e-4, atol=1e-5)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
-def test_split_gain_nonneg_additivity(n_bins, seed):
+def check_split_gain_nonneg_additivity(n_bins, seed):
     """Children gradient sums reconstruct the parent (hist subtraction
     trick soundness): GL + GR == Gp for the chosen split."""
     rng = np.random.default_rng(seed)
@@ -70,9 +71,7 @@ def test_split_gain_nonneg_additivity(n_bins, seed):
     np.testing.assert_allclose(GL + GR, Gp, rtol=1e-5)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 5), st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
-def test_traversal_reaches_valid_leaf(depth, n, seed):
+def check_traversal_reaches_valid_leaf(depth, n, seed):
     rng = np.random.default_rng(seed)
     n_int, n_leaf = 2 ** depth - 1, 2 ** depth
     n_cols, n_bins = 4, 8
@@ -91,9 +90,7 @@ def test_traversal_reaches_valid_leaf(depth, n, seed):
     np.testing.assert_allclose(got, out, rtol=1e-6)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 400), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
-def test_partition_conserves_records(n, nn, seed):
+def check_partition_conserves_records(n, nn, seed):
     rng = np.random.default_rng(seed)
     node_ids = jnp.asarray(rng.integers(0, nn, n), jnp.int32)
     codes = jnp.asarray(rng.integers(0, 8, (n, nn)), jnp.uint8)
@@ -104,3 +101,84 @@ def test_partition_conserves_records(n, nn, seed):
     child = np.asarray(ref.partition_ref(node_ids, codes, sf, st_, sc, sd, 7))
     parent = np.asarray(node_ids)
     assert (child // 2 == parent).all()
+
+
+# --------------------------------------------------------------------------
+# hypothesis-driven search (when available)
+# --------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    _shapes = st.tuples(
+        st.integers(min_value=1, max_value=400),   # n records
+        st.integers(min_value=1, max_value=9),     # fields
+        st.integers(min_value=2, max_value=16),    # bins
+        st.integers(min_value=1, max_value=4),     # nodes
+    )
+
+    @settings(max_examples=25, deadline=None)
+    @given(_shapes, st.integers(0, 2 ** 31 - 1),
+           st.sampled_from(["scatter", "sort", "onehot", "pallas_grouped"]))
+    def test_histogram_equivalence_property(shape, seed, strategy):
+        check_histogram_equivalence(shape, seed, strategy)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 500), st.integers(0, 2 ** 31 - 1))
+    def test_histogram_permutation_invariance(n, seed):
+        check_histogram_permutation_invariance(n, seed)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+    def test_split_gain_nonneg_additivity(n_bins, seed):
+        check_split_gain_nonneg_additivity(n_bins, seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 5), st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
+    def test_traversal_reaches_valid_leaf(depth, n, seed):
+        check_traversal_reaches_valid_leaf(depth, n, seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 400), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+    def test_partition_conserves_records(n, nn, seed):
+        check_partition_conserves_records(n, nn, seed)
+
+
+# --------------------------------------------------------------------------
+# deterministic fallback — always collectable, runs the same invariants on
+# a fixed sample when hypothesis is absent
+# --------------------------------------------------------------------------
+needs_fallback = pytest.mark.skipif(
+    HAVE_HYPOTHESIS, reason="hypothesis present: randomized versions run")
+
+
+@needs_fallback
+@pytest.mark.parametrize("strategy", ["scatter", "sort", "onehot",
+                                      "pallas_grouped"])
+@pytest.mark.parametrize("shape,seed", [((1, 1, 2, 1), 0),
+                                        ((97, 5, 16, 4), 1),
+                                        ((400, 9, 7, 3), 2)])
+def test_histogram_equivalence_fallback(shape, seed, strategy):
+    check_histogram_equivalence(shape, seed, strategy)
+
+
+@needs_fallback
+@pytest.mark.parametrize("n,seed", [(1, 0), (100, 1), (500, 2)])
+def test_histogram_permutation_invariance_fallback(n, seed):
+    check_histogram_permutation_invariance(n, seed)
+
+
+@needs_fallback
+@pytest.mark.parametrize("n_bins,seed", [(2, 0), (17, 1), (64, 2)])
+def test_split_gain_nonneg_additivity_fallback(n_bins, seed):
+    check_split_gain_nonneg_additivity(n_bins, seed)
+
+
+@needs_fallback
+@pytest.mark.parametrize("depth,n,seed", [(1, 1, 0), (3, 100, 1),
+                                          (5, 300, 2)])
+def test_traversal_reaches_valid_leaf_fallback(depth, n, seed):
+    check_traversal_reaches_valid_leaf(depth, n, seed)
+
+
+@needs_fallback
+@pytest.mark.parametrize("n,nn,seed", [(1, 1, 0), (128, 4, 1), (400, 8, 2)])
+def test_partition_conserves_records_fallback(n, nn, seed):
+    check_partition_conserves_records(n, nn, seed)

@@ -24,8 +24,9 @@ def main() -> None:
                     help="comma-separated bench names to run")
     args = ap.parse_args()
 
-    from benchmarks import (bench_breakdown, bench_inference, bench_opts,
-                            bench_scaling, bench_training)
+    from benchmarks import (bench_breakdown, bench_inference,
+                            bench_multiclass, bench_opts, bench_scaling,
+                            bench_training)
     benches = {
         "breakdown": lambda: bench_breakdown.run(scale=args.scale),
         "training": lambda: bench_training.run(scale=args.scale),
@@ -33,6 +34,7 @@ def main() -> None:
         "scaling": lambda: bench_scaling.run(base_scale=args.scale),
         "inference": lambda: bench_inference.run(
             n=max(2000, int(20000 * args.scale))),
+        "multiclass": lambda: bench_multiclass.run(scale=args.scale),
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

@@ -20,7 +20,7 @@ from repro.api import serialize
 from repro.api.plan import ExecutionPlan
 from repro.core.binning import Binner
 from repro.core.gbdt import (GBDTConfig, GBDTModel, TrainResult,
-                             _predict_one_tree, train)
+                             _predict_forest, _predict_one_tree, train)
 from repro.core.inference import (GBDTPipeline, feature_importance,
                                   pad_trees, sharded_predict)
 from repro.kernels.ref import TreeArrays
@@ -30,7 +30,7 @@ _PARAM_DEFAULTS: Dict[str, Any] = dict(
     min_child_weight=1.0, objective=None, subsample=1.0,
     colsample_bytree=1.0, grow_policy="depthwise", max_leaves=None,
     early_stopping_rounds=None, max_bins=256, categorical_fields=None,
-    seed=0, plan=None)
+    n_classes=None, seed=0, plan=None)
 
 
 class NotFittedError(RuntimeError):
@@ -138,16 +138,28 @@ class BoosterEstimator:
             plan = self.plan
         return (plan if plan is not None else ExecutionPlan()).resolved()
 
-    def _config(self, n_trees: int) -> GBDTConfig:
+    def _resolve_objective(self, y: np.ndarray
+                           ) -> Tuple[str, Optional[int]]:
+        """(objective, n_classes) for this fit.  The classifier overrides
+        this to auto-detect multi-class label sets."""
+        return self.objective or self._default_objective, self.n_classes
+
+    def _config(self, n_trees: int, objective: Optional[str] = None,
+                n_classes: Optional[int] = None) -> GBDTConfig:
+        """``objective``/``n_classes`` are the *resolved* pair from
+        ``_resolve_objective``.  ``n_classes`` is used verbatim — a
+        resolved scalar objective deliberately carries K=None, so unlike
+        ``objective`` it must NOT fall back to the constructor param."""
         return GBDTConfig(
             n_trees=n_trees, max_depth=self.max_depth,
             learning_rate=self.learning_rate, lambda_=self.lambda_,
             gamma=self.gamma, min_child_weight=self.min_child_weight,
-            objective=self.objective or self._default_objective,
+            objective=objective or self.objective or self._default_objective,
             subsample=self.subsample,
             colsample_bytree=self.colsample_bytree,
             grow_policy=self.grow_policy, max_leaves=self.max_leaves,
             early_stopping_rounds=self.early_stopping_rounds,
+            n_classes=n_classes,
             seed=self.seed)
 
     # -- fit ---------------------------------------------------------------
@@ -173,7 +185,9 @@ class BoosterEstimator:
         """
         plan = self._resolve_plan(plan)
         X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y)
         n_trees = self.n_trees
+        objective, n_classes = self._resolve_objective(y)
 
         init_model, binner = self._warm_start(xgb_model)
         if checkpoint_dir is not None and serialize.has_checkpoint(
@@ -194,26 +208,53 @@ class BoosterEstimator:
                     restored = None
                 if restored is not None:
                     init_model, binner = self._warm_parts(restored)
-                    n_trees = max(0, self.n_trees - init_model.n_trees)
+                    # multi-class rounds grow K trees each — count rounds
+                    n_trees = max(0, self.n_trees - init_model.n_rounds)
                     if verbose:
                         print(f"[{type(self).__name__}] resuming from "
                               f"checkpoint step {step} "
-                              f"({init_model.n_trees} trees)")
+                              f"({init_model.n_rounds} rounds)")
 
         if init_model is not None:
             # fail early with a clear message instead of a shape error
             # when stacking warm-start trees with freshly grown ones
-            obj = self.objective or self._default_objective
             if init_model.max_depth != self.max_depth:
                 raise ValueError(
                     f"warm-start/checkpoint model has max_depth="
                     f"{init_model.max_depth} but this estimator is "
                     f"configured with max_depth={self.max_depth}")
-            if init_model.objective != obj:
+            if init_model.n_classes > 1:
+                # the fitted model's objective/K win: labels observed in a
+                # continuation batch are only a LOWER bound on K (the batch
+                # may lack the highest classes), so the classifier's
+                # auto-detection must not narrow — or flip to binary — an
+                # existing softmax model.  Non-classification objectives
+                # (an explicit setting, or a regressor's default) are a
+                # genuine mismatch.
+                if (self.objective not in (None, init_model.objective)
+                        or objective not in ("binary:logistic",
+                                             init_model.objective)):
+                    raise ValueError(
+                        f"warm-start/checkpoint model was trained with "
+                        f"objective={init_model.objective!r} but this "
+                        f"estimator uses {objective!r}")
+                if self.n_classes not in (None, init_model.n_classes):
+                    raise ValueError(
+                        f"warm-start/checkpoint model has n_classes="
+                        f"{init_model.n_classes} but this estimator sets "
+                        f"n_classes={self.n_classes}")
+                if (n_classes or 0) > init_model.n_classes:
+                    raise ValueError(
+                        f"labels reach class {n_classes - 1} but the "
+                        f"warm-start/checkpoint model has n_classes="
+                        f"{init_model.n_classes}")
+                objective = init_model.objective
+                n_classes = init_model.n_classes
+            elif init_model.objective != objective:
                 raise ValueError(
                     f"warm-start/checkpoint model was trained with "
                     f"objective={init_model.objective!r} but this "
-                    f"estimator uses {obj!r}")
+                    f"estimator uses {objective!r}")
 
         if binner is None:
             binner = Binner(max_bins=self.max_bins,
@@ -235,13 +276,16 @@ class BoosterEstimator:
                     checkpoint_dir,
                     GBDTPipeline(binner=binner, model=model), t_idx + 1)
 
-        result = train(self._config(n_trees), data, y, eval_set=ev,
+        result = train(self._config(n_trees, objective, n_classes), data, y,
+                       eval_set=ev,
                        init_model=init_model, callback=cb, verbose=verbose,
                        plan=plan)
         self._model, self._binner, self._result = result.model, binner, result
         if checkpoint_dir is not None:
+            # step numbers count ROUNDS (same unit as the per-round callback
+            # saves) so multi-class resume never sees mixed-unit steps
             serialize.save_checkpoint(checkpoint_dir, self,
-                                      result.model.n_trees)
+                                      result.model.n_rounds)
         return self
 
     def _warm_start(self, xgb_model: Any
@@ -279,6 +323,10 @@ class BoosterEstimator:
         plan = self._resolve_plan(plan)
         data = self._bin(X)
         if plan.mesh is not None:
+            if model.n_classes > 1:
+                raise NotImplementedError(
+                    "mesh-sharded inference does not support multi-class "
+                    "ensembles yet; predict without a mesh plan")
             padded = pad_trees(model, plan.mesh.shape["model"])
             return sharded_predict(plan.mesh, padded, data.codes)
         return model.predict_margin(data.codes, plan=plan)
@@ -290,16 +338,31 @@ class BoosterEstimator:
 
     def staged_predict(self, X, *, plan: Optional[ExecutionPlan] = None
                        ) -> Iterator[jax.Array]:
-        """Yield predictions after each boosting stage (1..n_trees trees).
+        """Yield predictions after each boosting stage (1..n_trees rounds).
 
-        The k-th yield equals ``predict`` of the k-tree prefix ensemble;
-        on the training matrix its loss reproduces
-        ``history_["train_loss"][k-1]`` exactly.
+        For scalar objectives the k-th yield equals ``predict`` of the
+        k-tree prefix ensemble; on the training matrix its (margin-space)
+        loss reproduces ``history_["train_loss"][k-1]``.  Multi-class
+        models add one *forest* (K per-class trees) per stage and yield
+        the (n, K) softmax probabilities — i.e. ``predict_proba`` of the
+        k-round prefix (``predict`` is its argmax; train_loss operates on
+        the pre-softmax margins, not on these rows).
         """
         model = self._check_fitted()
         plan = self._resolve_plan(plan)
         data = self._bin(X)
         n = data.codes.shape[0]
+        K = model.n_classes
+        if K > 1:
+            margin = jax.numpy.broadcast_to(
+                jax.numpy.asarray(model.base_margin, jax.numpy.float32),
+                (n, K))
+            for r in range(model.n_rounds):
+                forest = TreeArrays(*[a[r * K:(r + 1) * K]
+                                      for a in model.trees])
+                margin = margin + _predict_forest(forest, data, plan)
+                yield model.loss.transform(margin)
+            return
         margin = jax.numpy.full((n,), model.base_margin, jax.numpy.float32)
         for t in range(model.n_trees):
             tree = TreeArrays(*[a[t] for a in model.trees])
@@ -352,22 +415,74 @@ class BoosterRegressor(BoosterEstimator):
 
 
 class BoosterClassifier(BoosterEstimator):
-    """Gradient-boosted binary classifier (default logistic loss).
+    """Gradient-boosted classifier (binary logistic or multi-class softmax).
 
-    ``predict`` returns hard 0/1 labels; ``predict_proba`` the class
-    probabilities, XGBoost-style.
+    The objective is auto-detected from the label set when left unset:
+    labels {0, 1} train ``binary:logistic``; integer labels 0..K-1 with
+    K > 2 train ``multi:softmax`` with K per-class trees per round.
+    ``predict`` returns hard class labels (argmax for K > 2);
+    ``predict_proba`` the (n, K) class probabilities, XGBoost-style.
     """
 
     _default_objective = "binary:logistic"
+
+    def _resolve_objective(self, y: np.ndarray
+                           ) -> Tuple[str, Optional[int]]:
+        labels = np.unique(np.asarray(y))
+        integral = bool(labels.size == 0
+                        or (np.all(labels >= 0)
+                            and np.all(labels == np.round(labels))))
+        if not integral and self.objective in (None, "multi:softmax"):
+            # auto-detection and softmax need class ids; an explicit
+            # scalar objective may legitimately take soft targets
+            # (label-smoothed / distilled logistic labels)
+            raise ValueError(
+                "classifier labels must be non-negative integers "
+                f"(got values like {labels[:5]})")
+        # soft labels behave as the 2-"class" scalar case below: the
+        # explicit objective stands, and a wide n_classes still conflicts
+        detected = (int(labels.max()) + 1 if labels.size and integral
+                    else 2)
+        if self.objective == "multi:softmax" or (
+                self.objective is None
+                and (detected > 2 or (self.n_classes or 0) > 2)):
+            K = self.n_classes if self.n_classes is not None else max(
+                detected, 2)
+            if detected > K:
+                raise ValueError(
+                    f"labels reach class {detected - 1} but n_classes={K}")
+            return "multi:softmax", K
+        obj = self.objective or self._default_objective
+        # binary (incl. an explicit-but-redundant n_classes=2): scalar path.
+        # A wider K — whether set explicitly or observed in the labels —
+        # conflicts with an explicit scalar objective: fail loudly instead
+        # of silently training a binary model on K classes.
+        if self.n_classes is not None and self.n_classes > 2:
+            raise ValueError(
+                f"n_classes={self.n_classes} conflicts with "
+                f"objective={obj!r}; use objective='multi:softmax' "
+                "(or leave objective unset)")
+        if detected > 2:
+            raise ValueError(
+                f"labels span {detected} classes but objective={obj!r} "
+                "is scalar; use objective='multi:softmax' (or leave "
+                "objective unset for auto-detection)")
+        return obj, None
 
     def predict_proba(self, X, *, plan: Optional[ExecutionPlan] = None
                       ) -> np.ndarray:
         model = self._check_fitted()
         p = np.asarray(model.loss.transform(
             self.predict_margin(X, plan=plan)))
+        if model.n_classes > 1:
+            return p                       # (n, K) softmax rows
         return np.stack([1.0 - p, p], axis=-1)
 
     def predict(self, X, *, plan: Optional[ExecutionPlan] = None
                 ) -> np.ndarray:
+        model = self._check_fitted()
+        if model.n_classes > 1:
+            return self.predict_proba(X, plan=plan).argmax(
+                axis=-1).astype(np.int32)
         return (self.predict_proba(X, plan=plan)[:, 1] > 0.5).astype(
             np.int32)

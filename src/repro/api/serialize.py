@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.binning import Binner
-from repro.core.gbdt import GBDTModel
+from repro.core.gbdt import GBDTModel, model_from_meta
 from repro.core.inference import GBDTPipeline
 from repro.distributed import checkpoint as ckpt
 from repro.kernels.ref import TreeArrays
@@ -44,13 +44,7 @@ def _pack_parts(model: GBDTModel, binner: Optional[Binner] = None,
               for k, v in model.trees._asdict().items()}
     meta: Dict[str, Any] = {
         "format": FORMAT, "version": VERSION,
-        "model": {
-            "base_margin": float(model.base_margin),
-            "objective": model.objective,
-            "missing_bin": int(model.missing_bin),
-            "n_fields": int(model.n_fields),
-            "max_depth": int(model.max_depth),
-        },
+        "model": model.meta(),
     }
     if binner is not None:
         arrays["binner/edges"] = np.asarray(binner._edges)
@@ -83,12 +77,7 @@ def pack(obj: Any) -> Tuple[Dict[str, np.ndarray], Dict]:
 def _unpack_model(arrays: Dict[str, np.ndarray], meta: Dict) -> GBDTModel:
     trees = TreeArrays(**{f: jnp.asarray(arrays[f"model/trees/{f}"])
                           for f in TreeArrays._fields})
-    m = meta["model"]
-    return GBDTModel(trees=trees, base_margin=float(m["base_margin"]),
-                     objective=str(m["objective"]),
-                     missing_bin=int(m["missing_bin"]),
-                     n_fields=int(m["n_fields"]),
-                     max_depth=int(m["max_depth"]))
+    return model_from_meta(trees, meta["model"])
 
 
 def _unpack_binner(arrays: Dict[str, np.ndarray], meta: Dict) -> Binner:

@@ -1,0 +1,27 @@
+"""Version-compat shims over moving JAX APIs.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (kwarg
+``check_rep``) to ``jax.shard_map`` (kwarg ``check_vma``); this repo runs
+on either.  All callers import :func:`shard_map` from here and use the
+*new* keyword name ``check_vma`` — the shim translates for the
+experimental signature.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+__all__ = ["shard_map"]
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    @functools.wraps(_shard_map_exp)
+    def shard_map(f, /, *, mesh, in_specs, out_specs, check_vma=True,
+                  **kwargs):
+        return _shard_map_exp(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma,
+                              **kwargs)

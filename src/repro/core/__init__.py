@@ -2,7 +2,7 @@ from repro.core.binning import BinnedDataset, Binner, bin_dataset, dataset_from_
 from repro.core.gbdt import GBDTConfig, GBDTModel, TrainResult, train
 from repro.core.losses import LOSSES, get_loss
 from repro.core.splits import SplitDecision, find_best_splits
-from repro.core.tree import fit_tree, fit_tree_lossguide
+from repro.core.tree import fit_forest, fit_tree, fit_tree_lossguide
 from repro.core.inference import (GBDTPipeline, feature_importance,
                                   pad_trees, sharded_predict)
 from repro.kernels.ref import TreeArrays

@@ -45,6 +45,7 @@ class GBDTConfig:
     traversal_strategy: str = "auto"
     host_offload_split: bool = False  # the paper's step-② offload
     early_stopping_rounds: Optional[int] = None
+    n_classes: Optional[int] = None  # multi:softmax only; K trees per round
     seed: int = 0
 
     def __post_init__(self):
@@ -52,26 +53,50 @@ class GBDTConfig:
             raise ValueError("max_depth must be in [1, 10]")
         if self.grow_policy not in ("depthwise", "lossguide"):
             raise ValueError(f"unknown grow_policy {self.grow_policy!r}")
+        if self.objective in losses_mod.MULTICLASS_OBJECTIVES:
+            if self.n_classes is None or self.n_classes < 2:
+                raise ValueError(
+                    f"objective {self.objective!r} requires n_classes >= 2")
+            if self.grow_policy != "depthwise":
+                raise ValueError("multi-class training supports only the "
+                                 "depthwise grow_policy")
+        elif self.n_classes not in (None, 1):
+            raise ValueError(
+                f"n_classes={self.n_classes} only applies to multi-class "
+                f"objectives, not {self.objective!r}")
 
 
 @dataclasses.dataclass
 class GBDTModel:
-    """A trained ensemble: stacked fixed-shape trees + prediction metadata."""
+    """A trained ensemble: stacked fixed-shape trees + prediction metadata.
+
+    Multi-class ensembles (``n_classes > 1``) stack trees round-major —
+    the tree at index ``r * K + k`` belongs to boosting round r, class k —
+    and ``base_margin`` is a (K,) per-class vector; margins gain a class
+    axis: ``predict_margin`` returns (n, K).
+    """
 
     trees: TreeArrays            # stacked (T, ...) arrays
-    base_margin: float
+    base_margin: float           # scalar, or (K,) array when n_classes > 1
     objective: str
     missing_bin: int
     n_fields: int
     max_depth: int
+    n_classes: int = 1
 
     @property
     def n_trees(self) -> int:
         return int(self.trees.feature.shape[0])
 
     @property
+    def n_rounds(self) -> int:
+        """Boosting rounds (== n_trees for scalar objectives)."""
+        return self.n_trees // max(self.n_classes, 1)
+
+    @property
     def loss(self) -> losses_mod.Loss:
-        return losses_mod.get_loss(self.objective)
+        return losses_mod.get_loss(
+            self.objective, self.n_classes if self.n_classes > 1 else None)
 
     def predict_margin(self, codes, strategy: Optional[str] = None, *,
                        plan: Optional[ExecutionPlan] = None) -> jax.Array:
@@ -79,7 +104,10 @@ class GBDTModel:
         plan = self._resolve_plan(plan, strategy)
         out = ops.predict_ensemble(self.trees, codes,
                                    missing_bin=self.missing_bin,
-                                   depth=self.max_depth, plan=plan)
+                                   depth=self.max_depth, plan=plan,
+                                   n_classes=self.n_classes)
+        if self.n_classes > 1:
+            return out + jnp.asarray(self.base_margin, jnp.float32)
         return out + self.base_margin
 
     def predict(self, codes, strategy: Optional[str] = None, *,
@@ -98,34 +126,75 @@ class GBDTModel:
         return base.resolved()
 
     # -- (de)serialization for checkpointing ------------------------------
+    def meta(self) -> Dict:
+        """JSON-safe model metadata — the ONE encoding shared by state
+        dicts, bundles and step checkpoints (see ``model_from_meta``)."""
+        return {
+            "base_margin": pack_base_margin(self.base_margin,
+                                            self.n_classes),
+            "objective": self.objective,
+            "missing_bin": int(self.missing_bin),
+            "n_fields": int(self.n_fields),
+            "max_depth": int(self.max_depth),
+            "n_classes": int(self.n_classes),
+        }
+
     def to_state(self) -> Dict:
         return {
             "trees": {k: np.asarray(v) for k, v in self.trees._asdict().items()},
-            "meta": {
-                "base_margin": float(self.base_margin),
-                "objective": self.objective,
-                "missing_bin": int(self.missing_bin),
-                "n_fields": int(self.n_fields),
-                "max_depth": int(self.max_depth),
-            },
+            "meta": self.meta(),
         }
 
     @classmethod
     def from_state(cls, state: Dict) -> "GBDTModel":
         trees = TreeArrays(**{k: jnp.asarray(v)
                               for k, v in state["trees"].items()})
-        m = state["meta"]
-        # checkpoint restore round-trips scalars through numpy — coerce
-        return cls(trees=trees, base_margin=float(m["base_margin"]),
-                   objective=str(m["objective"]),
-                   missing_bin=int(m["missing_bin"]),
-                   n_fields=int(m["n_fields"]),
-                   max_depth=int(m["max_depth"]))
+        return model_from_meta(trees, state["meta"])
+
+
+def pack_base_margin(base_margin, n_classes: int):
+    """JSON-safe base margin: per-class float list for K > 1, bare float
+    otherwise."""
+    if n_classes > 1:
+        return [float(b) for b in np.asarray(base_margin)]
+    return float(base_margin)
+
+
+def unpack_base_margin(value, n_classes: int):
+    return (np.asarray(value, np.float32) if n_classes > 1
+            else float(value))
+
+
+def model_from_meta(trees: TreeArrays, m: Dict) -> GBDTModel:
+    """Rebuild a model from its JSON meta (``GBDTModel.meta``); states
+    written before multi-class support carry no n_classes key (K = 1)."""
+    K = int(m.get("n_classes", 1))
+    # checkpoint restore round-trips scalars through numpy — coerce
+    return GBDTModel(trees=trees,
+                     base_margin=unpack_base_margin(m["base_margin"], K),
+                     objective=str(m["objective"]),
+                     missing_bin=int(m["missing_bin"]),
+                     n_fields=int(m["n_fields"]),
+                     max_depth=int(m["max_depth"]),
+                     n_classes=K)
 
 
 def _stack_trees(trees: List[TreeArrays]) -> TreeArrays:
     return TreeArrays(*[jnp.stack([getattr(t, f) for t in trees])
                         for f in TreeArrays._fields])
+
+
+def _stack_forests(forests: List[TreeArrays]) -> TreeArrays:
+    """Stack per-round (K, ...) forests into round-major (R*K, ...) trees."""
+    stacked = _stack_trees(forests)                  # (R, K, ...)
+    return TreeArrays(*[a.reshape((-1,) + a.shape[2:]) for a in stacked])
+
+
+def _unstack_forests(trees: TreeArrays, n_rounds: int,
+                     n_classes: int) -> List[TreeArrays]:
+    """Invert ``_stack_forests``: (R*K, ...) -> R forests of (K, ...)."""
+    resh = [a.reshape((n_rounds, n_classes) + a.shape[1:]) for a in trees]
+    return [TreeArrays(*[a[r] for a in resh]) for r in range(n_rounds)]
 
 
 @dataclasses.dataclass
@@ -149,25 +218,53 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
     if plan is None:
         plan = ExecutionPlan.from_config(config)
     plan = plan.resolved()
-    loss = losses_mod.get_loss(config.objective)
+    loss = losses_mod.get_loss(config.objective, config.n_classes)
+    K = loss.n_outputs                 # None for scalar objectives
     y = jnp.asarray(y, jnp.float32)
+    if K is not None:
+        # validate eval labels too: an out-of-range class in either split
+        # would otherwise clamp inside the softmax loss (silent NaN loss /
+        # broken early stopping), not error
+        batches = [("training", y)]
+        if eval_set is not None:
+            batches.append(("eval_set", jnp.asarray(eval_set[1],
+                                                    jnp.float32)))
+        for what, yy in batches:
+            if not yy.shape[0]:
+                continue
+            y_min, y_max = float(jnp.min(yy)), float(jnp.max(yy))
+            if (y_max >= K or y_min < 0
+                    or not bool(jnp.all(yy == jnp.round(yy)))):
+                raise ValueError(
+                    f"multi-class {what} labels must be integers in "
+                    f"[0, {K}); observed range [{y_min}, {y_max}]")
     n, F = data.codes.shape
     depth = config.max_depth
 
-    trees: List[TreeArrays] = []
-    history: Dict[str, List[float]] = {"train_loss": []}
+    trees: List[TreeArrays] = []       # one entry per round; multi-class
+    history: Dict[str, List[float]] = {"train_loss": []}   # entries: (K,...)
     if eval_set is not None:
         history["eval_loss"] = []
     step_times = {"binning_split": 0.0, "partition": 0.0, "traversal": 0.0,
                   "other": 0.0}
 
     if init_model is not None:
-        trees = [TreeArrays(*[a[i] for a in init_model.trees])
-                 for i in range(init_model.n_trees)]
+        if K is not None:
+            trees = _unstack_forests(init_model.trees, init_model.n_rounds,
+                                     K)
+        else:
+            trees = [TreeArrays(*[a[i] for a in init_model.trees])
+                     for i in range(init_model.n_trees)]
         base_margin = init_model.base_margin
         margins = init_model.predict_margin(data.codes, plan=plan)
         eval_margins = (init_model.predict_margin(eval_set[0].codes,
                                                   plan=plan)
+                        if eval_set is not None else None)
+    elif K is not None:
+        base_margin = np.asarray(loss.base_margin(y), np.float32)  # (K,)
+        margins = jnp.broadcast_to(jnp.asarray(base_margin), (n, K))
+        eval_margins = (jnp.broadcast_to(jnp.asarray(base_margin),
+                                         (eval_set[1].shape[0], K))
                         if eval_set is not None else None)
     else:
         base_margin = float(loss.base_margin(y))
@@ -178,8 +275,6 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
     key = jax.random.PRNGKey(config.seed)
     best_eval, best_round = np.inf, -1
 
-    grow = tree_mod.fit_tree if config.grow_policy == "depthwise" else None
-
     for t_idx in range(len(trees), len(trees) + config.n_trees):
         tkey = jax.random.fold_in(key, t_idx)  # deterministic replay stream
         t0 = time.perf_counter()
@@ -187,6 +282,8 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
         if config.subsample < 1.0:
             mask = (jax.random.uniform(jax.random.fold_in(tkey, 0), (n,))
                     < config.subsample).astype(jnp.float32)
+            if K is not None:          # same record draw for every class
+                mask = mask[:, None]
             g, h = g * mask, h * mask
         if config.colsample_bytree < 1.0:
             field_mask = (jax.random.uniform(jax.random.fold_in(tkey, 1),
@@ -201,7 +298,11 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
                       field_mask=field_mask, lambda_=config.lambda_,
                       gamma=config.gamma,
                       min_child_weight=config.min_child_weight, plan=plan)
-        if config.grow_policy == "depthwise":
+        if K is not None:
+            # one class-batched pass grows all K per-class trees
+            tree = tree_mod.fit_forest(data.codes, data.codes_cm,
+                                       g.T, h.T, **common)
+        elif config.grow_policy == "depthwise":
             tree = tree_mod.fit_tree(data.codes, data.codes_cm, g, h,
                                      **common)
         else:
@@ -217,7 +318,10 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
         step_times["binning_split"] += t1 - t0
 
         # step ⑤ — one-tree traversal refreshes margins (and thus g, h)
-        delta = _predict_one_tree(tree, data, plan)
+        if K is not None:
+            delta = _predict_forest(tree, data, plan)          # (n, K)
+        else:
+            delta = _predict_one_tree(tree, data, plan)
         margins = margins + delta
         margins.block_until_ready()
         t2 = time.perf_counter()
@@ -228,7 +332,10 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
         history["train_loss"].append(train_loss)
 
         if eval_set is not None:
-            ev_delta = _predict_one_tree(tree, eval_set[0], plan)
+            if K is not None:
+                ev_delta = _predict_forest(tree, eval_set[0], plan)
+            else:
+                ev_delta = _predict_one_tree(tree, eval_set[0], plan)
             eval_margins = eval_margins + ev_delta
             ev = float(jnp.mean(loss.value(eval_margins,
                                            jnp.asarray(eval_set[1],
@@ -254,10 +361,12 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
 
 
 def _as_model(trees, base_margin, config, data, F) -> GBDTModel:
-    return GBDTModel(trees=_stack_trees(trees), base_margin=base_margin,
+    K = config.n_classes or 1
+    stacked = _stack_forests(trees) if K > 1 else _stack_trees(trees)
+    return GBDTModel(trees=stacked, base_margin=base_margin,
                      objective=config.objective,
                      missing_bin=data.missing_bin, n_fields=F,
-                     max_depth=config.max_depth)
+                     max_depth=config.max_depth, n_classes=K)
 
 
 def _predict_one_tree(tree: TreeArrays, data: BinnedDataset,
@@ -277,3 +386,10 @@ def _predict_one_tree(tree: TreeArrays, data: BinnedDataset,
                                  missing_bin=data.missing_bin, plan=plan)
     return ops.traverse_tree(tree, data.codes, missing_bin=data.missing_bin,
                              plan=plan)
+
+
+def _predict_forest(forest: TreeArrays, data: BinnedDataset,
+                    plan: ExecutionPlan) -> jax.Array:
+    """Step-⑤ traversal of one round's K per-class trees -> (n, K) deltas."""
+    delta = jax.vmap(lambda t: _predict_one_tree(t, data, plan))(forest)
+    return delta.T

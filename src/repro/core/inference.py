@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.api.plan import ExecutionPlan
 from repro.core.binning import Binner, BinnedDataset
 from repro.core.gbdt import GBDTModel
@@ -39,6 +40,9 @@ def sharded_predict(mesh: Mesh, model: GBDTModel, codes) -> jax.Array:
     da = data_axes(mesh)
     m = mesh.shape["model"]
     T = model.n_trees
+    if getattr(model, "n_classes", 1) > 1:
+        raise NotImplementedError(
+            "sharded_predict does not support multi-class ensembles yet")
     if T % m:
         raise ValueError(f"{T} trees do not divide the model axis ({m}); "
                          "use pad_trees() first")
@@ -55,7 +59,7 @@ def sharded_predict(mesh: Mesh, model: GBDTModel, codes) -> jax.Array:
 
     # the scan-carry zeros inside predict_ensemble are unvarying; skip the
     # static varying-axes check (the psum makes the output well-defined)
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(da, None),) + tuple(P("model") for _ in range(5)),
         out_specs=P(da), check_vma=False)

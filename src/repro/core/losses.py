@@ -7,7 +7,7 @@ order gradient statistics (g_i, h_i) of the loss at the current margin.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,13 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class Loss:
-    """A boosting loss: value + (g, h) statistics at the current margin."""
+    """A boosting loss: value + (g, h) statistics at the current margin.
+
+    Scalar-margin losses leave ``n_outputs`` at ``None``: margins are (n,)
+    and one tree grows per boosting round.  Vector-margin losses (softmax)
+    set ``n_outputs = K``: margins are (n, K), ``grad_hess`` returns
+    (n, K) statistics, and the trainer grows K per-class trees per round.
+    """
 
     name: str
     # (margin, y) -> per-record loss
@@ -28,6 +34,8 @@ class Loss:
     transform_fn: Callable[[Array], Array]
     # constant initial margin given labels
     base_margin_fn: Callable[[Array], Array]
+    # vector-margin width (None == scalar margins)
+    n_outputs: Optional[int] = None
 
     def value(self, margin: Array, y: Array) -> Array:
         return self.value_fn(margin, y)
@@ -104,14 +112,67 @@ pseudo_huber = Loss(
     base_margin_fn=lambda y: jnp.median(y),
 )
 
+# --------------------------------------------------------------------------
+# multi-class softmax (vector margins, K per-class trees per round)
+# --------------------------------------------------------------------------
+def _softmax_value(margin, y):
+    # cross-entropy: logsumexp(m) - m[y], numerically stable
+    y = y.astype(jnp.int32)
+    picked = jnp.take_along_axis(margin, y[:, None], axis=-1)[:, 0]
+    return jax.nn.logsumexp(margin, axis=-1) - picked
+
+
+def _softmax_grad_hess(margin, y):
+    """Exact diagonal of the softmax cross-entropy Hessian.
+
+    g_k = p_k - 1[y == k],  h_k = p_k (1 - p_k)  — matches jax.grad /
+    the diagonal of jax.hessian of ``_softmax_value`` (tested)."""
+    K = margin.shape[-1]
+    p = jax.nn.softmax(margin, axis=-1)
+    g = p - jax.nn.one_hot(y.astype(jnp.int32), K, dtype=p.dtype)
+    h = jnp.maximum(p * (1.0 - p), 1e-16)
+    return g, h
+
+
+def multi_softmax(n_classes: int) -> Loss:
+    """The ``multi:softmax`` objective for a fixed class count ``K``."""
+    if n_classes < 2:
+        raise ValueError(f"multi:softmax needs n_classes >= 2, "
+                         f"got {n_classes}")
+
+    def base_margin(y):
+        # log class priors, centered (softmax is shift-invariant; centering
+        # keeps margins small and the K=1-compatible float path exact)
+        counts = jnp.bincount(y.astype(jnp.int32), length=n_classes)
+        p = jnp.clip(counts / jnp.maximum(y.shape[0], 1), 1e-6, 1.0)
+        logp = jnp.log(p)
+        return logp - jnp.mean(logp)
+
+    return Loss(
+        name="multi:softmax",
+        value_fn=_softmax_value,
+        grad_hess_fn=_softmax_grad_hess,
+        transform_fn=lambda m: jax.nn.softmax(m, axis=-1),
+        base_margin_fn=base_margin,
+        n_outputs=int(n_classes),
+    )
+
+
 LOSSES = {
     squared_error.name: squared_error,
     binary_logistic.name: binary_logistic,
     pseudo_huber.name: pseudo_huber,
 }
 
+MULTICLASS_OBJECTIVES = ("multi:softmax",)
 
-def get_loss(name: str) -> Loss:
+
+def get_loss(name: str, n_classes: Optional[int] = None) -> Loss:
+    if name in MULTICLASS_OBJECTIVES:
+        if n_classes is None:
+            raise ValueError(f"{name!r} requires n_classes")
+        return multi_softmax(n_classes)
     if name not in LOSSES:
-        raise KeyError(f"unknown loss {name!r}; available: {sorted(LOSSES)}")
+        raise KeyError(f"unknown loss {name!r}; available: "
+                       f"{sorted(LOSSES) + list(MULTICLASS_OBJECTIVES)}")
     return LOSSES[name]

@@ -37,16 +37,6 @@ from repro.kernels import ops
 from repro.kernels.ref import TreeArrays
 
 
-def _repeat_to_bottom(x, level: int, depth: int):
-    """Broadcast per-node values at ``level`` onto their bottom-level slots."""
-    return jnp.repeat(x, 2 ** (depth - level))
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("depth", "n_bins", "missing_bin", "plan",
-                     "hist_strategy", "partition_strategy",
-                     "host_offload_split"))
 def fit_tree(codes, codes_cm, g, h, *, depth: int, n_bins: int,
              missing_bin: int, is_cat_field, field_mask,
              lambda_: float, gamma: float, min_child_weight: float,
@@ -61,71 +51,113 @@ def fit_tree(codes, codes_cm, g, h, *, depth: int, n_bins: int,
     g, h: (n,) float32 gradient statistics.  ``plan`` selects the kernel
     strategies (the legacy per-step string kwargs still work and override
     the plan's fields).
+
+    The scalar grower IS the K=1 slice of ``fit_forest`` — one body to
+    maintain; the class axis costs nothing at K=1 (same kernels, same
+    matmul shapes, bit-identical results).
+    """
+    forest = fit_forest(codes, codes_cm, g[None], h[None], depth=depth,
+                        n_bins=n_bins, missing_bin=missing_bin,
+                        is_cat_field=is_cat_field, field_mask=field_mask,
+                        lambda_=lambda_, gamma=gamma,
+                        min_child_weight=min_child_weight, plan=plan,
+                        hist_strategy=hist_strategy,
+                        partition_strategy=partition_strategy,
+                        host_offload_split=host_offload_split)
+    return TreeArrays(*[a[0] for a in forest])
+
+
+# --------------------------------------------------------------------------
+# class-batched grower: K per-class trees per round (multi-class boosting)
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "n_bins", "missing_bin", "plan",
+                     "hist_strategy", "partition_strategy",
+                     "host_offload_split"))
+def fit_forest(codes, codes_cm, g, h, *, depth: int, n_bins: int,
+               missing_bin: int, is_cat_field, field_mask,
+               lambda_: float, gamma: float, min_child_weight: float,
+               plan: Optional[ExecutionPlan] = None,
+               hist_strategy: Optional[str] = None,
+               partition_strategy: Optional[str] = None,
+               host_offload_split: Optional[bool] = None) -> TreeArrays:
+    """Grow K trees level-synchronously (one per class, shared code stream).
+
+    g, h: (K, n) per-class gradient statistics.  Every per-node array of
+    ``fit_tree`` gains a leading class axis; the step-① histogram is built
+    ONCE per level for all classes (the class-batched ``build_histogram``),
+    so the record/code stream is read once per level regardless of K.
+    Returns TreeArrays with leading (K, ...) axes.
     """
     plan = resolve_plan(plan, hist_strategy=hist_strategy,
                         partition_strategy=partition_strategy,
                         host_offload_split=host_offload_split)
     n, F = codes.shape
+    K = g.shape[0]
     n_int = 2 ** depth - 1
     n_leaf = 2 ** depth
 
-    feature = jnp.full((n_int,), -1, jnp.int32)
-    threshold = jnp.zeros((n_int,), jnp.int32)
-    is_cat = jnp.zeros((n_int,), jnp.int32)
-    default_left = jnp.zeros((n_int,), jnp.int32)
-    value_bottom = jnp.zeros((n_leaf,), jnp.float32)
-    value_set = jnp.zeros((n_leaf,), bool)
+    feature = jnp.full((K, n_int), -1, jnp.int32)
+    threshold = jnp.zeros((K, n_int), jnp.int32)
+    is_cat = jnp.zeros((K, n_int), jnp.int32)
+    default_left = jnp.zeros((K, n_int), jnp.int32)
+    value_bottom = jnp.zeros((K, n_leaf), jnp.float32)
+    value_set = jnp.zeros((K, n_leaf), bool)
 
-    node_ids = jnp.zeros((n,), jnp.int32)          # level-local vertex ids
+    node_ids = jnp.zeros((K, n), jnp.int32)        # per-class vertex ids
     find = (splits_mod.find_best_splits_host if plan.host_offload_split
             else splits_mod.find_best_splits)
 
+    part = jax.vmap(functools.partial(ops.partition_level,
+                                      missing_bin=missing_bin, plan=plan))
+
     for level in range(depth):
         nn = 2 ** level
-        off = nn - 1                               # level offset in the heap
+        off = nn - 1
         reps = 2 ** (depth - level)
 
-        # step ① — histogram-bin the gradient statistics of every vertex
+        # step ① — one batched pass covers all K class partitions
         hist = ops.build_histogram(codes, g, h, node_ids, n_nodes=nn,
-                                   n_bins=n_bins, plan=plan)
-        # step ② — best split per vertex (host-offloadable)
-        best = find(hist, is_cat_field, field_mask, lambda_, gamma,
-                    min_child_weight)
+                                   n_bins=n_bins, plan=plan)  # (K,nn,F,NB,2)
+        # step ② — find_best_splits is vectorized over nodes: fold the
+        # class axis into the node axis (works for the host offload too)
+        flat = find(hist.reshape(K * nn, F, n_bins, 2), is_cat_field,
+                    field_mask, lambda_, gamma, min_child_weight)
+        best = splits_mod.SplitDecision(
+            *[a.reshape(K, nn) for a in flat])
 
-        # a vertex whose ancestor already became a leaf is pass-through
-        resolved = value_set[jnp.arange(nn) * reps]
+        resolved = value_set[:, jnp.arange(nn) * reps]          # (K, nn)
         do_split = (best.gain > 0.0) & (~resolved)
 
-        # vertices that stop here: fix their leaf weight into the bottom row
         w = splits_mod.leaf_weight(best.node_g, best.node_h, lambda_)
         newly_leaf = (~do_split) & (~resolved)
-        mask_b = _repeat_to_bottom(newly_leaf, level, depth)
+        mask_b = jnp.repeat(newly_leaf, reps, axis=1)           # (K, n_leaf)
         value_bottom = jnp.where(mask_b & (~value_set),
-                                 _repeat_to_bottom(w, level, depth),
-                                 value_bottom)
+                                 jnp.repeat(w, reps, axis=1), value_bottom)
         value_set = value_set | mask_b
 
         feature = jax.lax.dynamic_update_slice(
-            feature, jnp.where(do_split, best.feature, -1), (off,))
+            feature, jnp.where(do_split, best.feature, -1), (0, off))
         threshold = jax.lax.dynamic_update_slice(threshold, best.threshold,
-                                                 (off,))
-        is_cat = jax.lax.dynamic_update_slice(is_cat, best.is_cat, (off,))
-        default_left = jax.lax.dynamic_update_slice(default_left,
-                                                    best.default_left, (off,))
+                                                 (0, off))
+        is_cat = jax.lax.dynamic_update_slice(is_cat, best.is_cat, (0, off))
+        default_left = jax.lax.dynamic_update_slice(
+            default_left, best.default_left, (0, off))
 
-        # step ③ — single-predicate partition into children.  Only the <= nn
-        # predicate columns travel: gathered as rows of the *column-major*
-        # redundant copy (contiguous reads — the §III bandwidth saving).
-        codes_lvl = codes_cm[jnp.where(do_split, best.feature, 0)]  # (nn, n)
-        node_ids = ops.partition_level(
-            node_ids, codes_lvl.T,
-            jnp.where(do_split, jnp.arange(nn, dtype=jnp.int32), -1),
-            best.threshold, best.is_cat, best.default_left,
-            missing_bin=missing_bin, plan=plan)
+        # step ③ — per-class predicate columns from the column-major copy
+        codes_lvl = codes_cm[jnp.where(do_split, best.feature, 0)]  # (K,nn,n)
+        node_ids = part(
+            node_ids, codes_lvl.transpose(0, 2, 1),
+            jnp.where(do_split,
+                      jnp.broadcast_to(jnp.arange(nn, dtype=jnp.int32),
+                                       (K, nn)), -1),
+            best.threshold, best.is_cat, best.default_left)
 
-    # bottom level: remaining vertices get leaf weights from a segment-sum
-    Gb = jax.ops.segment_sum(g.astype(jnp.float32), node_ids, n_leaf)
-    Hb = jax.ops.segment_sum(h.astype(jnp.float32), node_ids, n_leaf)
+    Gb = jax.vmap(lambda gg, nid: jax.ops.segment_sum(
+        gg.astype(jnp.float32), nid, n_leaf))(g, node_ids)
+    Hb = jax.vmap(lambda hh, nid: jax.ops.segment_sum(
+        hh.astype(jnp.float32), nid, n_leaf))(h, node_ids)
     wb = splits_mod.leaf_weight(Gb, Hb, lambda_)
     value_bottom = jnp.where(value_set, value_bottom, wb)
 

@@ -45,11 +45,15 @@ PAPER_DATASETS = {
 def make_tabular(n: int, n_numeric: int, n_categorical: int = 0,
                  n_cats: int = 8, task: str = "regression",
                  missing_rate: float = 0.0, seed: int = 0,
+                 n_classes: int = 4,
                  ) -> Tuple[np.ndarray, np.ndarray, list]:
     """Returns (X, y, categorical_field_ids); NaN marks missing values.
 
     The target is a random shallow-tree function of a feature subset plus
     noise — learnable by GBDT, so accuracy assertions are meaningful.
+    ``task="multiclass"`` draws integer labels 0..n_classes-1 from a
+    per-class margin softmax (roughly balanced classes, so the
+    majority-class baseline sits near 1/n_classes).
     """
     rng = np.random.default_rng(seed)
     F = n_numeric + n_categorical
@@ -77,6 +81,23 @@ def make_tabular(n: int, n_numeric: int, n_categorical: int = 0,
     if task == "binary":
         p = 1.0 / (1.0 + np.exp(-margin))
         y = (rng.uniform(size=n) < p).astype(np.float64)
+    elif task == "multiclass":
+        # per-class planted margins over the same field subset
+        m = np.zeros((n, n_classes))
+        for c in range(n_classes):
+            for f in picks:
+                if f in cat_ids:
+                    vals = rng.normal(size=n_cats)
+                    m[:, c] += vals[np.nan_to_num(X[:, f]).astype(int)]
+                else:
+                    thr = rng.normal()
+                    m[:, c] += np.where(X[:, f] > thr, rng.normal(),
+                                        rng.normal())
+        m = 2.0 * (m - m.mean(axis=0, keepdims=True))
+        z = np.exp(m - m.max(axis=1, keepdims=True))
+        p = z / z.sum(axis=1, keepdims=True)
+        y = (p.cumsum(axis=1) < rng.uniform(size=(n, 1))).sum(
+            axis=1).astype(np.float64)
     else:
         y = margin
 

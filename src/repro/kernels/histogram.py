@@ -48,14 +48,22 @@ def _iota(shape, dim):
 
 
 def _stats_node(node_ref, g_ref, h_ref, n_nodes: int):
-    """(RBLK, NN*2) outer-product spread of (g, h) over node slots."""
-    rblk = node_ref.shape[0]
-    node = node_ref[...].astype(jnp.int32)                  # (RBLK, 1)
-    oh_node = (node == _iota((rblk, n_nodes), 1)).astype(jnp.float32)
-    stats = jnp.concatenate(
+    """(RBLK, K*NN*2) outer-product spread of (g, h) over node slots.
+
+    The class axis K (multi-class boosting: one tree per class per round,
+    each with its own node partition) widens the stats operand of the
+    one-hot contraction — the record/code stream is read ONCE and a single
+    K*NN*2-wide matmul accumulates every class's (g, h), preserving the
+    paper's field→SRAM bandwidth mapping at K× arithmetic intensity."""
+    rblk, K = node_ref.shape
+    node = node_ref[...].astype(jnp.int32)                  # (RBLK, K)
+    oh_node = (node[:, :, None] == _iota((rblk, K, n_nodes), 2)
+               ).astype(jnp.float32)                        # (RBLK, K, NN)
+    stats = jnp.stack(
         [g_ref[...].astype(jnp.float32), h_ref[...].astype(jnp.float32)],
-        axis=1)                                             # (RBLK, 2)
-    return (oh_node[:, :, None] * stats[:, None, :]).reshape(rblk, n_nodes * 2)
+        axis=2)                                             # (RBLK, K, 2)
+    sn = oh_node[:, :, :, None] * stats[:, :, None, :]      # (RBLK, K, NN, 2)
+    return sn.reshape(rblk, K * n_nodes * 2)
 
 
 def _hist_kernel_grouped(codes_ref, node_ref, g_ref, h_ref, hist_ref, *,
@@ -91,7 +99,7 @@ def _hist_kernel_packed(codes_ref, node_ref, g_ref, h_ref, hist_ref, *,
           ).astype(jnp.float32).reshape(rblk, fblk * n_bins)
     flat = lax.dot_general(oh, sn, (((0,), (0,)), ((), ())),
                            preferred_element_type=jnp.float32)
-    hist_ref[...] += flat.reshape(fblk, n_bins, n_nodes * 2)
+    hist_ref[...] += flat.reshape(fblk, n_bins, sn.shape[1])
 
 
 @functools.partial(
@@ -106,16 +114,28 @@ def histogram_pallas(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
     codes: (n, F) uint8; g, h: (n,) float; node_ids: (n,) int32.
     Returns (n_nodes, F, n_bins, 2) float32.  Inputs are padded to block
     multiples here (padded records carry g = h = 0 → no contribution).
+
+    Class-batched form: g, h, node_ids may carry a leading class axis
+    (K, n) — one launch then reads codes once and accumulates all K
+    classes' statistics through a K*NN*2-wide stats operand, returning
+    (K, n_nodes, F, n_bins, 2).
     """
+    batched = g.ndim == 2
+    K = g.shape[0] if batched else 1
+    # kernel-facing layout: records major, classes minor — (n, K) columns
+    g2 = g.T if batched else g[:, None]
+    h2 = h.T if batched else h[:, None]
+    node2 = node_ids.T if batched else node_ids[:, None]
+
     n, F = codes.shape
     rblk = min(records_per_block, max(8, n))
     fblk = min(fields_per_block, F)
     n_pad = -n % rblk
     f_pad = -F % fblk
     codes = jnp.pad(codes, ((0, n_pad), (0, f_pad)))
-    g = jnp.pad(g, (0, n_pad))
-    h = jnp.pad(h, (0, n_pad))
-    node_ids = jnp.pad(node_ids, (0, n_pad))
+    g2 = jnp.pad(g2, ((0, n_pad), (0, 0)))
+    h2 = jnp.pad(h2, ((0, n_pad), (0, 0)))
+    node2 = jnp.pad(node2, ((0, n_pad), (0, 0)))
     np_, Fp = codes.shape
     grid = (Fp // fblk, np_ // rblk)  # fields outer, record stream inner
 
@@ -125,16 +145,17 @@ def histogram_pallas(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
         grid=grid,
         in_specs=[
             pl.BlockSpec((rblk, fblk), lambda fi, ri: (ri, fi)),
-            pl.BlockSpec((rblk, 1), lambda fi, ri: (ri, 0)),
-            pl.BlockSpec((rblk, 1), lambda fi, ri: (ri, 0)),
-            pl.BlockSpec((rblk, 1), lambda fi, ri: (ri, 0)),
+            pl.BlockSpec((rblk, K), lambda fi, ri: (ri, 0)),
+            pl.BlockSpec((rblk, K), lambda fi, ri: (ri, 0)),
+            pl.BlockSpec((rblk, K), lambda fi, ri: (ri, 0)),
         ],
-        out_specs=pl.BlockSpec((fblk, n_bins, n_nodes * 2),
+        out_specs=pl.BlockSpec((fblk, n_bins, K * n_nodes * 2),
                                lambda fi, ri: (fi, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((Fp, n_bins, n_nodes * 2),
+        out_shape=jax.ShapeDtypeStruct((Fp, n_bins, K * n_nodes * 2),
                                        jnp.float32),
         interpret=interpret,
-    )(codes, node_ids[:, None], g[:, None], h[:, None])
+    )(codes, node2, g2, h2)
 
-    hist = out[:F].reshape(F, n_bins, n_nodes, 2)
-    return hist.transpose(2, 0, 1, 3)
+    hist = out[:F].reshape(F, n_bins, K, n_nodes, 2)
+    hist = hist.transpose(2, 3, 0, 1, 4)            # (K, NN, F, NB, 2)
+    return hist if batched else hist[0]

@@ -150,20 +150,42 @@ def build_histogram(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
                     interpret: Optional[bool] = None,
                     records_per_block: Optional[int] = None,
                     fields_per_block: Optional[int] = None):
-    """Dispatch: (n, F) codes -> (n_nodes, F, n_bins, 2) float32 histogram."""
+    """Dispatch: (n, F) codes -> (n_nodes, F, n_bins, 2) float32 histogram.
+
+    Class-batched form (multi-class boosting): ``g``, ``h``, ``node_ids``
+    may carry a leading class axis (K, n) — every class has its own node
+    partition but shares the code stream — and the result gains the same
+    leading axis: (K, n_nodes, F, n_bins, 2).  The jnp strategies vmap
+    over the class axis; the Pallas kernel widens its stats operand so a
+    single launch reads the codes once for all K classes.
+    """
     plan = resolve_plan(plan, _caller="build_histogram",
                         hist_strategy=strategy, interpret=interpret,
                         records_per_block=records_per_block,
                         fields_per_block=fields_per_block)
     strategy = plan.hist_strategy
+    batched = g.ndim == 2
+
+    def per_class(fn):
+        if not batched:
+            return fn
+        return jax.vmap(fn, in_axes=(None, 0, 0, 0))
+
     if strategy == "scatter":
-        return _hist_scatter(codes, g, h, node_ids, n_nodes, n_bins)
+        fn = lambda c, gg, hh, nn: _hist_scatter(c, gg, hh, nn, n_nodes,
+                                                 n_bins)
+        return per_class(fn)(codes, g, h, node_ids)
     if strategy == "scatter_private":
-        return _hist_scatter_private(codes, g, h, node_ids, n_nodes, n_bins)
+        fn = lambda c, gg, hh, nn: _hist_scatter_private(c, gg, hh, nn,
+                                                         n_nodes, n_bins)
+        return per_class(fn)(codes, g, h, node_ids)
     if strategy == "sort":
-        return _hist_sort(codes, g, h, node_ids, n_nodes, n_bins)
+        fn = lambda c, gg, hh, nn: _hist_sort(c, gg, hh, nn, n_nodes, n_bins)
+        return per_class(fn)(codes, g, h, node_ids)
     if strategy == "onehot":
-        return _hist_onehot(codes, g, h, node_ids, n_nodes, n_bins)
+        fn = lambda c, gg, hh, nn: _hist_onehot(c, gg, hh, nn, n_nodes,
+                                                n_bins)
+        return per_class(fn)(codes, g, h, node_ids)
     if strategy in ("pallas_grouped", "pallas_packed"):
         return _hist_k.histogram_pallas(
             codes, g, h, node_ids, n_nodes=n_nodes, n_bins=n_bins,
@@ -212,11 +234,14 @@ def traverse_tree(tree: TreeArrays, codes, *, missing_bin: int,
 def predict_ensemble(trees: TreeArrays, codes, *, missing_bin: int,
                      depth: int, plan: Optional[ExecutionPlan] = None,
                      strategy: Optional[str] = None,
-                     interpret: Optional[bool] = None):
+                     interpret: Optional[bool] = None, n_classes: int = 1):
+    """Ensemble margins: (n,) for scalar objectives, (n, K) when
+    ``n_classes > 1`` (trees round-major, tree t feeds class t % K)."""
     plan = resolve_plan(plan, _caller="predict_ensemble",
                         traversal_strategy=strategy, interpret=interpret)
     if plan.traversal_strategy == "reference":
-        return _ref.predict_ensemble_ref(trees, codes, missing_bin)
+        return _ref.predict_ensemble_ref(trees, codes, missing_bin,
+                                         n_classes=n_classes)
     return _trav_k.predict_ensemble_pallas(
         trees, codes, missing_bin=missing_bin, depth=depth,
-        interpret=plan.interpret)
+        interpret=plan.interpret, n_classes=n_classes)

@@ -117,16 +117,26 @@ def traverse_ref(tree: TreeArrays, codes: Array, missing_bin: int) -> Array:
     return tree.leaf_value[leaf]
 
 
-def predict_ensemble_ref(trees: TreeArrays, codes: Array, missing_bin: int
-                         ) -> Array:
+def predict_ensemble_ref(trees: TreeArrays, codes: Array, missing_bin: int,
+                         n_classes: int = 1) -> Array:
     """Batch inference oracle: sum of per-tree outputs (paper §II-B).
 
     ``trees`` holds stacked arrays with a leading tree dimension (T, ...).
+    Multi-class ensembles store trees round-major (round r, class k at
+    index ``r * K + k``); tree t accumulates into margin column ``t % K``
+    and the output gains a class axis: (n, K).  ``n_classes == 1`` keeps
+    the scalar (n,) output.
     """
-    def body(carry, t):
-        tree = TreeArrays(*t)
-        return carry + traverse_ref(tree, codes, missing_bin), None
+    T = trees.feature.shape[0]
+    cls_oh = jax.nn.one_hot(jnp.arange(T) % n_classes, n_classes,
+                            dtype=jnp.float32)               # (T, K)
 
-    init = jnp.zeros((codes.shape[0],), jnp.float32)
-    out, _ = jax.lax.scan(body, init, tuple(trees))
-    return out
+    def body(carry, xs):
+        t, oh = xs
+        tree = TreeArrays(*t)
+        out = traverse_ref(tree, codes, missing_bin)         # (n,)
+        return carry + out[:, None] * oh[None, :], None
+
+    init = jnp.zeros((codes.shape[0], n_classes), jnp.float32)
+    out, _ = jax.lax.scan(body, init, (tuple(trees), cls_oh))
+    return out[:, 0] if n_classes == 1 else out

@@ -118,7 +118,7 @@ def traverse_pallas(tree: TreeArrays, codes, *, missing_bin: int,
 
 
 def _ensemble_kernel(codes_ref, table_ref, leaf_ref, out_ref, *,
-                     depth: int, missing_bin: int):
+                     depth: int, missing_bin: int, n_classes: int):
     @pl.when(pl.program_id(1) == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
@@ -132,21 +132,29 @@ def _ensemble_kernel(codes_ref, table_ref, leaf_ref, out_ref, *,
     leaf = node - table.shape[0]
     n_leaf = leaf_ref.shape[1]
     oh_leaf = (leaf == _iota((rblk, n_leaf), 1)).astype(jnp.float32)
-    out_ref[...] += lax.dot_general(oh_leaf, leaf_ref[0],
-                                    (((1,), (0,)), ((), ())),
-                                    preferred_element_type=jnp.float32)
+    vals = lax.dot_general(oh_leaf, leaf_ref[0],
+                           (((1,), (0,)), ((), ())),
+                           preferred_element_type=jnp.float32)  # (RBLK, 1)
+    # multi-class: round-major tree order, tree t owns margin column t % K;
+    # a one-hot class row routes the accumulation (K == 1: plain add)
+    cls = pl.program_id(1) % n_classes
+    oh_cls = (cls == _iota((1, n_classes), 1)).astype(jnp.float32)
+    out_ref[...] += vals * oh_cls
 
 
 @functools.partial(jax.jit, static_argnames=("missing_bin", "depth",
-                                             "records_per_block", "interpret"))
+                                             "records_per_block", "interpret",
+                                             "n_classes"))
 def predict_ensemble_pallas(trees: TreeArrays, codes, *, missing_bin: int,
                             depth: int, records_per_block: int = 1024,
-                            interpret: bool = True):
+                            interpret: bool = True, n_classes: int = 1):
     """Batch inference: trees hold stacked (T, ...) arrays; codes (n, F).
 
     Grid = (record blocks, trees): each step holds one tree table resident
     in VMEM (paper: one tree per BU) and accumulates into the revisited
-    output block.  Returns (n,) float32 ensemble sums.
+    output block.  Returns (n,) float32 ensemble sums — or (n, K) per-class
+    margins when ``n_classes > 1`` (trees round-major; tree t feeds class
+    t % K via a one-hot column route, so the walk itself is unchanged).
     """
     n, n_cols = codes.shape
     T = trees.feature.shape[0]
@@ -161,15 +169,15 @@ def predict_ensemble_pallas(trees: TreeArrays, codes, *, missing_bin: int,
             trees.feature, trees.threshold, trees.is_cat, trees.default_left)
     out = pl.pallas_call(
         functools.partial(_ensemble_kernel, depth=depth,
-                          missing_bin=missing_bin),
+                          missing_bin=missing_bin, n_classes=n_classes),
         grid=(np_ // rblk, T),
         in_specs=[
             pl.BlockSpec((rblk, n_cols), lambda ri, ti: (ri, 0)),
             pl.BlockSpec((1, n_int, 4), lambda ri, ti: (ti, 0, 0)),
             pl.BlockSpec((1, n_leaf, 1), lambda ri, ti: (ti, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((rblk, 1), lambda ri, ti: (ri, 0)),
-        out_shape=jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+        out_specs=pl.BlockSpec((rblk, n_classes), lambda ri, ti: (ri, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, n_classes), jnp.float32),
         interpret=interpret,
     )(codes, tables, trees.leaf_value[:, :, None])
-    return out[:n, 0]
+    return out[:n, 0] if n_classes == 1 else out[:n]

@@ -14,7 +14,7 @@ from repro.distributed.fault import FaultInjector, StepJournal, run_with_restart
 
 @pytest.fixture(scope="module")
 def small_data():
-    X, y, cats = make_tabular(1500, 6, 2, task="regression", seed=5)
+    X, y, cats = make_tabular(800, 6, 2, task="regression", seed=5)
     return bin_dataset(X, max_bins=32, categorical_fields=cats), y
 
 

@@ -21,17 +21,17 @@ def _split(data: BinnedDataset, y, n_tr):
 
 @pytest.fixture(scope="module")
 def reg_data():
-    X, y, cats = make_tabular(4000, 8, 4, n_cats=10, task="regression",
+    X, y, cats = make_tabular(2000, 8, 4, n_cats=10, task="regression",
                               missing_rate=0.05, seed=3)
     data = bin_dataset(X, max_bins=64, categorical_fields=cats)
-    return _split(data, y, 3200)
+    return _split(data, y, 1600)
 
 
 @pytest.fixture(scope="module")
 def cls_data():
-    X, y, cats = make_tabular(3000, 10, 2, task="binary", seed=7)
+    X, y, cats = make_tabular(1500, 10, 2, task="binary", seed=7)
     data = bin_dataset(X, max_bins=32, categorical_fields=cats)
-    return _split(data, y, 2400)
+    return _split(data, y, 1200)
 
 
 def test_regression_learns(reg_data):
@@ -64,6 +64,7 @@ def test_lossguide_learns(reg_data):
     assert r2 > 0.5, r2
 
 
+@pytest.mark.slow
 def test_strategies_grow_identical_trees(reg_data):
     """Paper §IV: 'software changes ... do not affect the numerical
     results'.  scatter / sort / one-hot MXU / packed produce the same

@@ -61,6 +61,42 @@ def test_kernel_block_shape_sweep(rblk, fblk):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("K", [1, 3])
+@pytest.mark.parametrize("n,F,NB,NN,all_missing_col", [
+    (500, 4, 8, 2, False),     # non-multiple-of-block record count
+    (513, 9, 16, 4, False),    # ragged records AND fields
+    (256, 3, 8, 1, True),      # one column entirely missing-bin codes
+    (67, 11, 8, 2, True),      # ragged everything + all-missing column
+])
+def test_strategy_parity_matrix(K, n, F, NB, NN, all_missing_col):
+    """scatter ≡ scatter_private ≡ sort ≡ onehot ≡ pallas_grouped ≡
+    pallas_packed on identical inputs — including the class-batched (K, n)
+    statistics shapes, non-multiple-of-block sizes, and columns where every
+    record carries the missing bin."""
+    rng = np.random.default_rng(n * 31 + K)
+    codes = rng.integers(0, NB, (n, F))
+    if all_missing_col:
+        codes[:, F // 2] = NB - 1          # the missing bin is the last code
+    codes = jnp.asarray(codes, jnp.uint8)
+    shape = (K, n) if K > 1 else (n,)
+    g = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    h = jnp.asarray(rng.uniform(0.1, 1.0, shape), jnp.float32)
+    nid = jnp.asarray(rng.integers(0, NN, shape), jnp.int32)
+
+    outs = {s: np.asarray(ops.build_histogram(
+        codes, g, h, nid, n_nodes=NN, n_bins=NB, strategy=s))
+        for s in STRATEGIES}
+    want_shape = (K, NN, F, NB, 2) if K > 1 else (NN, F, NB, 2)
+    for s, got in outs.items():
+        assert got.shape == want_shape, (s, got.shape)
+        np.testing.assert_allclose(got, outs["scatter"],
+                                   rtol=2e-5, atol=2e-5, err_msg=s)
+    # the all-missing column concentrates ALL mass in its last bin
+    if all_missing_col:
+        col = outs["scatter"][..., F // 2, :, :]
+        np.testing.assert_allclose(col[..., : NB - 1, :], 0.0, atol=1e-7)
+
+
 def test_mass_conservation():
     """sum over bins of any field's histogram == sum of (g, h) — the
     'every record hits exactly one bin per field' density property."""

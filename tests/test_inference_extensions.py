@@ -74,9 +74,9 @@ from repro.core.inference import pad_trees, sharded_predict
 from repro.data import make_tabular
 from repro.launch.mesh import make_mesh
 
-X, y, cats = make_tabular(2048, 5, 0, task="regression", seed=2)
+X, y, cats = make_tabular(1024, 5, 0, task="regression", seed=2)
 data = bin_dataset(X, max_bins=16)
-model = train(GBDTConfig(n_trees=6, max_depth=4,
+model = train(GBDTConfig(n_trees=4, max_depth=3,
                          hist_strategy="scatter"), data, y).model
 mesh = make_mesh((4, 2), ("data", "model"))
 padded = pad_trees(model, 2)

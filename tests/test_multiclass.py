@@ -1,0 +1,327 @@
+"""Multi-class softmax GBDT: loss calculus, end-to-end training, the
+class-batched kernels, and bundle/checkpoint round-trips."""
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import BoosterClassifier, ExecutionPlan, load, save
+from repro.core import GBDTConfig, bin_dataset, train
+from repro.core.losses import get_loss, multi_softmax
+from repro.data import make_tabular
+
+
+# --------------------------------------------------------------------------
+# softmax loss calculus vs autodiff
+# --------------------------------------------------------------------------
+def test_softmax_grad_hess_matches_autodiff():
+    rng = np.random.default_rng(0)
+    K, n = 5, 64
+    loss = multi_softmax(K)
+    m = jnp.asarray(rng.normal(size=(n, K)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, K, n), jnp.float32)
+
+    g, h = loss.grad_hess(m, y)
+    g_auto = jax.grad(lambda mm: jnp.sum(loss.value(mm, y)))(m)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_auto),
+                               rtol=1e-5, atol=1e-6)
+
+    # h is the exact DIAGONAL of the per-record Hessian: d^2 L_i / dm_ik^2
+    def value_one(mm, yy):
+        return loss.value(mm[None, :], yy[None])[0]
+
+    hess = jax.vmap(jax.hessian(value_one))(m, y)            # (n, K, K)
+    h_auto = jax.vmap(jnp.diag)(hess)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_auto),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_loss_registry_and_validation():
+    loss = get_loss("multi:softmax", 4)
+    assert loss.n_outputs == 4
+    with pytest.raises(ValueError, match="requires n_classes"):
+        get_loss("multi:softmax")
+    with pytest.raises(ValueError, match="n_classes >= 2"):
+        multi_softmax(1)
+    # scalar losses are untouched by the n_classes plumbing
+    assert get_loss("reg:squarederror").n_outputs is None
+
+
+def test_softmax_base_margin_is_centered_log_prior():
+    loss = multi_softmax(3)
+    y = jnp.asarray([0, 0, 0, 1, 2, 2], jnp.float32)
+    bm = np.asarray(loss.base_margin(y))
+    assert bm.shape == (3,)
+    np.testing.assert_allclose(bm.sum(), 0.0, atol=1e-6)
+    p = np.asarray(jax.nn.softmax(jnp.asarray(bm)))
+    np.testing.assert_allclose(p, [3 / 6, 1 / 6, 2 / 6], rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# end-to-end training
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def mc_data():
+    X, y, _ = make_tabular(2500, 8, 0, task="multiclass", n_classes=4,
+                           seed=0)
+    return X, y.astype(int)
+
+
+@pytest.fixture(scope="module")
+def mc_fitted(mc_data):
+    X, y = mc_data
+    est = BoosterClassifier(n_trees=20, max_depth=5, learning_rate=0.4,
+                            max_bins=32, seed=1)
+    est.fit(X, y)
+    return est
+
+
+def test_multiclass_learns_beats_majority(mc_data, mc_fitted):
+    X, y = mc_data
+    majority = np.bincount(y).max() / len(y)
+    assert majority < 0.3                       # near-balanced 4 classes
+    acc = float((mc_fitted.predict(X) == y).mean())
+    assert acc > 0.8, acc
+
+
+def test_multiclass_auto_detection_and_shapes(mc_data, mc_fitted):
+    X, y = mc_data
+    model = mc_fitted.model_
+    assert model.objective == "multi:softmax"
+    assert model.n_classes == 4
+    assert model.n_trees == 20 * 4              # K trees per round
+    assert model.n_rounds == 20
+    proba = mc_fitted.predict_proba(X)
+    assert proba.shape == (len(y), 4)
+    np.testing.assert_allclose(proba.sum(axis=1), 1.0, rtol=1e-5)
+    assert set(np.unique(mc_fitted.predict(X))) <= {0, 1, 2, 3}
+
+
+def test_multiclass_staged_predict_prefixes(mc_data, mc_fitted):
+    X, y = mc_data
+    stages = list(mc_fitted.staged_predict(X[:200]))
+    assert len(stages) == 20
+    assert stages[0].shape == (200, 4)
+    np.testing.assert_allclose(np.asarray(stages[-1]),
+                               mc_fitted.predict_proba(X[:200]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_multiclass_strategies_grow_identical_trees(mc_data):
+    """The K>1 parity acceptance: every histogram strategy grows the SAME
+    K-class forest (same splits; leaf values to fp tolerance)."""
+    X, y = mc_data
+    data = bin_dataset(X[:1200], max_bins=16)
+    results = {}
+    for s in ("scatter", "scatter_private", "sort", "onehot",
+              "pallas_grouped", "pallas_packed"):
+        cfg = GBDTConfig(n_trees=2, max_depth=3, objective="multi:softmax",
+                         n_classes=4, hist_strategy=s)
+        results[s] = train(cfg, data, y[:1200])
+    t0 = results["scatter"].model.trees
+    for s, r in results.items():
+        np.testing.assert_array_equal(np.asarray(r.model.trees.feature),
+                                      np.asarray(t0.feature), err_msg=s)
+        np.testing.assert_array_equal(np.asarray(r.model.trees.threshold),
+                                      np.asarray(t0.threshold), err_msg=s)
+        np.testing.assert_allclose(np.asarray(r.model.trees.leaf_value),
+                                   np.asarray(t0.leaf_value),
+                                   rtol=1e-4, atol=1e-5, err_msg=s)
+
+
+def test_multiclass_pallas_traversal_matches_reference(mc_data, mc_fitted):
+    X, _ = mc_data
+    codes = mc_fitted.binner_.transform(X[:400])
+    model = mc_fitted.model_
+    a = model.predict_margin(
+        codes, plan=ExecutionPlan.auto(traversal_strategy="reference"))
+    b = model.predict_margin(
+        codes, plan=ExecutionPlan.auto(traversal_strategy="pallas"))
+    assert a.shape == (400, 4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_multiclass_label_validation(mc_data):
+    X, y = mc_data
+    data = bin_dataset(X[:200], max_bins=16)
+    with pytest.raises(ValueError, match="labels must be integers"):
+        train(GBDTConfig(n_trees=1, max_depth=2,
+                         objective="multi:softmax", n_classes=3,
+                         hist_strategy="scatter"), data, y[:200])
+    # fractional labels are rejected, not silently truncated
+    with pytest.raises(ValueError, match="labels must be integers"):
+        train(GBDTConfig(n_trees=1, max_depth=2,
+                         objective="multi:softmax", n_classes=4,
+                         hist_strategy="scatter"), data,
+              y[:200] + 0.5)
+    with pytest.raises(ValueError, match="requires n_classes"):
+        GBDTConfig(objective="multi:softmax")
+    with pytest.raises(ValueError, match="depthwise"):
+        GBDTConfig(objective="multi:softmax", n_classes=3,
+                   grow_policy="lossguide")
+
+
+def test_classifier_n_classes_two_stays_binary():
+    """An explicit (redundant) n_classes=2 with binary labels must train
+    the scalar logistic path, not crash in config validation."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(300, 4))
+    y = (X[:, 0] > 0).astype(int)
+    est = BoosterClassifier(n_trees=2, max_depth=2, max_bins=16,
+                            n_classes=2)
+    est.fit(X, y)
+    assert est.model_.objective == "binary:logistic"
+    assert est.model_.n_classes == 1
+    assert est.predict_proba(X).shape == (300, 2)
+
+
+def test_classifier_scalar_objective_rejects_wide_k():
+    """An explicit scalar objective with n_classes > 2 must fail loudly,
+    not silently train a binary model on multi-class labels."""
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(100, 3))
+    y = rng.integers(0, 4, 100)
+    est = BoosterClassifier(n_trees=1, max_depth=2, max_bins=16,
+                            objective="binary:logistic", n_classes=4)
+    with pytest.raises(ValueError, match="conflicts with"):
+        est.fit(X, y)
+    # ...and the same when K comes from the labels instead of the param
+    est2 = BoosterClassifier(n_trees=1, max_depth=2, max_bins=16,
+                             objective="binary:logistic")
+    with pytest.raises(ValueError, match="labels span"):
+        est2.fit(X, y)
+
+
+def test_multiclass_eval_labels_validated(mc_data):
+    """Out-of-range labels in eval_set raise instead of producing NaN
+    eval loss (which silently breaks early stopping)."""
+    X, y = mc_data
+    data = bin_dataset(X[:200], max_bins=16)
+    ev = bin_dataset(X[200:260], max_bins=16)
+    bad = np.asarray(y[200:260]).copy()
+    bad[0] = 9                       # class id beyond K=4
+    with pytest.raises(ValueError, match="eval_set labels"):
+        train(GBDTConfig(n_trees=1, max_depth=2,
+                         objective="multi:softmax", n_classes=4,
+                         hist_strategy="scatter"), data, y[:200],
+              eval_set=(ev, bad))
+
+
+def test_classifier_soft_labels_with_explicit_binary_objective():
+    """Soft targets in [0, 1] (label smoothing / distillation) remain
+    valid for an EXPLICIT binary:logistic objective; only auto-detection
+    and softmax require integer class ids."""
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(300, 4))
+    y_soft = 0.5 + 0.4 * np.tanh(X[:, 0])        # floats in (0.1, 0.9)
+    est = BoosterClassifier(n_trees=2, max_depth=2, max_bins=16,
+                            objective="binary:logistic")
+    est.fit(X, y_soft)
+    assert est.model_.objective == "binary:logistic"
+    assert est.predict_proba(X).shape == (300, 2)
+    with pytest.raises(ValueError, match="integers"):
+        BoosterClassifier(n_trees=1).fit(X, y_soft)  # auto-detect needs ids
+
+
+def test_classifier_forced_wider_k():
+    """n_classes wider than the observed label set forces softmax."""
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(300, 4))
+    y = (X[:, 0] > 0).astype(int)           # labels only {0, 1}
+    est = BoosterClassifier(n_trees=2, max_depth=2, max_bins=16,
+                            n_classes=5)
+    est.fit(X, y)
+    assert est.model_.objective == "multi:softmax"
+    assert est.model_.n_classes == 5
+    assert est.predict_proba(X).shape == (300, 5)
+
+
+# --------------------------------------------------------------------------
+# serialization: bundles, checkpoints, pre-multi-class compatibility
+# --------------------------------------------------------------------------
+def test_multiclass_bundle_roundtrip_bit_exact(mc_data, mc_fitted, tmp_path):
+    X, _ = mc_data
+    path = str(tmp_path / "bundle")
+    mc_fitted.save(path)
+    est2 = load(path)
+    assert isinstance(est2, BoosterClassifier)
+    assert est2.model_.n_classes == 4
+    np.testing.assert_array_equal(est2.predict_proba(X),
+                                  mc_fitted.predict_proba(X))
+    np.testing.assert_array_equal(est2.predict(X), mc_fitted.predict(X))
+
+
+def test_multiclass_checkpoint_resume_bit_exact(mc_data, tmp_path):
+    X, y = mc_data
+    d = str(tmp_path / "ckpt")
+    kw = dict(max_depth=3, learning_rate=0.3, max_bins=16, seed=7)
+    a = BoosterClassifier(n_trees=3, **kw)
+    a.fit(X, y, checkpoint_dir=d)
+    # checkpoint steps count ROUNDS (not rounds*K): the final save must
+    # not outrank later resumes' per-round saves
+    from repro.api import load_checkpoint
+    _, step = load_checkpoint(d)
+    assert step == 3
+    # a completed-run restore grows 0 extra rounds: restored K-class
+    # predictions must be bit-exact
+    b = BoosterClassifier(n_trees=3, **kw)
+    b.fit(X, y, checkpoint_dir=d)
+    assert b.n_trees_ == 3 * 4
+    np.testing.assert_array_equal(a.predict_proba(X), b.predict_proba(X))
+    # a genuine mid-run resume (3 more rounds on top of the checkpoint)
+    # matches the straight 6-round fit to fp accumulation tolerance
+    c = BoosterClassifier(n_trees=6, **kw)
+    c.fit(X, y, checkpoint_dir=d)
+    assert c.n_trees_ == 6 * 4
+    straight = BoosterClassifier(n_trees=6, **kw)
+    straight.fit(X, y)
+    np.testing.assert_allclose(c.predict_proba(X),
+                               straight.predict_proba(X),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_multiclass_warm_start_with_partial_label_batch(mc_data, mc_fitted):
+    """Continuing a K=4 model on a batch whose labels happen to lack the
+    highest classes keeps the model's K (observed labels are only a lower
+    bound), instead of erroring or flipping to binary."""
+    X, y = mc_data
+    sub = y < 2                       # labels only {0, 1} in this batch
+    cont = BoosterClassifier(n_trees=2, max_depth=5, learning_rate=0.4,
+                             max_bins=32, seed=1)
+    cont.fit(X[sub], y[sub], xgb_model=mc_fitted)
+    assert cont.model_.objective == "multi:softmax"
+    assert cont.model_.n_classes == 4
+    assert cont.model_.n_rounds == 20 + 2
+    assert cont.predict_proba(X).shape == (len(y), 4)
+    # a regressor warm-starting from a multiclass model is a real mismatch
+    from repro.api import BoosterRegressor
+    bad = BoosterRegressor(n_trees=1, max_depth=5, max_bins=32)
+    with pytest.raises(ValueError, match="objective"):
+        bad.fit(X, y.astype(float), xgb_model=mc_fitted)
+
+
+def test_pre_multiclass_bundle_still_loads(tmp_path):
+    """Bundles written before n_classes existed (meta lacks the key) must
+    load as K=1 models with identical predictions."""
+    X, y, _ = make_tabular(400, 5, 0, task="regression", seed=3)
+    from repro.api import BoosterRegressor
+    est = BoosterRegressor(n_trees=3, max_depth=3, max_bins=16)
+    est.fit(X, y)
+    path = str(tmp_path / "legacy")
+    save(path, est.to_pipeline())
+    # strip the new meta key in place — the sha256 covers arrays.npz only
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    assert manifest["meta"]["model"].pop("n_classes") == 1
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    pipe = load(path)
+    assert pipe.model.n_classes == 1
+    np.testing.assert_array_equal(np.asarray(pipe.predict(X)),
+                                  np.asarray(est.predict(X)))

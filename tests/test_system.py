@@ -1,6 +1,7 @@
 """End-to-end behaviour tests for the paper's system."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
 
 from repro.core import GBDTConfig, GBDTModel, bin_dataset, train
 from repro.data import make_tabular, paper_dataset
@@ -9,10 +10,10 @@ from repro.kernels import ops
 
 def test_full_pipeline_regression():
     """raw floats -> binning -> boosting -> batch inference, end to end."""
-    X, y, cats = make_tabular(3000, 6, 3, n_cats=8, task="regression",
+    X, y, cats = make_tabular(1500, 6, 3, n_cats=8, task="regression",
                               missing_rate=0.03, seed=0)
     data = bin_dataset(X, max_bins=32, categorical_fields=cats)
-    res = train(GBDTConfig(n_trees=25, max_depth=5, learning_rate=0.3,
+    res = train(GBDTConfig(n_trees=15, max_depth=5, learning_rate=0.3,
                            hist_strategy="scatter"), data, y)
     pred = np.asarray(res.model.predict(data))
     r2 = 1 - np.mean((pred - y) ** 2) / np.var(y)
@@ -21,13 +22,13 @@ def test_full_pipeline_regression():
 
 def test_predict_equals_sum_of_trees():
     """Batch inference (§III-D) == margin accumulation during training."""
-    X, y, cats = make_tabular(2000, 5, 0, task="regression", seed=1)
+    X, y, cats = make_tabular(1000, 5, 0, task="regression", seed=1)
     data = bin_dataset(X, max_bins=16)
     res = train(GBDTConfig(n_trees=6, max_depth=4, learning_rate=0.5,
                            hist_strategy="scatter"), data, y)
     model = res.model
     total = model.predict_margin(data.codes)
-    acc = jnp.full((2000,), model.base_margin)
+    acc = jnp.full((1000,), model.base_margin)
     for i in range(model.n_trees):
         one = ops.traverse_tree(
             type(model.trees)(*[a[i] for a in model.trees]), data.codes,
@@ -37,21 +38,22 @@ def test_predict_equals_sum_of_trees():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_paper_dataset_analogs_train():
     """Each Table-III analog trains to better-than-baseline loss."""
     for name in ("higgs", "allstate"):
-        X, y, cats, spec = paper_dataset(name, n_override=2500)
-        data = bin_dataset(X, max_bins=128, categorical_fields=cats)
+        X, y, cats, spec = paper_dataset(name, n_override=1200)
+        data = bin_dataset(X, max_bins=64, categorical_fields=cats)
         obj = ("binary:logistic" if spec.task == "binary"
                else "reg:squarederror")
-        res = train(GBDTConfig(n_trees=10, max_depth=4, learning_rate=0.3,
+        res = train(GBDTConfig(n_trees=6, max_depth=4, learning_rate=0.3,
                                objective=obj, hist_strategy="scatter"),
                     data, y)
         assert res.history["train_loss"][-1] < res.history["train_loss"][0]
 
 
 def test_model_state_roundtrip():
-    X, y, _ = make_tabular(800, 4, 0, task="regression", seed=2)
+    X, y, _ = make_tabular(400, 4, 0, task="regression", seed=2)
     data = bin_dataset(X, max_bins=16)
     res = train(GBDTConfig(n_trees=3, max_depth=3, hist_strategy="scatter"),
                 data, y)

@@ -12,7 +12,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import BOOSTER, IDEAL_CPU, csv_row, time_call
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.kernels.ref import TreeArrays
 
 

@@ -13,7 +13,6 @@ import numpy as np
 
 from benchmarks.common import BOOSTER, IDEAL_CPU, IDEAL_GPU, csv_row, time_call
 from benchmarks.bench_training import modeled_training_time
-from repro.core import bin_dataset
 from repro.data import paper_dataset
 from repro.kernels import ops
 

@@ -6,12 +6,20 @@ Prints ``name,us_per_call,derived`` CSV.  Figures covered:
   Fig 9  optimization isolation    bench_opts
   Fig 12 dataset-size sensitivity  bench_scaling
   Fig 13 batch inference           bench_inference
+  (out-of-core)                    bench_streaming
 The roofline table (EXPERIMENTS.md §Roofline) is produced by the dry-run
 artifacts via ``python -m repro.launch.report``.
+
+``--smoke`` is the CI lane: tiny scales, every bench family exercised,
+and ``--json BENCH_ci.json`` captures the rows (plus wall time and
+failure state per bench) as the machine-readable perf-trajectory
+artifact that CI uploads on every push.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -22,32 +30,59 @@ def main() -> None:
                     help="dataset scale vs the (already scaled-down) specs")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names to run")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke lane: minimal scales, all benches")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as a JSON artifact")
     args = ap.parse_args()
+    scale = 0.05 if args.smoke else args.scale
 
     from benchmarks import (bench_breakdown, bench_inference,
                             bench_multiclass, bench_opts, bench_scaling,
-                            bench_training)
+                            bench_streaming, bench_training)
     benches = {
-        "breakdown": lambda: bench_breakdown.run(scale=args.scale),
-        "training": lambda: bench_training.run(scale=args.scale),
-        "opts": lambda: bench_opts.run(scale=args.scale),
-        "scaling": lambda: bench_scaling.run(base_scale=args.scale),
+        "breakdown": lambda: bench_breakdown.run(scale=scale),
+        "training": lambda: bench_training.run(scale=scale),
+        "opts": lambda: bench_opts.run(scale=scale),
+        "scaling": lambda: bench_scaling.run(base_scale=scale),
         "inference": lambda: bench_inference.run(
-            n=max(2000, int(20000 * args.scale))),
-        "multiclass": lambda: bench_multiclass.run(scale=args.scale),
+            n=max(2000, int(20000 * scale))),
+        "multiclass": lambda: bench_multiclass.run(scale=scale),
+        "streaming": lambda: bench_streaming.run(
+            scale=scale, n_fields=16 if args.smoke else 64,
+            n_trees=3 if args.smoke else 5),
     }
     selected = (args.only.split(",") if args.only else list(benches))
+    report = {"smoke": args.smoke, "scale": scale,
+              "python": platform.python_version(), "benches": {}}
     print("name,us_per_call,derived")
+    failed = False
     for name in selected:
         t0 = time.time()
+        entry = {"rows": [], "seconds": None, "error": None}
+        report["benches"][name] = entry
         try:
             for row in benches[name]():
                 print(row)
                 sys.stdout.flush()
-        except Exception as e:  # noqa: BLE001
+                cells = row.split(",", 2)
+                entry["rows"].append({
+                    "name": cells[0],
+                    "us_per_call": float(cells[1]) if len(cells) > 1 else 0.0,
+                    "derived": cells[2] if len(cells) > 2 else ""})
+        except Exception as e:  # noqa: BLE001 — keep the artifact complete
             print(f"{name}_FAILED,0,{e!r}")
-            raise
-        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+            entry["error"] = repr(e)
+            failed = True
+        entry["seconds"] = round(time.time() - t0, 2)
+        print(f"# {name} done in {entry['seconds']:.1f}s", file=sys.stderr)
+
+    if args.json is not None:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

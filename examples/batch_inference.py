@@ -9,7 +9,6 @@ one-hot walk.
 import argparse
 import time
 
-import numpy as np
 import jax
 
 from repro.api import BoosterClassifier, ExecutionPlan, make_tabular

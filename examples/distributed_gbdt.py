@@ -9,11 +9,10 @@ psum at the end of step ①), fields/histogram slabs across the model axis
 
     python examples/distributed_gbdt.py
 """
-import numpy as np   # noqa: E402
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import GBDTConfig, bin_dataset, train, fit_tree  # noqa: E402
+from repro.core import bin_dataset, fit_tree  # noqa: E402
 from repro.data import make_tabular  # noqa: E402
 from repro.distributed.sharding import (gbdt_shardings, pjit_fit_tree,  # noqa: E402
                                         shard_dataset)

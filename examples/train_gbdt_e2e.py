@@ -15,7 +15,6 @@ valid checkpoint and reproduces the uninterrupted run exactly
 import argparse
 import os
 
-import numpy as np
 
 from repro.api import BoosterClassifier, ExecutionPlan, paper_dataset
 from repro.distributed.fault import StepJournal

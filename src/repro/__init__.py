@@ -1,0 +1,5 @@
+"""repro — a JAX/Pallas reproduction of the Booster GBDT accelerator.
+
+Regular package marker (required for ``pip install .`` discovery); the
+public entry point is :mod:`repro.api`.
+"""

@@ -29,6 +29,12 @@ _LAZY = {
     # dataset helpers re-exported so the quickstart needs one import root
     "make_tabular": ("repro.data.synthetic", "make_tabular"),
     "paper_dataset": ("repro.data.synthetic", "paper_dataset"),
+    # out-of-core sources (fit(data=...) inputs)
+    "DataSource": ("repro.data.pipeline", "DataSource"),
+    "ArraySource": ("repro.data.pipeline", "ArraySource"),
+    "NpzShardSource": ("repro.data.pipeline", "NpzShardSource"),
+    "SyntheticSource": ("repro.data.synthetic", "SyntheticSource"),
+    "write_npz_shards": ("repro.data.pipeline", "write_npz_shards"),
 }
 
 __all__ = ["ExecutionPlan", "resolve_plan"] + sorted(_LAZY)

@@ -28,9 +28,10 @@ from repro.kernels.ref import TreeArrays
 _PARAM_DEFAULTS: Dict[str, Any] = dict(
     n_trees=100, max_depth=6, learning_rate=0.1, lambda_=1.0, gamma=0.0,
     min_child_weight=1.0, objective=None, subsample=1.0,
-    colsample_bytree=1.0, grow_policy="depthwise", max_leaves=None,
+    colsample_bytree=1.0, goss_top_rate=0.0, goss_other_rate=0.0,
+    grow_policy="depthwise", max_leaves=None,
     early_stopping_rounds=None, max_bins=256, categorical_fields=None,
-    n_classes=None, seed=0, plan=None)
+    sketch_size=32768, n_classes=None, seed=0, plan=None)
 
 
 class NotFittedError(RuntimeError):
@@ -128,6 +129,13 @@ class BoosterEstimator:
         return self._result.step_times if self._result is not None else {}
 
     @property
+    def stats_(self) -> Dict[str, Any]:
+        """Trainer extras from the last ``fit`` (streaming fits report
+        n_rows / chunk_rows / n_chunks / passes_per_round)."""
+        self._check_fitted()
+        return self._result.stats if self._result is not None else {}
+
+    @property
     def feature_importances_(self) -> np.ndarray:
         """Gain-style per-field importances (normalized to sum 1)."""
         return feature_importance(self._check_fitted(), kind="gain")
@@ -157,13 +165,16 @@ class BoosterEstimator:
             objective=objective or self.objective or self._default_objective,
             subsample=self.subsample,
             colsample_bytree=self.colsample_bytree,
+            goss_top_rate=self.goss_top_rate,
+            goss_other_rate=self.goss_other_rate,
             grow_policy=self.grow_policy, max_leaves=self.max_leaves,
             early_stopping_rounds=self.early_stopping_rounds,
             n_classes=n_classes,
             seed=self.seed)
 
     # -- fit ---------------------------------------------------------------
-    def fit(self, X, y, *, eval_set: Optional[Tuple] = None,
+    def fit(self, X=None, y=None, *, data: Any = None,
+            eval_set: Optional[Tuple] = None,
             xgb_model: Any = None, plan: Optional[ExecutionPlan] = None,
             checkpoint_dir: Optional[str] = None,
             checkpoint_every: int = 25, callback=None,
@@ -171,6 +182,14 @@ class BoosterEstimator:
         """Bin ``X`` (raw floats, NaN == missing) and boost ``self.n_trees``
         trees.
 
+        data:            out-of-core alternative to ``(X, y)``: a
+                         :class:`repro.data.DataSource` (or an npz-shard
+                         directory path, or an ``(X, y)`` tuple) streamed
+                         in ``plan.chunk_bytes``-sized chunks — bin edges
+                         come from quantile *sketches* and the binned
+                         matrix is never materialized.  Setting
+                         ``plan.chunk_bytes`` with plain ``(X, y)`` arrays
+                         also routes through this streaming path.
         eval_set:        optional raw ``(X_val, y_val)`` pair — enables the
                          eval history and ``early_stopping_rounds``.
         xgb_model:       warm start: a fitted estimator, ``GBDTPipeline``,
@@ -184,77 +203,32 @@ class BoosterEstimator:
                          any existing checkpoints (a warning is emitted).
         """
         plan = self._resolve_plan(plan)
+        if data is None and plan.chunk_bytes is not None and X is not None:
+            if y is None:
+                raise TypeError("fit needs (X, y) arrays or data=DataSource")
+            from repro.data.pipeline import ArraySource
+            # no eager float64 copy — the binner converts per chunk, which
+            # is the whole point of the chunk_bytes memory cap
+            data, X, y = ArraySource(np.asarray(X), np.asarray(y)), None, None
+        if data is not None:
+            if X is not None or y is not None:
+                raise ValueError(
+                    "pass either (X, y) arrays or data=..., not both")
+            return self._fit_streaming(
+                data, eval_set=eval_set, xgb_model=xgb_model, plan=plan,
+                checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every, callback=callback,
+                verbose=verbose)
+        if X is None or y is None:
+            raise TypeError("fit needs (X, y) arrays or data=DataSource")
         X = np.asarray(X, dtype=np.float64)
         y = np.asarray(y)
-        n_trees = self.n_trees
         objective, n_classes = self._resolve_objective(y)
 
-        init_model, binner = self._warm_start(xgb_model)
-        if checkpoint_dir is not None and serialize.has_checkpoint(
-                checkpoint_dir):
-            if xgb_model is not None:
-                warnings.warn(
-                    f"{checkpoint_dir!r} already holds checkpoints; the "
-                    "explicit xgb_model wins and they are ignored (new "
-                    "checkpoints will overwrite colliding steps)",
-                    UserWarning, stacklevel=2)
-            else:
-                try:
-                    restored, step = serialize.load_checkpoint(
-                        checkpoint_dir)
-                except (FileNotFoundError, ValueError, KeyError):
-                    # step dirs exist but none hold a valid bundle payload
-                    # (legacy format or corruption) — train fresh
-                    restored = None
-                if restored is not None:
-                    init_model, binner = self._warm_parts(restored)
-                    # multi-class rounds grow K trees each — count rounds
-                    n_trees = max(0, self.n_trees - init_model.n_rounds)
-                    if verbose:
-                        print(f"[{type(self).__name__}] resuming from "
-                              f"checkpoint step {step} "
-                              f"({init_model.n_rounds} rounds)")
-
-        if init_model is not None:
-            # fail early with a clear message instead of a shape error
-            # when stacking warm-start trees with freshly grown ones
-            if init_model.max_depth != self.max_depth:
-                raise ValueError(
-                    f"warm-start/checkpoint model has max_depth="
-                    f"{init_model.max_depth} but this estimator is "
-                    f"configured with max_depth={self.max_depth}")
-            if init_model.n_classes > 1:
-                # the fitted model's objective/K win: labels observed in a
-                # continuation batch are only a LOWER bound on K (the batch
-                # may lack the highest classes), so the classifier's
-                # auto-detection must not narrow — or flip to binary — an
-                # existing softmax model.  Non-classification objectives
-                # (an explicit setting, or a regressor's default) are a
-                # genuine mismatch.
-                if (self.objective not in (None, init_model.objective)
-                        or objective not in ("binary:logistic",
-                                             init_model.objective)):
-                    raise ValueError(
-                        f"warm-start/checkpoint model was trained with "
-                        f"objective={init_model.objective!r} but this "
-                        f"estimator uses {objective!r}")
-                if self.n_classes not in (None, init_model.n_classes):
-                    raise ValueError(
-                        f"warm-start/checkpoint model has n_classes="
-                        f"{init_model.n_classes} but this estimator sets "
-                        f"n_classes={self.n_classes}")
-                if (n_classes or 0) > init_model.n_classes:
-                    raise ValueError(
-                        f"labels reach class {n_classes - 1} but the "
-                        f"warm-start/checkpoint model has n_classes="
-                        f"{init_model.n_classes}")
-                objective = init_model.objective
-                n_classes = init_model.n_classes
-            elif init_model.objective != objective:
-                raise ValueError(
-                    f"warm-start/checkpoint model was trained with "
-                    f"objective={init_model.objective!r} but this "
-                    f"estimator uses {objective!r}")
+        init_model, binner, n_trees = self._resume_or_warm_start(
+            xgb_model, checkpoint_dir, verbose)
+        objective, n_classes = self._check_warm_model(init_model, objective,
+                                                      n_classes)
 
         if binner is None:
             binner = Binner(max_bins=self.max_bins,
@@ -284,6 +258,159 @@ class BoosterEstimator:
         if checkpoint_dir is not None:
             # step numbers count ROUNDS (same unit as the per-round callback
             # saves) so multi-class resume never sees mixed-unit steps
+            serialize.save_checkpoint(checkpoint_dir, self,
+                                      result.model.n_rounds)
+        return self
+
+    def _resume_or_warm_start(self, xgb_model: Any,
+                              checkpoint_dir: Optional[str],
+                              verbose: bool, stacklevel: int = 3):
+        """(init_model, binner, n_trees_to_grow) from an explicit warm
+        start and/or the newest valid step checkpoint (xgb_model wins).
+        ``stacklevel`` points warnings at the user's fit() call — the
+        streaming path adds one frame."""
+        n_trees = self.n_trees
+        init_model, binner = self._warm_start(xgb_model)
+        if checkpoint_dir is not None and serialize.has_checkpoint(
+                checkpoint_dir):
+            if xgb_model is not None:
+                warnings.warn(
+                    f"{checkpoint_dir!r} already holds checkpoints; the "
+                    "explicit xgb_model wins and they are ignored (new "
+                    "checkpoints will overwrite colliding steps)",
+                    UserWarning, stacklevel=stacklevel)
+            else:
+                try:
+                    restored, step = serialize.load_checkpoint(
+                        checkpoint_dir)
+                except (FileNotFoundError, ValueError, KeyError):
+                    # step dirs exist but none hold a valid bundle payload
+                    # (legacy format or corruption) — train fresh
+                    restored = None
+                if restored is not None:
+                    init_model, binner = self._warm_parts(restored)
+                    # multi-class rounds grow K trees each — count rounds
+                    n_trees = max(0, self.n_trees - init_model.n_rounds)
+                    if verbose:
+                        print(f"[{type(self).__name__}] resuming from "
+                              f"checkpoint step {step} "
+                              f"({init_model.n_rounds} rounds)")
+        return init_model, binner, n_trees
+
+    def _check_warm_model(self, init_model: Optional[GBDTModel],
+                          objective: str, n_classes: Optional[int]):
+        """Validate warm-start/checkpoint compatibility; returns the
+        (objective, n_classes) pair the continued fit must use."""
+        if init_model is None:
+            return objective, n_classes
+        # fail early with a clear message instead of a shape error
+        # when stacking warm-start trees with freshly grown ones
+        if init_model.max_depth != self.max_depth:
+            raise ValueError(
+                f"warm-start/checkpoint model has max_depth="
+                f"{init_model.max_depth} but this estimator is "
+                f"configured with max_depth={self.max_depth}")
+        if init_model.n_classes > 1:
+            # the fitted model's objective/K win: labels observed in a
+            # continuation batch are only a LOWER bound on K (the batch
+            # may lack the highest classes), so the classifier's
+            # auto-detection must not narrow — or flip to binary — an
+            # existing softmax model.  Non-classification objectives
+            # (an explicit setting, or a regressor's default) are a
+            # genuine mismatch.
+            if (self.objective not in (None, init_model.objective)
+                    or objective not in ("binary:logistic",
+                                         init_model.objective)):
+                raise ValueError(
+                    f"warm-start/checkpoint model was trained with "
+                    f"objective={init_model.objective!r} but this "
+                    f"estimator uses {objective!r}")
+            if self.n_classes not in (None, init_model.n_classes):
+                raise ValueError(
+                    f"warm-start/checkpoint model has n_classes="
+                    f"{init_model.n_classes} but this estimator sets "
+                    f"n_classes={self.n_classes}")
+            if (n_classes or 0) > init_model.n_classes:
+                raise ValueError(
+                    f"labels reach class {n_classes - 1} but the "
+                    f"warm-start/checkpoint model has n_classes="
+                    f"{init_model.n_classes}")
+            return init_model.objective, init_model.n_classes
+        if init_model.objective != objective:
+            raise ValueError(
+                f"warm-start/checkpoint model was trained with "
+                f"objective={init_model.objective!r} but this "
+                f"estimator uses {objective!r}")
+        return objective, n_classes
+
+    # -- out-of-core fit ---------------------------------------------------
+    def _fit_streaming(self, data, *, eval_set, xgb_model, plan,
+                       checkpoint_dir, checkpoint_every, callback,
+                       verbose) -> "BoosterEstimator":
+        """``fit`` over a chunked DataSource: one sketch+label pass builds
+        the binner (``StreamingBinner``), then ``core.gbdt.train_streaming``
+        re-streams chunks per tree level — the full binned matrix never
+        exists on device or host."""
+        from repro.core.binning import StreamingBinner
+        from repro.core.gbdt import train_streaming
+        from repro.data.pipeline import as_source
+
+        source = as_source(data)
+        F = source.n_fields
+        init_model, binner, n_trees = self._resume_or_warm_start(
+            xgb_model, checkpoint_dir, verbose, stacklevel=4)
+
+        # pass 0 — gather labels (always) + feed the quantile sketches
+        # (only when no warm binner already fixes the bin edges)
+        sketch_rows = plan.chunk_rows(F)
+        if binner is None:
+            binner = StreamingBinner(
+                max_bins=self.max_bins,
+                categorical_fields=self.categorical_fields,
+                sketch_size=self.sketch_size)
+            sketch = binner
+        else:
+            sketch = None
+        ys = []
+        for X_chunk, y_chunk in source.chunks(sketch_rows):
+            if y_chunk is None:
+                raise ValueError(
+                    "streaming fit needs a labeled DataSource (every "
+                    "chunk must yield a y)")
+            if sketch is not None:
+                sketch.partial_fit(X_chunk)
+            ys.append(np.asarray(y_chunk))
+        if not ys:
+            raise ValueError("DataSource yielded no chunks")
+        if sketch is not None:
+            sketch.finalize()
+        y = np.concatenate(ys)
+
+        objective, n_classes = self._resolve_objective(y)
+        objective, n_classes = self._check_warm_model(init_model, objective,
+                                                      n_classes)
+
+        ev = None
+        if eval_set is not None:
+            X_val, y_val = eval_set
+            ev = (binner.transform(np.asarray(X_val, dtype=np.float64)),
+                  np.asarray(y_val, dtype=np.float32))
+
+        def cb(t_idx, model):
+            if callback is not None:
+                callback(t_idx, model)
+            if (checkpoint_dir is not None
+                    and (t_idx + 1) % checkpoint_every == 0):
+                serialize.save_checkpoint(
+                    checkpoint_dir,
+                    GBDTPipeline(binner=binner, model=model), t_idx + 1)
+
+        result = train_streaming(
+            self._config(n_trees, objective, n_classes), source, binner, y,
+            eval_set=ev, init_model=init_model, callback=cb,
+            verbose=verbose, plan=plan)
+        self._model, self._binner, self._result = result.model, binner, result
+        if checkpoint_dir is not None:
             serialize.save_checkpoint(checkpoint_dir, self,
                                       result.model.n_rounds)
         return self

@@ -53,6 +53,11 @@ class ExecutionPlan:
     records_per_block:   Pallas histogram grid — records per kernel block
     fields_per_block:    Pallas histogram grid — fields per kernel block
     host_offload_split:  run step ② split selection on host (paper's offload)
+    chunk_bytes:         out-of-core training budget — caps the bytes of
+                         binned records resident on device at once; when
+                         set, ``fit(data=...)`` streams chunk-sized
+                         histogram/partition passes instead of
+                         materializing the matrix (None = in-memory)
     mesh:                optional ``jax.sharding.Mesh``; when set, ensemble
                          inference shards trees over the ``"model"`` axis and
                          records over the data axes (paper §III-D)
@@ -65,9 +70,13 @@ class ExecutionPlan:
     records_per_block: int = 512
     fields_per_block: int = 8
     host_offload_split: bool = False
+    chunk_bytes: Optional[int] = None
     mesh: Optional[jax.sharding.Mesh] = None
 
     def __post_init__(self):
+        if self.chunk_bytes is not None and self.chunk_bytes <= 0:
+            raise ValueError("chunk_bytes must be positive (or None for "
+                             "in-memory training)")
         if self.hist_strategy not in HIST_STRATEGIES + ("auto",):
             raise ValueError(
                 f"unknown histogram strategy {self.hist_strategy!r}; "
@@ -113,6 +122,27 @@ class ExecutionPlan:
 
     def replace(self, **changes) -> "ExecutionPlan":
         return dataclasses.replace(self, **changes)
+
+    # -- out-of-core chunking ----------------------------------------------
+    DEFAULT_CHUNK_BYTES = 1 << 26          # 64 MiB of resident chunk state
+
+    def chunk_rows(self, n_fields: int, n_classes: int = 1) -> int:
+        """Rows per streamed chunk under the ``chunk_bytes`` budget.
+
+        Per-row resident footprint during a chunked pass: the uint8 code
+        row plus its column-major transpose (2F bytes) and the per-class
+        float32 g/h/node-id triple (12K bytes).
+        """
+        budget = self.chunk_bytes or self.DEFAULT_CHUNK_BYTES
+        per_row = 2 * max(n_fields, 1) + 12 * max(n_classes, 1)
+        return max(256, budget // per_row)
+
+    def without_chunking(self) -> "ExecutionPlan":
+        """Drop ``chunk_bytes`` so kernel-level jits (which take the plan
+        as a static argument) don't recompile across chunk budgets."""
+        if self.chunk_bytes is None:
+            return self
+        return dataclasses.replace(self, chunk_bytes=None)
 
     def describe(self) -> str:
         m = (f"mesh{dict(self.mesh.shape)}" if self.mesh is not None

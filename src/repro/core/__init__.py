@@ -1,8 +1,11 @@
-from repro.core.binning import BinnedDataset, Binner, bin_dataset, dataset_from_codes
-from repro.core.gbdt import GBDTConfig, GBDTModel, TrainResult, train
+from repro.core.binning import (BinnedDataset, Binner, StreamingBinner,
+                                bin_dataset, dataset_from_codes)
+from repro.core.gbdt import (GBDTConfig, GBDTModel, TrainResult, goss_weights,
+                             train, train_streaming)
 from repro.core.losses import LOSSES, get_loss
 from repro.core.splits import SplitDecision, find_best_splits
-from repro.core.tree import fit_forest, fit_tree, fit_tree_lossguide
+from repro.core.tree import (fit_forest, fit_forest_chunked, fit_tree,
+                             fit_tree_lossguide)
 from repro.core.inference import (GBDTPipeline, feature_importance,
                                   pad_trees, sharded_predict)
 from repro.kernels.ref import TreeArrays

@@ -109,7 +109,10 @@ class Binner:
         return self
 
     # -- transform ----------------------------------------------------------
-    def transform(self, X: np.ndarray) -> BinnedDataset:
+    def transform_codes(self, X: np.ndarray) -> np.ndarray:
+        """Raw (n, F) uint8 bin codes on the host — the chunk-sized unit
+        the streaming trainer binned-transforms per pass (no device copies
+        and no redundant column-major twin, unlike ``transform``)."""
         if self._edges is None:
             raise RuntimeError("Binner.fit must run before transform")
         X = np.asarray(X, dtype=np.float64)
@@ -126,6 +129,10 @@ class Binner:
                 c = np.searchsorted(self._edges[f], np.where(nan, 0.0, col),
                                     side="right")
             codes[:, f] = np.where(nan, missing_code, c).astype(np.uint8)
+        return codes
+
+    def transform(self, X: np.ndarray) -> BinnedDataset:
+        codes = self.transform_codes(X)
         codes_j = jnp.asarray(codes)
         return BinnedDataset(
             codes=codes_j,
@@ -138,6 +145,178 @@ class Binner:
 
     def fit_transform(self, X: np.ndarray) -> BinnedDataset:
         return self.fit(X).transform(X)
+
+
+class _QuantileSketch:
+    """Bounded-memory weighted quantile summary (merge-and-compress).
+
+    Values are buffered verbatim until ``capacity`` is exceeded, at which
+    point the summary is compressed to ``capacity`` evenly spaced (by
+    cumulative weight) support points.  While uncompressed the summary is
+    *exact*: ``quantiles`` reproduces ``np.quantile`` of the full stream
+    bit-for-bit, which is what the sketch-vs-exact parity tests pin down.
+    """
+
+    __slots__ = ("capacity", "values", "weights", "exact", "_buf")
+
+    def __init__(self, capacity: int):
+        if capacity < 8:
+            raise ValueError("sketch capacity must be >= 8")
+        self.capacity = capacity
+        self.values = np.empty((0,), np.float64)
+        self.weights = np.empty((0,), np.float64)
+        self.exact = True
+        self._buf: list = []
+
+    @property
+    def n_support(self) -> int:
+        return self.values.size + sum(b.size for b in self._buf)
+
+    def update(self, vals: np.ndarray) -> None:
+        if vals.size == 0:
+            return
+        self._buf.append(np.asarray(vals, np.float64))
+        if self.n_support > 2 * self.capacity:
+            self._compress()
+
+    def _flush(self) -> None:
+        if self._buf:
+            self.values = np.concatenate([self.values] + self._buf)
+            self.weights = np.concatenate(
+                [self.weights] + [np.ones((b.size,)) for b in self._buf])
+            self._buf = []
+
+    def _compress(self) -> None:
+        self._flush()
+        if self.values.size <= self.capacity:
+            return
+        order = np.argsort(self.values, kind="stable")
+        v, w = self.values[order], self.weights[order]
+        total = float(w.sum())
+        mid = np.cumsum(w) - 0.5 * w          # midpoint cumulative weight
+        pts = (np.arange(self.capacity) + 0.5) / self.capacity * total
+        self.values = np.interp(pts, mid, v)
+        self.weights = np.full((self.capacity,), total / self.capacity)
+        self.exact = False
+
+    def quantiles(self, qs: np.ndarray) -> np.ndarray:
+        """Quantile estimates; exact (``np.quantile``) when uncompressed."""
+        self._flush()
+        if self.values.size == 0:
+            return np.empty((0,), np.float64)
+        if self.exact:
+            return np.quantile(self.values, qs)
+        order = np.argsort(self.values, kind="stable")
+        v, w = self.values[order], self.weights[order]
+        total = float(w.sum())
+        mid = (np.cumsum(w) - 0.5 * w) / total
+        return np.interp(qs, mid, v)
+
+
+class StreamingBinner(Binner):
+    """Out-of-core binner: quantile *sketches* over an iterator of chunks.
+
+    Drop-in for :class:`Binner` when ``X`` cannot be materialized — feed
+    chunks through ``partial_fit`` (or a whole :class:`repro.data.DataSource`
+    through ``fit_source``), then ``finalize`` computes the same per-field
+    edge/category tables ``Binner.fit`` produces.  ``transform`` is
+    inherited unchanged, so downstream code cannot tell the binners apart.
+
+    For streams no longer than ``sketch_size`` the sketch never compresses
+    and the resulting edges are *bit-identical* to ``Binner.fit`` on the
+    concatenated stream; beyond that the edges are approximate quantiles
+    with bounded (merge-and-compress) summary error.
+    """
+
+    def __init__(self, max_bins: int = 256,
+                 categorical_fields: Optional[Sequence[int]] = None,
+                 sketch_size: int = 32768):
+        super().__init__(max_bins, categorical_fields)
+        self.sketch_size = sketch_size
+        self._sketches: Optional[list] = None
+        self._cat_max: Optional[np.ndarray] = None
+        self._n_seen = 0
+
+    @property
+    def n_rows_seen(self) -> int:
+        return self._n_seen
+
+    def _reset(self) -> None:
+        """Start a fresh stream — ``fit``/``fit_source`` must match
+        ``Binner.fit`` semantics (recompute, not accumulate)."""
+        self._sketches, self._cat_max, self._n_seen = None, None, 0
+
+    def partial_fit(self, X_chunk: np.ndarray) -> "StreamingBinner":
+        X = np.asarray(X_chunk, dtype=np.float64)
+        if X.ndim != 2:
+            raise ValueError("partial_fit expects a 2-D (rows, fields) chunk")
+        n, F = X.shape
+        if self._sketches is None:
+            self._sketches = [None if f in self.categorical_fields
+                              else _QuantileSketch(self.sketch_size)
+                              for f in range(F)]
+            self._cat_max = np.full((F,), -1, np.int64)
+        elif len(self._sketches) != F:
+            raise ValueError(
+                f"chunk has {F} fields; earlier chunks had "
+                f"{len(self._sketches)}")
+        self._n_seen += n
+        for f in range(F):
+            col = X[:, f]
+            valid = col[~np.isnan(col)]
+            if self._sketches[f] is None:      # categorical: track max id
+                if valid.size:
+                    self._cat_max[f] = max(self._cat_max[f],
+                                           int(valid.max()))
+            else:
+                self._sketches[f].update(valid)
+        return self
+
+    def finalize(self) -> "StreamingBinner":
+        """Turn the accumulated sketches into ``Binner``-compatible tables."""
+        if self._sketches is None:
+            raise RuntimeError("finalize called before any partial_fit")
+        F = len(self._sketches)
+        n_value_bins = self.max_bins - 1
+        edges = np.full((F, n_value_bins - 1), np.inf, dtype=np.float64)
+        is_cat = np.zeros((F,), dtype=bool)
+        nvb = np.zeros((F,), dtype=np.int64)
+        qs = np.linspace(0.0, 1.0, n_value_bins + 1)[1:-1]
+        for f in range(F):
+            sk = self._sketches[f]
+            if sk is None:
+                is_cat[f] = True
+                ncat = int(self._cat_max[f]) + 1 if self._cat_max[f] >= 0 \
+                    else 1
+                if ncat > n_value_bins:
+                    raise ValueError(
+                        f"field {f}: {ncat} categories exceed {n_value_bins} "
+                        "value bins; raise max_bins or re-map categories")
+                nvb[f] = ncat
+                continue
+            q = sk.quantiles(qs)
+            if q.size == 0:
+                nvb[f] = 1
+                continue
+            e = np.unique(q)
+            edges[f, : e.size] = e
+            nvb[f] = e.size + 1
+        self._edges, self._is_cat, self._n_value_bins = edges, is_cat, nvb
+        return self
+
+    def fit(self, X: np.ndarray) -> "StreamingBinner":
+        """One-shot convenience: sketch the whole matrix, then finalize.
+        Like ``Binner.fit``, refitting recomputes from scratch."""
+        self._reset()
+        return self.partial_fit(X).finalize()
+
+    def fit_source(self, source, chunk_rows: int) -> "StreamingBinner":
+        """Sketch every chunk of a :class:`repro.data.DataSource` (a fresh
+        fit — accumulate across calls with ``partial_fit`` instead)."""
+        self._reset()
+        for X_chunk, _ in source.chunks(chunk_rows):
+            self.partial_fit(X_chunk)
+        return self.finalize()
 
 
 def bin_dataset(X: np.ndarray, max_bins: int = 256,

@@ -38,6 +38,8 @@ class GBDTConfig:
     objective: str = "reg:squarederror"
     subsample: float = 1.0           # stochastic GB (Friedman 2002)
     colsample_bytree: float = 1.0
+    goss_top_rate: float = 0.0       # GOSS: kept fraction by |gradient|
+    goss_other_rate: float = 0.0     # GOSS: sampled fraction of the rest
     grow_policy: str = "depthwise"   # "depthwise" | "lossguide"
     max_leaves: Optional[int] = None  # lossguide only
     hist_strategy: str = "auto"      # see repro.kernels.ops
@@ -53,6 +55,14 @@ class GBDTConfig:
             raise ValueError("max_depth must be in [1, 10]")
         if self.grow_policy not in ("depthwise", "lossguide"):
             raise ValueError(f"unknown grow_policy {self.grow_policy!r}")
+        if self.goss_top_rate or self.goss_other_rate:
+            if not (0.0 <= self.goss_top_rate < 1.0
+                    and 0.0 < self.goss_other_rate <= 1.0
+                    and self.goss_top_rate + self.goss_other_rate <= 1.0):
+                raise ValueError(
+                    "GOSS rates need 0 <= top_rate < 1, 0 < other_rate <= 1 "
+                    f"and top+other <= 1; got top={self.goss_top_rate}, "
+                    f"other={self.goss_other_rate}")
         if self.objective in losses_mod.MULTICLASS_OBJECTIVES:
             if self.n_classes is None or self.n_classes < 2:
                 raise ValueError(
@@ -202,6 +212,77 @@ class TrainResult:
     model: GBDTModel
     history: Dict[str, List[float]]
     step_times: Dict[str, float]     # accumulated seconds per paper step
+    stats: Dict = dataclasses.field(default_factory=dict)  # trainer extras
+    # streaming fits populate stats with the chunking evidence:
+    # n_rows, chunk_rows, n_chunks, passes_per_round
+
+
+def goss_weights(g, key, top_rate: float, other_rate: float) -> jax.Array:
+    """Gradient-based One-Side Sampling weights (LightGBM-style GOSS).
+
+    Keeps the top ``top_rate`` fraction of records by gradient magnitude
+    at weight 1, uniformly samples ``other_rate``·n of the rest at weight
+    ``(1 - top_rate) / other_rate`` (amplified so the small-gradient
+    population keeps its expected contribution to BOTH g and h — the
+    hessian reweighting), and drops everything else at weight 0.  ``g`` is
+    (n,) or (n, K); multi-class records rank by summed per-class |g|.
+    """
+    score = jnp.abs(g) if g.ndim == 1 else jnp.sum(jnp.abs(g), axis=-1)
+    n = score.shape[0]
+    n_top = min(int(np.ceil(top_rate * n)), n)
+    n_other = min(int(np.ceil(other_rate * n)), n - n_top)
+    order = jnp.argsort(-score)
+    w = jnp.zeros((n,), jnp.float32).at[order[:n_top]].set(1.0)
+    if n_other > 0:
+        rest = order[n_top:]
+        pick = jax.random.choice(key, rest.shape[0], (n_other,),
+                                 replace=False)
+        w = w.at[rest[pick]].set((1.0 - top_rate) / other_rate)
+    return w
+
+
+def _round_stats(config: GBDTConfig, tkey, g, h, n: int, F: int,
+                 K: Optional[int]):
+    """Per-round stochastic filters on the gradient statistics: GOSS,
+    row subsampling, and the per-tree field mask.  Shared verbatim by the
+    in-memory and streaming trainers (identical RNG folds), so the two
+    paths draw identical samples for identical seeds."""
+    if config.goss_top_rate or config.goss_other_rate:
+        w = goss_weights(g, jax.random.fold_in(tkey, 2),
+                         config.goss_top_rate, config.goss_other_rate)
+        if K is not None:
+            w = w[:, None]
+        g, h = g * w, h * w
+    if config.subsample < 1.0:
+        mask = (jax.random.uniform(jax.random.fold_in(tkey, 0), (n,))
+                < config.subsample).astype(jnp.float32)
+        if K is not None:          # same record draw for every class
+            mask = mask[:, None]
+        g, h = g * mask, h * mask
+    if config.colsample_bytree < 1.0:
+        field_mask = (jax.random.uniform(jax.random.fold_in(tkey, 1),
+                                         (F,)) < config.colsample_bytree)
+        field_mask = field_mask.at[jnp.argmax(field_mask)].set(True)
+    else:
+        field_mask = jnp.ones((F,), bool)
+    return g, h, field_mask
+
+
+def _validate_multiclass_labels(K: int, y, eval_y=None) -> None:
+    """An out-of-range class in either split would otherwise clamp inside
+    the softmax loss (silent NaN loss / broken early stopping)."""
+    batches = [("training", y)]
+    if eval_y is not None:
+        batches.append(("eval_set", jnp.asarray(eval_y, jnp.float32)))
+    for what, yy in batches:
+        if not yy.shape[0]:
+            continue
+        y_min, y_max = float(jnp.min(yy)), float(jnp.max(yy))
+        if (y_max >= K or y_min < 0
+                or not bool(jnp.all(yy == jnp.round(yy)))):
+            raise ValueError(
+                f"multi-class {what} labels must be integers in "
+                f"[0, {K}); observed range [{y_min}, {y_max}]")
 
 
 def train(config: GBDTConfig, data: BinnedDataset, y,
@@ -222,22 +303,8 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
     K = loss.n_outputs                 # None for scalar objectives
     y = jnp.asarray(y, jnp.float32)
     if K is not None:
-        # validate eval labels too: an out-of-range class in either split
-        # would otherwise clamp inside the softmax loss (silent NaN loss /
-        # broken early stopping), not error
-        batches = [("training", y)]
-        if eval_set is not None:
-            batches.append(("eval_set", jnp.asarray(eval_set[1],
-                                                    jnp.float32)))
-        for what, yy in batches:
-            if not yy.shape[0]:
-                continue
-            y_min, y_max = float(jnp.min(yy)), float(jnp.max(yy))
-            if (y_max >= K or y_min < 0
-                    or not bool(jnp.all(yy == jnp.round(yy)))):
-                raise ValueError(
-                    f"multi-class {what} labels must be integers in "
-                    f"[0, {K}); observed range [{y_min}, {y_max}]")
+        _validate_multiclass_labels(
+            K, y, eval_set[1] if eval_set is not None else None)
     n, F = data.codes.shape
     depth = config.max_depth
 
@@ -279,18 +346,7 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
         tkey = jax.random.fold_in(key, t_idx)  # deterministic replay stream
         t0 = time.perf_counter()
         g, h = loss.grad_hess(margins, y)
-        if config.subsample < 1.0:
-            mask = (jax.random.uniform(jax.random.fold_in(tkey, 0), (n,))
-                    < config.subsample).astype(jnp.float32)
-            if K is not None:          # same record draw for every class
-                mask = mask[:, None]
-            g, h = g * mask, h * mask
-        if config.colsample_bytree < 1.0:
-            field_mask = (jax.random.uniform(jax.random.fold_in(tkey, 1),
-                                             (F,)) < config.colsample_bytree)
-            field_mask = field_mask.at[jnp.argmax(field_mask)].set(True)
-        else:
-            field_mask = jnp.ones((F,), bool)
+        g, h, field_mask = _round_stats(config, tkey, g, h, n, F, K)
 
         common = dict(depth=depth, n_bins=data.n_bins,
                       missing_bin=data.missing_bin,
@@ -354,18 +410,21 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
         if verbose and (t_idx % 10 == 0 or t_idx == config.n_trees - 1):
             print(f"[gbdt] tree {t_idx:4d}  train_loss={train_loss:.6f}")
         if callback is not None:
-            callback(t_idx, _as_model(trees, base_margin, config, data, F))
+            callback(t_idx, _as_model(trees, base_margin, config,
+                                      data.missing_bin, F))
 
-    return TrainResult(model=_as_model(trees, base_margin, config, data, F),
-                       history=history, step_times=step_times)
+    return TrainResult(model=_as_model(trees, base_margin, config,
+                                       data.missing_bin, F),
+                       history=history, step_times=step_times,
+                       stats={"n_rows": n})
 
 
-def _as_model(trees, base_margin, config, data, F) -> GBDTModel:
+def _as_model(trees, base_margin, config, missing_bin, F) -> GBDTModel:
     K = config.n_classes or 1
     stacked = _stack_forests(trees) if K > 1 else _stack_trees(trees)
     return GBDTModel(trees=stacked, base_margin=base_margin,
                      objective=config.objective,
-                     missing_bin=data.missing_bin, n_fields=F,
+                     missing_bin=missing_bin, n_fields=F,
                      max_depth=config.max_depth, n_classes=K)
 
 
@@ -393,3 +452,213 @@ def _predict_forest(forest: TreeArrays, data: BinnedDataset,
     """Step-⑤ traversal of one round's K per-class trees -> (n, K) deltas."""
     delta = jax.vmap(lambda t: _predict_one_tree(t, data, plan))(forest)
     return delta.T
+
+
+# --------------------------------------------------------------------------
+# out-of-core training: chunk-streamed histograms, GOSS, sketch binning
+# --------------------------------------------------------------------------
+def _streamed_margins(model: GBDTModel, chunks, n: int,
+                      plan: ExecutionPlan) -> jax.Array:
+    """Warm-start margins without materializing the matrix: one chunked
+    ensemble-inference pass."""
+    K = model.n_classes
+    out = np.zeros((n, K) if K > 1 else (n,), np.float32)
+    for lo, hi, codes in chunks():
+        m = model.predict_margin(codes, plan=plan)
+        out[lo:hi] = np.asarray(m)[: hi - lo]
+    return jnp.asarray(out)
+
+
+def train_streaming(config: GBDTConfig, source, binner, y, *,
+                    eval_set: Optional[Tuple[BinnedDataset, jax.Array]] = None,
+                    init_model: Optional[GBDTModel] = None,
+                    callback: Optional[Callable[[int, GBDTModel], None]] = None,
+                    verbose: bool = False,
+                    plan: Optional[ExecutionPlan] = None,
+                    chunk_rows: Optional[int] = None) -> TrainResult:
+    """Out-of-core twin of :func:`train`: the binned matrix is NEVER
+    materialized — each tree level re-streams device-sized chunks from
+    ``source``, accumulating step-① histograms chunk by chunk and keeping
+    step-③ node-id vectors chunk-local (``tree.fit_forest_chunked``).
+    Host-resident state is per-record scalars only (margins, g/h, node
+    ids); device-resident state is one chunk plus the level histogram.
+
+    source:      a :class:`repro.data.DataSource` of raw float chunks;
+                 successive passes must yield identical chunks.
+    binner:      a fitted ``Binner``/``StreamingBinner`` (chunks are binned
+                 on the fly each pass).
+    y:           (n,) labels, gathered from the source by the caller.
+    eval_set:    optional in-memory ``(BinnedDataset, y_val)`` pair.
+    chunk_rows:  records per streamed chunk; defaults to the plan's
+                 ``chunk_bytes`` budget (``ExecutionPlan.chunk_rows``).
+
+    Per-round data passes: ``max_depth + 1`` (one per level — the previous
+    level's partition is applied lazily in the histogram pass — plus one
+    final partition pass).  Step ⑤ is free: margins update from the final
+    leaf-slot ids, no traversal of the stream.
+
+    GOSS (``config.goss_top_rate`` / ``goss_other_rate``) drops the
+    zero-weight record stream from the histogram *stat* volume each round
+    while node ids stay maintained for every record, so margins (and the
+    next round's gradients) remain exact.
+    """
+    if plan is None:
+        plan = ExecutionPlan.from_config(config)
+    plan = plan.resolved()
+    kernel_plan = plan.without_chunking()
+    if config.grow_policy != "depthwise":
+        raise ValueError("streaming training supports only the depthwise "
+                         "grow_policy")
+    loss = losses_mod.get_loss(config.objective, config.n_classes)
+    K = loss.n_outputs
+    y = jnp.asarray(y, jnp.float32)
+    if K is not None:
+        _validate_multiclass_labels(
+            K, y, eval_set[1] if eval_set is not None else None)
+    n = int(y.shape[0])
+    F = int(source.n_fields)
+    depth = config.max_depth
+    if chunk_rows is None:
+        chunk_rows = plan.chunk_rows(F, K or 1)
+    # never pad past the data: a small dataset under a large byte budget
+    # would otherwise stream (and histogram) mostly padding every pass
+    chunk_rows = max(1, min(int(chunk_rows), n))
+    missing_bin = binner.max_bins - 1
+    is_cat_field = jnp.asarray(binner._is_cat)
+    n_chunks = [0]
+
+    def binned_chunks():
+        """One full pass: bin + pad each raw chunk on the host (prefetch
+        thread overlaps binning/transfer with device compute), yield
+        ``(lo, hi, codes)`` with a fixed (chunk_rows, F) device shape."""
+        from repro.data.pipeline import PrefetchIterator
+
+        def gen():
+            for X_chunk, _ in source.chunks(chunk_rows):
+                codes = binner.transform_codes(X_chunk)
+                n_real = codes.shape[0]
+                if n_real > chunk_rows:
+                    raise ValueError(
+                        f"source yielded a {n_real}-row chunk for a "
+                        f"{chunk_rows}-row request")
+                if n_real < chunk_rows:
+                    codes = np.pad(codes,
+                                   ((0, chunk_rows - n_real), (0, 0)))
+                yield {"rows": np.int32(n_real), "codes": codes}
+
+        lo = 0
+        count = 0
+        for batch in PrefetchIterator(gen(), depth=2):
+            n_real = int(batch["rows"])
+            yield lo, lo + n_real, batch["codes"]
+            lo += n_real
+            count += 1
+        if lo != n:
+            raise ValueError(
+                f"source pass yielded {lo} rows but len(y) == {n}; "
+                "DataSource passes must be identical and label-complete")
+        n_chunks[0] = count
+
+    trees: List[TreeArrays] = []
+    history: Dict[str, List[float]] = {"train_loss": []}
+    if eval_set is not None:
+        history["eval_loss"] = []
+    step_times = {"binning_split": 0.0, "partition": 0.0, "traversal": 0.0,
+                  "other": 0.0}
+
+    if init_model is not None:
+        if K is not None:
+            trees = _unstack_forests(init_model.trees, init_model.n_rounds,
+                                     K)
+        else:
+            trees = [TreeArrays(*[a[i] for a in init_model.trees])
+                     for i in range(init_model.n_trees)]
+        base_margin = init_model.base_margin
+        margins = _streamed_margins(init_model, binned_chunks, n,
+                                    kernel_plan)
+        eval_margins = (init_model.predict_margin(eval_set[0].codes,
+                                                  plan=kernel_plan)
+                        if eval_set is not None else None)
+    elif K is not None:
+        base_margin = np.asarray(loss.base_margin(y), np.float32)
+        margins = jnp.broadcast_to(jnp.asarray(base_margin), (n, K))
+        eval_margins = (jnp.broadcast_to(jnp.asarray(base_margin),
+                                         (eval_set[1].shape[0], K))
+                        if eval_set is not None else None)
+    else:
+        base_margin = float(loss.base_margin(y))
+        margins = jnp.full((n,), base_margin, jnp.float32)
+        eval_margins = (jnp.full((eval_set[1].shape[0],), base_margin)
+                        if eval_set is not None else None)
+
+    key = jax.random.PRNGKey(config.seed)
+    best_eval, best_round = np.inf, -1
+
+    for t_idx in range(len(trees), len(trees) + config.n_trees):
+        tkey = jax.random.fold_in(key, t_idx)
+        t0 = time.perf_counter()
+        g, h = loss.grad_hess(margins, y)
+        g, h, field_mask = _round_stats(config, tkey, g, h, n, F, K)
+        g2 = np.asarray(g.T if K is not None else g[None], np.float32)
+        h2 = np.asarray(h.T if K is not None else h[None], np.float32)
+
+        forest, leaf_ids = tree_mod.fit_forest_chunked(
+            binned_chunks, g2, h2, depth=depth, n_bins=binner.max_bins,
+            missing_bin=missing_bin, is_cat_field=is_cat_field,
+            field_mask=field_mask, lambda_=config.lambda_,
+            gamma=config.gamma, min_child_weight=config.min_child_weight,
+            plan=kernel_plan)
+        forest = forest._replace(
+            leaf_value=forest.leaf_value * config.learning_rate)
+        forest = jax.tree.map(jax.block_until_ready, forest)
+        t1 = time.perf_counter()
+        step_times["binning_split"] += t1 - t0
+
+        # step ⑤ for free: the chunk-local node ids END as leaf slots, so
+        # the margin refresh is a leaf-value lookup, not a data pass
+        delta = jax.vmap(lambda v, i: v[i])(forest.leaf_value,
+                                            jnp.asarray(leaf_ids))  # (K, n)
+        tree = forest if K is not None else TreeArrays(*[a[0]
+                                                         for a in forest])
+        margins = margins + (delta.T if K is not None else delta[0])
+        margins.block_until_ready()
+        t2 = time.perf_counter()
+        step_times["traversal"] += t2 - t1
+
+        trees.append(tree)
+        train_loss = float(jnp.mean(loss.value(margins, y)))
+        history["train_loss"].append(train_loss)
+
+        if eval_set is not None:
+            if K is not None:
+                ev_delta = _predict_forest(tree, eval_set[0], kernel_plan)
+            else:
+                ev_delta = _predict_one_tree(tree, eval_set[0], kernel_plan)
+            eval_margins = eval_margins + ev_delta
+            ev = float(jnp.mean(loss.value(eval_margins,
+                                           jnp.asarray(eval_set[1],
+                                                       jnp.float32))))
+            history["eval_loss"].append(ev)
+            if ev < best_eval - 1e-12:
+                best_eval, best_round = ev, t_idx
+            if (config.early_stopping_rounds is not None
+                    and t_idx - best_round >= config.early_stopping_rounds):
+                if verbose:
+                    print(f"[gbdt] early stop at tree {t_idx} "
+                          f"(best {best_round}: {best_eval:.6f})")
+                break
+        step_times["other"] += time.perf_counter() - t2
+
+        if verbose and (t_idx % 10 == 0 or t_idx == config.n_trees - 1):
+            print(f"[gbdt] tree {t_idx:4d}  train_loss={train_loss:.6f}  "
+                  f"({n_chunks[0]} chunks x {chunk_rows} rows)")
+        if callback is not None:
+            callback(t_idx, _as_model(trees, base_margin, config,
+                                      missing_bin, F))
+
+    return TrainResult(
+        model=_as_model(trees, base_margin, config, missing_bin, F),
+        history=history, step_times=step_times,
+        stats={"n_rows": n, "chunk_rows": int(chunk_rows),
+               "n_chunks": int(n_chunks[0]),
+               "passes_per_round": depth + 1})

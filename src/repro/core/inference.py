@@ -24,7 +24,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.api.plan import ExecutionPlan
-from repro.core.binning import Binner, BinnedDataset
+from repro.core.binning import Binner
 from repro.core.gbdt import GBDTModel
 from repro.kernels import ops
 from repro.kernels.ref import TreeArrays

@@ -112,38 +112,19 @@ def fit_forest(codes, codes_cm, g, h, *, depth: int, n_bins: int,
     part = jax.vmap(functools.partial(ops.partition_level,
                                       missing_bin=missing_bin, plan=plan))
 
+    state = (feature, threshold, is_cat, default_left, value_bottom,
+             value_set)
     for level in range(depth):
         nn = 2 ** level
-        off = nn - 1
-        reps = 2 ** (depth - level)
 
         # step ① — one batched pass covers all K class partitions
         hist = ops.build_histogram(codes, g, h, node_ids, n_nodes=nn,
                                    n_bins=n_bins, plan=plan)  # (K,nn,F,NB,2)
-        # step ② — find_best_splits is vectorized over nodes: fold the
-        # class axis into the node axis (works for the host offload too)
-        flat = find(hist.reshape(K * nn, F, n_bins, 2), is_cat_field,
-                    field_mask, lambda_, gamma, min_child_weight)
-        best = splits_mod.SplitDecision(
-            *[a.reshape(K, nn) for a in flat])
-
-        resolved = value_set[:, jnp.arange(nn) * reps]          # (K, nn)
-        do_split = (best.gain > 0.0) & (~resolved)
-
-        w = splits_mod.leaf_weight(best.node_g, best.node_h, lambda_)
-        newly_leaf = (~do_split) & (~resolved)
-        mask_b = jnp.repeat(newly_leaf, reps, axis=1)           # (K, n_leaf)
-        value_bottom = jnp.where(mask_b & (~value_set),
-                                 jnp.repeat(w, reps, axis=1), value_bottom)
-        value_set = value_set | mask_b
-
-        feature = jax.lax.dynamic_update_slice(
-            feature, jnp.where(do_split, best.feature, -1), (0, off))
-        threshold = jax.lax.dynamic_update_slice(threshold, best.threshold,
-                                                 (0, off))
-        is_cat = jax.lax.dynamic_update_slice(is_cat, best.is_cat, (0, off))
-        default_left = jax.lax.dynamic_update_slice(
-            default_left, best.default_left, (0, off))
+        # step ② — split decisions + tree-table updates (shared with the
+        # chunked grower, which accumulates the same hist across chunks)
+        state, best, do_split = _decide_level(
+            hist, level, depth, state, is_cat_field, field_mask, lambda_,
+            gamma, min_child_weight, find)
 
         # step ③ — per-class predicate columns from the column-major copy
         codes_lvl = codes_cm[jnp.where(do_split, best.feature, 0)]  # (K,nn,n)
@@ -154,15 +135,171 @@ def fit_forest(codes, codes_cm, g, h, *, depth: int, n_bins: int,
                                        (K, nn)), -1),
             best.threshold, best.is_cat, best.default_left)
 
+    feature, threshold, is_cat, default_left, value_bottom, value_set = state
+    value_bottom = _settle_bottom_leaves(g, h, node_ids, value_bottom,
+                                         value_set, n_leaf, lambda_)
+    return TreeArrays(feature=feature, threshold=threshold, is_cat=is_cat,
+                      default_left=default_left, leaf_value=value_bottom)
+
+
+def _decide_level(hist, level, depth, state, is_cat_field, field_mask,
+                  lambda_, gamma, min_child_weight, find):
+    """Step ② for one level: pick splits from the (K, nn, F, NB, 2) level
+    histogram and fold them into the tree-table ``state``.  Pure jnp on
+    node-sized arrays — shared verbatim by the in-memory (jitted) and
+    chunked (host-driven) growers, so both emit identical trees for
+    identical histograms."""
+    feature, threshold, is_cat, default_left, value_bottom, value_set = state
+    K, nn, F, n_bins, _ = hist.shape
+    off = nn - 1
+    reps = 2 ** (depth - level)
+
+    # find_best_splits is vectorized over nodes: fold the class axis into
+    # the node axis (works for the host offload too)
+    flat = find(hist.reshape(K * nn, F, n_bins, 2), is_cat_field,
+                field_mask, lambda_, gamma, min_child_weight)
+    best = splits_mod.SplitDecision(*[a.reshape(K, nn) for a in flat])
+
+    resolved = value_set[:, jnp.arange(nn) * reps]              # (K, nn)
+    do_split = (best.gain > 0.0) & (~resolved)
+
+    w = splits_mod.leaf_weight(best.node_g, best.node_h, lambda_)
+    newly_leaf = (~do_split) & (~resolved)
+    mask_b = jnp.repeat(newly_leaf, reps, axis=1)               # (K, n_leaf)
+    value_bottom = jnp.where(mask_b & (~value_set),
+                             jnp.repeat(w, reps, axis=1), value_bottom)
+    value_set = value_set | mask_b
+
+    feature = jax.lax.dynamic_update_slice(
+        feature, jnp.where(do_split, best.feature, -1), (0, off))
+    threshold = jax.lax.dynamic_update_slice(threshold, best.threshold,
+                                             (0, off))
+    is_cat = jax.lax.dynamic_update_slice(is_cat, best.is_cat, (0, off))
+    default_left = jax.lax.dynamic_update_slice(
+        default_left, best.default_left, (0, off))
+    state = (feature, threshold, is_cat, default_left, value_bottom,
+             value_set)
+    return state, best, do_split
+
+
+def _settle_bottom_leaves(g, h, node_ids, value_bottom, value_set, n_leaf,
+                          lambda_):
+    """Leaf weights for every bottom slot not settled by an earlier level."""
     Gb = jax.vmap(lambda gg, nid: jax.ops.segment_sum(
         gg.astype(jnp.float32), nid, n_leaf))(g, node_ids)
     Hb = jax.vmap(lambda hh, nid: jax.ops.segment_sum(
         hh.astype(jnp.float32), nid, n_leaf))(h, node_ids)
     wb = splits_mod.leaf_weight(Gb, Hb, lambda_)
-    value_bottom = jnp.where(value_set, value_bottom, wb)
+    return jnp.where(value_set, value_bottom, wb)
 
-    return TreeArrays(feature=feature, threshold=threshold, is_cat=is_cat,
+
+# --------------------------------------------------------------------------
+# out-of-core grower: chunk-accumulated histograms + chunk-local node ids
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("missing_bin", "plan"))
+def _partition_chunk(codes, node_ids, feature, threshold, is_cat,
+                     default_left, do_split, *, missing_bin: int,
+                     plan: ExecutionPlan):
+    """Step ③ for one chunk: route the chunk's per-class node ids through
+    one level's split decisions.  The column-major copy is chunk-local
+    (``codes.T``) — the paper's redundant representation kept to one
+    chunk's footprint."""
+    K, nn = feature.shape
+    codes_cm = codes.T                                        # (F, rows)
+    codes_lvl = codes_cm[jnp.where(do_split, feature, 0)]     # (K, nn, rows)
+    part = jax.vmap(functools.partial(ops.partition_level,
+                                      missing_bin=missing_bin, plan=plan))
+    return part(node_ids, codes_lvl.transpose(0, 2, 1),
+                jnp.where(do_split,
+                          jnp.broadcast_to(jnp.arange(nn, dtype=jnp.int32),
+                                           (K, nn)), -1),
+                threshold, is_cat, default_left)
+
+
+def fit_forest_chunked(chunks, g, h, *, depth: int, n_bins: int,
+                       missing_bin: int, is_cat_field, field_mask,
+                       lambda_: float, gamma: float, min_child_weight: float,
+                       plan: Optional[ExecutionPlan] = None):
+    """Out-of-core twin of :func:`fit_forest`: same math, chunked scans.
+
+    ``chunks`` is a zero-argument callable returning a fresh iterator of
+    ``(lo, hi, codes)`` tuples — ``codes`` a (rows, F) uint8 chunk whose
+    first ``hi - lo`` rows are records ``lo:hi`` (extra rows are padding
+    and are neutralized with zero gradient statistics).  One iteration
+    happens per level (histogram accumulation, with the previous level's
+    partition applied lazily in the same pass) plus one final partition
+    pass — ``depth + 1`` data passes per tree, device memory bounded by
+    one chunk.
+
+    g, h: (K, n) numpy float32 per-class gradient statistics (host
+    resident).  Returns ``(TreeArrays with (K, ...) axes, node_ids)``
+    where ``node_ids`` is the host (K, n) int32 array of final leaf slots
+    — the streaming trainer updates margins from it directly, so step ⑤
+    needs no extra traversal pass over the stream.
+    """
+    plan = resolve_plan(plan).without_chunking()
+    g = np.asarray(g, np.float32)
+    h = np.asarray(h, np.float32)
+    K, n = g.shape
+    F = int(is_cat_field.shape[0])
+    n_int = 2 ** depth - 1
+    n_leaf = 2 ** depth
+
+    state = (jnp.full((K, n_int), -1, jnp.int32),      # feature
+             jnp.zeros((K, n_int), jnp.int32),         # threshold
+             jnp.zeros((K, n_int), jnp.int32),         # is_cat
+             jnp.zeros((K, n_int), jnp.int32),         # default_left
+             jnp.zeros((K, n_leaf), jnp.float32),      # value_bottom
+             jnp.zeros((K, n_leaf), bool))             # value_set
+    node_ids = np.zeros((K, n), np.int32)
+    find = (splits_mod.find_best_splits_host if plan.host_offload_split
+            else splits_mod.find_best_splits)
+    pending = None                    # previous level's partition arguments
+
+    def stat_chunk(a, lo, hi, rows):
+        """(K, rows) slice of a host array, zero-padded to the chunk (pad
+        rows carry zero stats / node 0, contributing exactly +0.0)."""
+        s = a[:, lo:hi]
+        if rows > hi - lo:
+            s = np.pad(s, ((0, 0), (0, rows - (hi - lo))))
+        return jnp.asarray(s)
+
+    def apply_pending(codes, lo, hi, rows):
+        nid = stat_chunk(node_ids, lo, hi, rows)
+        if pending is None:
+            return nid
+        nid = _partition_chunk(codes, nid, *pending,
+                               missing_bin=missing_bin, plan=plan)
+        node_ids[:, lo:hi] = np.asarray(nid[:, :hi - lo])
+        return nid
+
+    for level in range(depth):
+        nn = 2 ** level
+        hist = jnp.zeros((K, nn, F, n_bins, 2), jnp.float32)
+        for lo, hi, codes in chunks():
+            codes = jnp.asarray(codes)
+            rows = codes.shape[0]
+            nid = apply_pending(codes, lo, hi, rows)
+            hist = ops.accumulate_histogram(
+                hist, codes, stat_chunk(g, lo, hi, rows),
+                stat_chunk(h, lo, hi, rows), nid, n_nodes=nn,
+                n_bins=n_bins, plan=plan)
+        state, best, do_split = _decide_level(
+            hist, level, depth, state, is_cat_field, field_mask, lambda_,
+            gamma, min_child_weight, find)
+        pending = (best.feature, best.threshold, best.is_cat,
+                   best.default_left, do_split)
+
+    for lo, hi, codes in chunks():    # final pass: last level's partition
+        apply_pending(jnp.asarray(codes), lo, hi, codes.shape[0])
+
+    feature, threshold, is_cat, default_left, value_bottom, value_set = state
+    value_bottom = _settle_bottom_leaves(
+        jnp.asarray(g), jnp.asarray(h), jnp.asarray(node_ids), value_bottom,
+        value_set, n_leaf, lambda_)
+    tree = TreeArrays(feature=feature, threshold=threshold, is_cat=is_cat,
                       default_left=default_left, leaf_value=value_bottom)
+    return tree, node_ids
 
 
 # --------------------------------------------------------------------------

@@ -1,1 +1,5 @@
-from repro.data.synthetic import make_tabular, paper_dataset, PAPER_DATASETS
+from repro.data.pipeline import (ArraySource, DataSource, NpzShardSource,
+                                 PrefetchIterator, as_source,
+                                 write_npz_shards)
+from repro.data.synthetic import (make_tabular, paper_dataset,
+                                  PAPER_DATASETS, SyntheticSource)

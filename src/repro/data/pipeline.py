@@ -1,19 +1,155 @@
-"""Sharded input pipeline with host-side prefetch (double buffering).
+"""Sharded input pipeline: chunked data sources + host-side prefetch.
 
 The paper's Booster hides the record stream behind double-buffered DMA
 (§III-B); at the framework level the analog is a background host thread
 that materializes and device_puts the next global batch while the current
 step runs.  Works for the GBDT record stream and the LM token stream.
+
+The :class:`DataSource` protocol is the out-of-core entry point: anything
+that can re-iterate ``(X_chunk, y_chunk)`` numpy pairs can feed the
+streaming trainer (``core.gbdt.train_streaming``) and the sketch binner
+(``core.binning.StreamingBinner``) without ever materializing the full
+matrix.  Three implementations ship here / in ``data.synthetic``:
+in-memory arrays, a directory of npz shards, and a deterministic
+synthetic generator.
 """
 from __future__ import annotations
 
+import dataclasses
+import glob
+import os
 import queue
 import threading
-from typing import Callable, Iterator, Optional
+from typing import Iterator, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import numpy as np
-from jax.sharding import NamedSharding
+
+
+# --------------------------------------------------------------------------
+# chunked data sources (the out-of-core record stream)
+# --------------------------------------------------------------------------
+@runtime_checkable
+class DataSource(Protocol):
+    """A re-iterable chunked dataset: raw float features + labels.
+
+    ``chunks(rows)`` yields ``(X_chunk, y_chunk)`` numpy pairs with
+    ``X_chunk`` of shape (<= rows, n_fields) float (NaN == missing) and
+    ``y_chunk`` aligned labels (or ``None`` for unlabeled sources).  The
+    iterator must be restartable — streaming training performs one pass
+    per tree level — and successive passes must yield identical chunks in
+    identical order.
+    """
+
+    @property
+    def n_fields(self) -> int: ...
+
+    def chunks(self, rows: int
+               ) -> Iterator[Tuple[np.ndarray, Optional[np.ndarray]]]: ...
+
+
+@dataclasses.dataclass
+class ArraySource:
+    """In-memory (X, y) pair presented through the DataSource protocol."""
+
+    X: np.ndarray
+    y: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        self.X = np.asarray(self.X)
+        if self.X.ndim != 2:
+            raise ValueError("ArraySource expects a 2-D feature matrix")
+        if self.y is not None:
+            self.y = np.asarray(self.y)
+            if self.y.shape[0] != self.X.shape[0]:
+                raise ValueError(
+                    f"X has {self.X.shape[0]} rows but y has "
+                    f"{self.y.shape[0]}")
+
+    @property
+    def n_rows(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def n_fields(self) -> int:
+        return self.X.shape[1]
+
+    def chunks(self, rows: int):
+        for lo in range(0, self.X.shape[0], rows):
+            hi = min(lo + rows, self.X.shape[0])
+            yield (self.X[lo:hi],
+                   self.y[lo:hi] if self.y is not None else None)
+
+
+class NpzShardSource:
+    """A directory of ``*.npz`` shards, each holding ``X`` (+ optional
+    ``y``) arrays.  One shard is resident at a time; shards are re-sliced
+    to the requested chunk size, so shard and chunk boundaries need not
+    align.  Write shards with :func:`write_npz_shards`."""
+
+    def __init__(self, directory: str, x_key: str = "X", y_key: str = "y"):
+        self.directory = str(directory)
+        self.x_key, self.y_key = x_key, y_key
+        self.paths = sorted(glob.glob(os.path.join(self.directory, "*.npz")))
+        if not self.paths:
+            raise FileNotFoundError(f"no .npz shards under {directory!r}")
+        with np.load(self.paths[0]) as z:
+            if x_key not in z:
+                raise KeyError(f"shard {self.paths[0]!r} has no {x_key!r} "
+                               f"array (found {sorted(z.files)})")
+            self._n_fields = int(z[x_key].shape[1])
+
+    @property
+    def n_fields(self) -> int:
+        return self._n_fields
+
+    def chunks(self, rows: int):
+        for path in self.paths:
+            with np.load(path) as z:
+                X = z[self.x_key]
+                y = z[self.y_key] if self.y_key in z.files else None
+            for lo in range(0, X.shape[0], rows):
+                hi = min(lo + rows, X.shape[0])
+                yield X[lo:hi], (y[lo:hi] if y is not None else None)
+
+
+def write_npz_shards(directory: str, source: "DataSource",
+                     rows_per_shard: int = 65536) -> list:
+    """Materialize a DataSource as a directory of npz shards; returns the
+    shard paths.  The inverse of :class:`NpzShardSource` — used to stage a
+    generator-backed dataset onto disk once, then train out-of-core.
+
+    Pre-existing ``*.npz`` files in the directory are removed first: the
+    directory IS the dataset (``NpzShardSource`` globs every shard), so a
+    shorter re-export must not leave stale shards mixed in.
+    """
+    os.makedirs(directory, exist_ok=True)
+    for stale in glob.glob(os.path.join(directory, "*.npz")):
+        os.remove(stale)
+    paths = []
+    for i, (X, y) in enumerate(source.chunks(rows_per_shard)):
+        path = os.path.join(directory, f"shard_{i:05d}.npz")
+        arrays = {"X": np.asarray(X)}
+        if y is not None:
+            arrays["y"] = np.asarray(y)
+        np.savez(path, **arrays)
+        paths.append(path)
+    return paths
+
+
+def as_source(data) -> "DataSource":
+    """Coerce ``fit(data=...)`` inputs: a DataSource passes through, an
+    ``(X, y)`` tuple wraps as :class:`ArraySource`, a string/path opens an
+    :class:`NpzShardSource` directory."""
+    if isinstance(data, (str, os.PathLike)):
+        return NpzShardSource(data)
+    if isinstance(data, tuple) and len(data) == 2:
+        return ArraySource(*data)
+    if isinstance(data, DataSource):
+        return data
+    raise TypeError(
+        f"cannot build a DataSource from {type(data).__name__}; pass a "
+        "DataSource, an (X, y) tuple, or an npz-shard directory path")
 
 
 class PrefetchIterator:

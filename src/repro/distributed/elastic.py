@@ -12,7 +12,6 @@ from __future__ import annotations
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import make_mesh

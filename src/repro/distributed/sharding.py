@@ -19,7 +19,7 @@ collectives (the two paths are tested equal).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

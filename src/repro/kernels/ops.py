@@ -41,8 +41,8 @@ from repro.kernels import ref as _ref
 from repro.kernels.ref import TreeArrays
 
 __all__ = ["HIST_STRATEGIES", "onehot_matmul", "build_histogram",
-           "partition_level", "traverse_tree", "predict_ensemble",
-           "default_hist_strategy"]
+           "accumulate_histogram", "partition_level", "traverse_tree",
+           "predict_ensemble", "default_hist_strategy"]
 
 
 def _on_tpu() -> bool:
@@ -194,6 +194,22 @@ def build_histogram(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
             packed=(strategy == "pallas_packed"), interpret=plan.interpret)
     raise ValueError(f"unknown histogram strategy {strategy!r}; "
                      f"choose from {HIST_STRATEGIES}")
+
+
+def accumulate_histogram(hist, codes, g, h, node_ids, *, n_nodes: int,
+                         n_bins: int,
+                         plan: Optional[ExecutionPlan] = None):
+    """Chunked step ①: ``hist + build_histogram(chunk)`` in one dispatch.
+
+    The out-of-core trainer accumulates the per-level histogram across
+    device-sized chunks — every chunk reuses the per-chunk strategy
+    unchanged (Pallas or jnp), and only the (n_nodes, F, n_bins, 2)
+    accumulator stays resident between chunks.  Adding a zero-stat padded
+    record contributes exactly +0.0, so padded chunks keep bit-equality
+    with the monolithic histogram.
+    """
+    return hist + build_histogram(codes, g, h, node_ids, n_nodes=n_nodes,
+                                  n_bins=n_bins, plan=plan)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,1 @@
+"""Entry points: training/serving launchers, dry-run + roofline reports."""

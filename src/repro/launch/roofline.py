@@ -17,7 +17,7 @@ doubled for all-reduce (reduce + broadcast phases of a ring).  Async
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 PEAK_FLOPS = 197e12        # bf16 / chip
 HBM_BW = 819e9             # bytes/s / chip

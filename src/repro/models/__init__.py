@@ -1,0 +1,1 @@
+"""Neural model zoo (LM / Mamba / MoE) sharing the accelerator substrate."""

@@ -23,7 +23,6 @@ Sharding rules (MaxText-flavored):
 """
 from __future__ import annotations
 
-import contextlib
 import functools
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -31,9 +30,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.tree_util import DictKey, SequenceKey
+from jax.tree_util import DictKey
 
-from repro.configs.registry import ArchConfig, ShapeConfig
+from repro.configs.registry import ArchConfig
 from repro.models import layers as L
 from repro.models import optim
 from repro.models.mamba import mamba2_mixer

@@ -15,7 +15,6 @@ expert (small expert counts, e.g. Mixtral's 8 on a 16-wide axis).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

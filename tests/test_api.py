@@ -6,7 +6,7 @@ import pytest
 from repro.api import (BoosterClassifier, BoosterRegressor, ExecutionPlan,
                        load, load_checkpoint, save)
 from repro.api.estimator import NotFittedError
-from repro.core import GBDTConfig, bin_dataset, train
+from repro.core import GBDTConfig, train
 from repro.core.binning import Binner
 from repro.core.gbdt import GBDTModel
 from repro.core.inference import GBDTPipeline, feature_importance

@@ -1,7 +1,6 @@
 """Distributed-path tests.  Multi-device cases run in a subprocess with 8
 forced host devices (the main pytest process must keep the default single
 device for everything else)."""
-import json
 import os
 import subprocess
 import sys

@@ -3,7 +3,6 @@ recovery, corrupt-checkpoint fallback, injected failures."""
 import os
 
 import numpy as np
-import jax.numpy as jnp
 import pytest
 
 from repro.core import GBDTConfig, GBDTModel, bin_dataset, train

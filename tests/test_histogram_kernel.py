@@ -1,7 +1,6 @@
 """Step-① histogram kernel: every strategy vs the scatter oracle, across a
 shape/dtype sweep, plus the paper's structural invariants."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -4,10 +4,9 @@ import subprocess
 import sys
 
 import numpy as np
-import jax.numpy as jnp
 import pytest
 
-from repro.core import GBDTConfig, bin_dataset, train
+from repro.core import GBDTConfig, train
 from repro.core.binning import Binner
 from repro.core.inference import (GBDTPipeline, feature_importance,
                                   pad_trees)

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCH_IDS, SHAPES, get_arch, get_smoke, cell_is_runnable
+from repro.configs import ARCH_IDS, get_arch, get_smoke
 from repro.models import lm, optim
 
 B, S = 2, 16

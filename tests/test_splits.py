@@ -4,7 +4,6 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.splits import find_best_splits, find_best_splits_host
-from repro.kernels import ref
 
 
 def _brute_force(hist, is_cat, lam, gamma, mcw):

@@ -1,0 +1,311 @@
+"""Out-of-core streaming vertical: sketch binning, chunked histograms,
+chunked training parity, GOSS, and the DataSource implementations."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.api import BoosterClassifier, BoosterRegressor, ExecutionPlan
+from repro.core.binning import Binner, StreamingBinner
+from repro.core.gbdt import GBDTConfig, goss_weights, train, train_streaming
+from repro.data.pipeline import (ArraySource, DataSource, NpzShardSource,
+                                 as_source, write_npz_shards)
+from repro.data.synthetic import SyntheticSource, make_tabular
+from repro.kernels import ops
+
+import jax
+
+
+# --------------------------------------------------------------------------
+# StreamingBinner: sketch-vs-exact quantile parity
+# --------------------------------------------------------------------------
+def test_sketch_edges_exact_below_capacity():
+    """Streams shorter than sketch_size never compress: finalize must
+    reproduce Binner.fit bit-for-bit, chunking notwithstanding."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(1500, 7))
+    X[rng.uniform(size=X.shape) < 0.05] = np.nan
+    X[:, 5] = rng.integers(0, 9, size=1500)          # categorical field
+    exact = Binner(max_bins=32, categorical_fields=[5]).fit(X)
+    sk = StreamingBinner(max_bins=32, categorical_fields=[5],
+                         sketch_size=2000)
+    for lo in range(0, 1500, 311):                   # ragged chunking
+        sk.partial_fit(X[lo:lo + 311])
+    sk.finalize()
+    np.testing.assert_array_equal(exact._edges, sk._edges)
+    np.testing.assert_array_equal(exact._is_cat, sk._is_cat)
+    np.testing.assert_array_equal(exact._n_value_bins, sk._n_value_bins)
+    np.testing.assert_array_equal(np.asarray(exact.transform(X).codes),
+                                  np.asarray(sk.transform(X).codes))
+
+
+def test_sketch_edges_approximate_beyond_capacity():
+    """Compressed sketches stay close to the exact quantiles (and codes
+    must agree on almost every record)."""
+    rng = np.random.default_rng(1)
+    X = np.concatenate([rng.normal(size=(4000, 3)),
+                        rng.exponential(size=(4000, 3))])  # mixed shapes
+    exact = Binner(max_bins=64).fit(X)
+    sk = StreamingBinner(max_bins=64, sketch_size=512)
+    for lo in range(0, 8000, 1000):
+        sk.partial_fit(X[lo:lo + 1000])
+    sk.finalize()
+    agree = np.mean(np.asarray(exact.transform(X).codes)
+                    == np.asarray(sk.transform(X).codes))
+    assert agree > 0.95, f"only {agree:.3f} of codes agree"
+
+
+def test_sketch_rejects_mismatched_fields():
+    sk = StreamingBinner(max_bins=16).partial_fit(np.zeros((4, 3)))
+    with pytest.raises(ValueError, match="fields"):
+        sk.partial_fit(np.zeros((4, 5)))
+
+
+# --------------------------------------------------------------------------
+# chunked histogram accumulation: bit-equality across every strategy
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", ["scatter", "scatter_private", "sort",
+                                      "onehot", "pallas_grouped",
+                                      "pallas_packed"])
+def test_chunked_histogram_bit_equality(strategy):
+    """hist(all records) == sum of per-chunk hists, bitwise, for every
+    strategy.  Integer-valued stats make float accumulation exact, so the
+    comparison is order-independent and genuinely bit-strict."""
+    rng = np.random.default_rng(2)
+    n, F, n_bins, n_nodes = 700, 5, 16, 4
+    codes = jnp.asarray(rng.integers(0, n_bins, (n, F)), jnp.uint8)
+    g = jnp.asarray(rng.integers(-8, 9, n), jnp.float32)
+    h = jnp.asarray(rng.integers(0, 5, n), jnp.float32)
+    nid = jnp.asarray(rng.integers(0, n_nodes, n), jnp.int32)
+    plan = ExecutionPlan.auto(hist_strategy=strategy)
+
+    full = ops.build_histogram(codes, g, h, nid, n_nodes=n_nodes,
+                               n_bins=n_bins, plan=plan)
+    acc = jnp.zeros_like(full)
+    for lo in range(0, n, 256):                      # ragged final chunk
+        hi = min(lo + 256, n)
+        acc = ops.accumulate_histogram(acc, codes[lo:hi], g[lo:hi],
+                                       h[lo:hi], nid[lo:hi],
+                                       n_nodes=n_nodes, n_bins=n_bins,
+                                       plan=plan)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(acc))
+
+
+def test_chunked_histogram_padding_is_neutral():
+    """Zero-stat padded records contribute exactly +0.0 (the invariant the
+    streaming trainer's uniform chunk shapes rely on)."""
+    rng = np.random.default_rng(3)
+    n, F, n_bins = 100, 3, 8
+    codes = jnp.asarray(rng.integers(0, n_bins, (n, F)), jnp.uint8)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    h = jnp.ones((n,), jnp.float32)
+    nid = jnp.zeros((n,), jnp.int32)
+    plan = ExecutionPlan.auto()
+    base = ops.build_histogram(codes, g, h, nid, n_nodes=2, n_bins=n_bins,
+                               plan=plan)
+    padded = ops.build_histogram(
+        jnp.pad(codes, ((0, 28), (0, 0))), jnp.pad(g, (0, 28)),
+        jnp.pad(h, (0, 28)), jnp.pad(nid, (0, 28)), n_nodes=2,
+        n_bins=n_bins, plan=plan)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(padded))
+
+
+# --------------------------------------------------------------------------
+# DataSource implementations
+# --------------------------------------------------------------------------
+def test_synthetic_source_chunk_invariant():
+    """The same rows come back regardless of chunk size (block-based
+    counter RNG) — the property that makes streamed passes repeatable."""
+    src = SyntheticSource(5000, 6, seed=11)
+    big = np.concatenate([x for x, _ in src.chunks(5000)])
+    small = np.concatenate([x for x, _ in src.chunks(613)])
+    np.testing.assert_array_equal(big, small)
+    ys = np.concatenate([y for _, y in src.chunks(613)])
+    yb = np.concatenate([y for _, y in src.chunks(5000)])
+    np.testing.assert_array_equal(yb, ys)
+
+
+def test_npz_shard_roundtrip(tmp_path):
+    src = SyntheticSource(3000, 4, seed=13)
+    paths = write_npz_shards(str(tmp_path), src, rows_per_shard=700)
+    assert len(paths) == 5
+    back = NpzShardSource(str(tmp_path))
+    assert back.n_fields == 4
+    X0 = np.concatenate([x for x, _ in src.chunks(997)])
+    X1 = np.concatenate([x for x, _ in back.chunks(997)])  # shard-crossing
+    np.testing.assert_array_equal(X0, X1)
+
+
+def test_write_npz_shards_clears_stale(tmp_path):
+    """A shorter re-export must not leave old shards mixed into the
+    directory (NpzShardSource globs everything)."""
+    write_npz_shards(str(tmp_path), SyntheticSource(2000, 3, seed=1),
+                     rows_per_shard=400)
+    write_npz_shards(str(tmp_path), SyntheticSource(500, 3, seed=2),
+                     rows_per_shard=400)
+    total = sum(x.shape[0]
+                for x, _ in NpzShardSource(str(tmp_path)).chunks(1000))
+    assert total == 500
+
+
+def test_streaming_binner_refit_resets():
+    """fit() recomputes from scratch (Binner semantics), it does not
+    accumulate onto the previous stream."""
+    rng = np.random.default_rng(4)
+    X1 = rng.normal(size=(300, 2))
+    X2 = rng.normal(size=(300, 2)) + 5.0
+    b = StreamingBinner(max_bins=16)
+    b.fit(X1)
+    b.fit(X2)
+    fresh = StreamingBinner(max_bins=16).fit(X2)
+    np.testing.assert_array_equal(b._edges, fresh._edges)
+    assert b.n_rows_seen == 300
+
+
+def test_as_source_coercions(tmp_path):
+    X, y = np.zeros((10, 2)), np.zeros(10)
+    assert isinstance(as_source((X, y)), ArraySource)
+    src = ArraySource(X, y)
+    assert as_source(src) is src
+    assert isinstance(src, DataSource)
+    write_npz_shards(str(tmp_path), src, rows_per_shard=5)
+    assert isinstance(as_source(str(tmp_path)), NpzShardSource)
+    with pytest.raises(TypeError):
+        as_source(42)
+
+
+# --------------------------------------------------------------------------
+# GOSS
+# --------------------------------------------------------------------------
+def test_goss_weights_structure():
+    g = jnp.asarray(np.linspace(-2, 2, 100), jnp.float32)
+    w = np.asarray(goss_weights(g, jax.random.PRNGKey(0), 0.2, 0.3))
+    amp = (1 - 0.2) / 0.3
+    # top 20 |g| records kept at weight 1
+    top = np.argsort(-np.abs(np.asarray(g)))[:20]
+    np.testing.assert_array_equal(w[top], 1.0)
+    assert np.sum(w == amp) == 30                    # ceil(0.3 * 100) of rest
+    assert np.sum(w == 0.0) == 100 - 20 - 30
+
+
+def test_goss_config_validation():
+    with pytest.raises(ValueError, match="GOSS"):
+        GBDTConfig(goss_top_rate=0.5, goss_other_rate=0.7)
+    with pytest.raises(ValueError, match="GOSS"):
+        GBDTConfig(goss_top_rate=0.2, goss_other_rate=0.0)
+    GBDTConfig(goss_top_rate=0.2, goss_other_rate=0.1)   # valid
+
+
+def test_goss_training_still_learns():
+    X, y, _ = make_tabular(2000, 8, 0, task="regression", seed=5)
+    est = BoosterRegressor(n_trees=15, max_depth=4, learning_rate=0.3,
+                           max_bins=64, goss_top_rate=0.2,
+                           goss_other_rate=0.2)
+    est.fit(X, y)
+    base = np.sqrt(np.mean((y - y.mean()) ** 2))
+    rmse = np.sqrt(np.mean((np.asarray(est.predict(X)) - y) ** 2))
+    assert rmse < 0.5 * base
+
+
+# --------------------------------------------------------------------------
+# end-to-end streaming parity
+# --------------------------------------------------------------------------
+def _rmse(a, b):
+    return float(np.sqrt(np.mean((np.asarray(a) - np.asarray(b)) ** 2)))
+
+
+def test_streaming_matches_in_memory_fit():
+    """Acceptance core (scaled down): a chunk-capped streamed fit over an
+    ArraySource matches the in-memory fit's eval metric within 2% with
+    GOSS disabled.  sketch_size >= n keeps bin edges exact, so the only
+    possible divergence is the chunked accumulation itself."""
+    src = SyntheticSource(4000, 10, seed=21)
+    (X, y), = list(src.chunks(4000))
+    X_val, y_val = next(iter(SyntheticSource(1000, 10, seed=22).chunks(1000)))
+
+    kw = dict(n_trees=12, max_depth=4, learning_rate=0.3, max_bins=64,
+              sketch_size=4096)
+    mem = BoosterRegressor(**kw).fit(X, y)
+    stream = BoosterRegressor(**kw)
+    stream.fit(data=src, plan=ExecutionPlan(chunk_bytes=12_800))
+
+    stats = stream.stats_
+    assert stats["chunk_rows"] * 8 <= stats["n_rows"], \
+        "resident chunk must be <= 1/8 of the dataset"
+    assert stats["n_chunks"] >= 8
+
+    r_mem = _rmse(mem.predict(X_val), y_val)
+    r_stream = _rmse(stream.predict(X_val), y_val)
+    assert r_stream <= r_mem * 1.02 + 1e-9, (r_mem, r_stream)
+    # same seed + exact sketch => identical training loss trajectory
+    np.testing.assert_allclose(mem.history_["train_loss"],
+                               stream.history_["train_loss"], rtol=1e-5)
+
+
+def test_streaming_classifier_multiclass():
+    X, y, _ = make_tabular(2400, 8, 0, task="multiclass", n_classes=3,
+                           seed=31)
+    clf = BoosterClassifier(n_trees=6, max_depth=4, learning_rate=0.5,
+                            max_bins=64)
+    clf.fit(data=(X, y.astype(int)), plan=ExecutionPlan(chunk_bytes=16_000))
+    assert clf.model_.n_classes == 3
+    acc = np.mean(np.asarray(clf.predict(X)) == y)
+    assert acc > 0.6
+    proba = clf.predict_proba(X)
+    np.testing.assert_allclose(proba.sum(axis=1), 1.0, atol=1e-5)
+
+
+def test_streaming_goss_on_npz_shards(tmp_path):
+    """GOSS over a true on-disk shard source still reaches in-memory-class
+    accuracy; eval history and early stopping machinery stay wired."""
+    src = SyntheticSource(4000, 8, seed=41)
+    write_npz_shards(str(tmp_path), src, rows_per_shard=900)
+    (X, y), = list(src.chunks(4000))
+    est = BoosterRegressor(n_trees=10, max_depth=4, learning_rate=0.3,
+                           max_bins=64, goss_top_rate=0.3,
+                           goss_other_rate=0.3)
+    est.fit(data=str(tmp_path), plan=ExecutionPlan(chunk_bytes=25_000),
+            eval_set=(X[:500], y[:500]))
+    assert len(est.history_["eval_loss"]) == 10
+    base = np.sqrt(np.mean((y - y.mean()) ** 2))
+    assert _rmse(est.predict(X), y) < 0.5 * base
+
+
+def test_streaming_warm_start_and_checkpoint(tmp_path):
+    src = SyntheticSource(2000, 6, seed=51)
+    plan = ExecutionPlan(chunk_bytes=15_000)
+    ck = str(tmp_path / "ck")
+    first = BoosterRegressor(n_trees=4, max_depth=3, max_bins=32)
+    first.fit(data=src, plan=plan, checkpoint_dir=ck, checkpoint_every=2)
+    assert first.n_trees_ == 4
+    resumed = BoosterRegressor(n_trees=6, max_depth=3, max_bins=32)
+    resumed.fit(data=src, plan=plan, checkpoint_dir=ck)
+    assert resumed.n_trees_ == 6
+
+    warm = BoosterRegressor(n_trees=2, max_depth=3, max_bins=32)
+    warm.fit(data=src, plan=plan, xgb_model=first)
+    assert warm.n_trees_ == 6                        # 4 warm + 2 new
+
+
+def test_streaming_rejects_mixed_inputs():
+    src = SyntheticSource(100, 3, seed=0)
+    X = np.zeros((10, 3))
+    with pytest.raises(ValueError, match="not both"):
+        BoosterRegressor(n_trees=1).fit(X, np.zeros(10), data=src)
+    with pytest.raises(TypeError, match="fit needs"):
+        BoosterRegressor(n_trees=1).fit()
+
+
+def test_train_streaming_direct_api():
+    """The core-layer entry point stands alone (no estimator)."""
+    src = SyntheticSource(1500, 5, seed=61)
+    (X, y), = list(src.chunks(1500))
+    binner = StreamingBinner(max_bins=32, sketch_size=2048).fit(X)
+    cfg = GBDTConfig(n_trees=5, max_depth=3, objective="reg:squarederror")
+    res = train_streaming(cfg, src, binner, y, chunk_rows=400)
+    assert res.model.n_trees == 5
+    assert res.stats["n_chunks"] == 4
+    assert res.stats["passes_per_round"] == 4        # depth 3 + 1
+    data = binner.transform(X)
+    in_mem = train(cfg, data, y)
+    np.testing.assert_allclose(res.history["train_loss"],
+                               in_mem.history["train_loss"], rtol=1e-5)

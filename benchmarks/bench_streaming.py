@@ -65,6 +65,17 @@ def run(scale: float = 1.0, n_fields: int = 64, n_trees: int = 5,
         f"throughput_ratio={rps_stream / rps_mono:.3f};"
         f"resident_fraction={stats['chunk_rows'] / n:.3f}"))
 
+    # subtraction on top of streaming: siblings derived once per level
+    # from the previous level's accumulated histogram (chunk passes are
+    # unchanged — every chunk is streamed anyway for the lazy partition)
+    sub = BoosterRegressor(**est_kw)
+    t_sub = _fit_seconds(sub, data=src,
+                         plan=ExecutionPlan(chunk_bytes=chunk_bytes,
+                                            hist_subtraction=True))
+    rows.append(csv_row(
+        f"stream_fit_sub_n{n}", t_sub * 1e6,
+        f"rows_per_sec={n * n_trees / t_sub:.0f};hist_subtraction=1"))
+
     # GOSS on top of streaming: the per-round stat volume drops
     goss = BoosterRegressor(goss_top_rate=0.1, goss_other_rate=0.1, **est_kw)
     t_goss = _fit_seconds(goss, data=src,

@@ -20,8 +20,9 @@ from benchmarks.common import (BOOSTER, IDEAL_CPU, IDEAL_GPU, csv_row,
                                host_step2_time, machine_step1_time,
                                machine_step3_time, machine_step5_time,
                                strategy_plans, time_call)
-from repro.core import bin_dataset
-from repro.data import paper_dataset
+from repro.api import ExecutionPlan
+from repro.core import GBDTConfig, bin_dataset, train
+from repro.data import make_tabular, paper_dataset
 from repro.kernels import ops
 
 STRATS = ("scatter", "scatter_private", "sort", "onehot")
@@ -45,6 +46,38 @@ def modeled_training_time(machine, n, F, depth=6, n_trees=1,
     t += machine_step5_time(machine, n, F, depth, min(2 ** depth - 1, F),
                             column_major)
     return t * n_trees
+
+
+def run_e2e(scale: float = 1.0, depth: int = 6, n_trees: int = 5):
+    """End-to-end depth-6 training rows/sec: the pre-PR path (direct
+    histograms, host-driven loop) vs hist-subtraction + fused rounds —
+    the acceptance comparison for the device-resident trainer (subtraction
+    halves step-① work at levels > 0, fused rounds drop the per-round
+    host syncs)."""
+    n = max(4000, int(40000 * scale))
+    X, y, cats = make_tabular(n, 20, 4, n_cats=10, task="regression",
+                              seed=0)
+    data = bin_dataset(X, max_bins=64, categorical_fields=cats)
+    rows = []
+    rps = {}
+    lanes = {
+        "direct": (ExecutionPlan(hist_strategy="scatter").resolved(), False),
+        "subfused": (ExecutionPlan(hist_strategy="scatter",
+                                   hist_subtraction=True).resolved(), True),
+    }
+    for name, (plan, fused) in lanes.items():
+        cfg = GBDTConfig(n_trees=n_trees, max_depth=depth,
+                         learning_rate=0.3, fused_rounds=fused)
+        t = time_call(lambda cfg=cfg, plan=plan: train(cfg, data, y,
+                                                       plan=plan),
+                      repeat=2)
+        rps[name] = n * n_trees / t
+        rows.append(csv_row(f"train_e2e_d{depth}_{name}", t * 1e6,
+                            f"rows_per_sec={rps[name]:.0f};n={n};"
+                            f"n_trees={n_trees}"))
+    rows.append(csv_row(f"train_e2e_d{depth}_speedup", 0.0,
+                        f"x={rps['subfused'] / rps['direct']:.2f}"))
+    return rows
 
 
 def run(scale: float = 1.0, max_bins: int = 128):
@@ -94,6 +127,8 @@ def run(scale: float = 1.0, max_bins: int = 128):
     for k, v in geo.items():
         rows.append(csv_row(f"modeled_geomean_{k}", 0.0,
                             f"x={float(np.exp(np.mean(np.log(v)))):.2f}"))
+    # (c) end-to-end depth-6 trainer: direct vs subtraction + fused rounds
+    rows.extend(run_e2e(scale=scale))
     return rows
 
 

@@ -1,0 +1,126 @@
+"""Perf gate: diff a fresh BENCH_ci.json against the committed baseline.
+
+The bench-smoke CI job runs ``benchmarks/run.py --smoke --json
+BENCH_ci.json`` and then this checker against ``BENCH_baseline.json``.
+Every baseline lane that reports a ``rows_per_sec=`` figure must still
+exist and must not regress by more than ``--tolerance`` (default 30%);
+a bench family that errored in CI but has baseline lanes also fails.
+
+Lanes are throughput-typed on purpose: rows/sec is what the ROADMAP's
+"fast as the hardware allows" goal cares about.  Because the committed
+baseline is tied to whatever machine produced it while CI runners come
+in different speed classes, the gate is **machine-calibrated** by
+default: each lane's ci/baseline ratio is divided by the *median* ratio
+across all lanes before applying the tolerance.  A uniform speed delta
+(different CPU class) cancels out; a genuine code regression — one or a
+few lanes dropping while the rest hold — does not.  The calibration
+factor is clamped to [1/3, 3]: an across-the-board collapse beyond 3×
+still fails rather than being explained away as slow hardware.  Pass
+``--absolute`` to skip calibration when comparing runs from the same
+machine (e.g. locally, before/after a change).
+
+After an intentional perf change, regenerate the baseline::
+
+    PYTHONPATH=src:. python benchmarks/run.py --smoke --json BENCH_baseline.json
+
+Tolerance can be widened per-run via ``BENCH_TOLERANCE`` (a fraction,
+e.g. ``0.5``) without editing CI, for known-noisy shared runners.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import statistics
+import sys
+
+_RPS = re.compile(r"rows_per_sec=([0-9.]+)")
+_CALIB_CLAMP = 3.0          # max uniform speed delta absorbed as "hardware"
+
+
+def throughput_lanes(report: dict) -> dict:
+    """{(bench, row_name): rows_per_sec} for every throughput-typed row."""
+    lanes = {}
+    for bench, entry in report.get("benches", {}).items():
+        for row in entry.get("rows", []):
+            m = _RPS.search(row.get("derived", ""))
+            if m:
+                lanes[(bench, row["name"])] = float(m.group(1))
+    return lanes
+
+
+def machine_calibration(base_lanes: dict, ci_lanes: dict) -> float:
+    """Median ci/baseline ratio over the lanes both runs report, clamped
+    to ``[1/_CALIB_CLAMP, _CALIB_CLAMP]`` — the uniform speed factor
+    attributed to the machine rather than to the code."""
+    ratios = [ci_lanes[k] / v for k, v in base_lanes.items()
+              if k in ci_lanes and v > 0]
+    if not ratios:
+        return 1.0
+    return min(max(statistics.median(ratios), 1.0 / _CALIB_CLAMP),
+               _CALIB_CLAMP)
+
+
+def check(ci: dict, baseline: dict, tolerance: float,
+          absolute: bool = False) -> list:
+    """Return a list of human-readable failures (empty == gate passes)."""
+    failures = []
+    base_lanes = throughput_lanes(baseline)
+    ci_lanes = throughput_lanes(ci)
+    base_benches = {b for (b, _) in base_lanes}
+    for bench in sorted(base_benches):
+        err = ci.get("benches", {}).get(bench, {}).get("error")
+        if err:
+            failures.append(f"{bench}: errored in CI ({err})")
+    calib = 1.0 if absolute else machine_calibration(base_lanes, ci_lanes)
+    for (bench, name), base_rps in sorted(base_lanes.items()):
+        if ci.get("benches", {}).get(bench, {}).get("error"):
+            continue  # already reported above
+        got = ci_lanes.get((bench, name))
+        if got is None:
+            failures.append(f"{bench}/{name}: lane missing from CI run "
+                            f"(baseline {base_rps:.0f} rows/sec)")
+            continue
+        expected = base_rps * calib
+        if got < (1.0 - tolerance) * expected:
+            failures.append(
+                f"{bench}/{name}: {got:.0f} rows/sec is "
+                f"{100 * (1 - got / expected):.0f}% below the "
+                f"machine-calibrated baseline {expected:.0f} "
+                f"(raw baseline {base_rps:.0f} x calibration {calib:.2f}; "
+                f"tolerance {tolerance:.0%})")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("ci_json")
+    ap.add_argument("baseline_json")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_TOLERANCE", 0.30)),
+                    help="allowed fractional rows/sec drop per lane")
+    ap.add_argument("--absolute", action="store_true",
+                    help="skip machine calibration (same-machine runs)")
+    args = ap.parse_args()
+    with open(args.ci_json) as f:
+        ci = json.load(f)
+    with open(args.baseline_json) as f:
+        baseline = json.load(f)
+
+    failures = check(ci, baseline, args.tolerance, absolute=args.absolute)
+    n_lanes = len(throughput_lanes(baseline))
+    mode = ("absolute" if args.absolute else
+            f"calibration {machine_calibration(throughput_lanes(baseline), throughput_lanes(ci)):.2f}")
+    if failures:
+        print(f"perf gate FAILED ({len(failures)} of {n_lanes} lanes, "
+              f"{mode}):")
+        for msg in failures:
+            print(f"  - {msg}")
+        sys.exit(1)
+    print(f"perf gate OK: {n_lanes} rows/sec lanes within "
+          f"{args.tolerance:.0%} of baseline ({mode})")
+
+
+if __name__ == "__main__":
+    main()

@@ -53,6 +53,16 @@ class ExecutionPlan:
     records_per_block:   Pallas histogram grid — records per kernel block
     fields_per_block:    Pallas histogram grid — fields per kernel block
     host_offload_split:  run step ② split selection on host (paper's offload)
+    hist_subtraction:    step ① sibling subtraction in the level-wise
+                         growers — at each level > 0 only the *smaller*
+                         child of every split parent is binned explicitly
+                         and the sibling histogram is derived as
+                         ``parent − smaller`` (paper §II-A, "without any
+                         explicit binning at the other child").  ``None``
+                         resolves to ``False``: the derived sibling is a
+                         float-reassociated value (documented tolerance,
+                         see ``docs/api.md``), so the direct pass stays
+                         the default
     chunk_bytes:         out-of-core training budget — caps the bytes of
                          binned records resident on device at once; when
                          set, ``fit(data=...)`` streams chunk-sized
@@ -70,6 +80,7 @@ class ExecutionPlan:
     records_per_block: int = 512
     fields_per_block: int = 8
     host_offload_split: bool = False
+    hist_subtraction: Optional[bool] = None
     chunk_bytes: Optional[int] = None
     mesh: Optional[jax.sharding.Mesh] = None
 
@@ -118,6 +129,8 @@ class ExecutionPlan:
             kw["traversal_strategy"] = "pallas" if tpu else "reference"
         if self.interpret is None:
             kw["interpret"] = not tpu
+        if self.hist_subtraction is None:
+            kw["hist_subtraction"] = False
         return dataclasses.replace(self, **kw) if kw else self
 
     def replace(self, **changes) -> "ExecutionPlan":
@@ -147,7 +160,8 @@ class ExecutionPlan:
     def describe(self) -> str:
         m = (f"mesh{dict(self.mesh.shape)}" if self.mesh is not None
              else "single-device")
-        return (f"ExecutionPlan(hist={self.hist_strategy}, "
+        sub = "+sub" if self.hist_subtraction else ""
+        return (f"ExecutionPlan(hist={self.hist_strategy}{sub}, "
                 f"partition={self.partition_strategy}, "
                 f"traversal={self.traversal_strategy}, "
                 f"interpret={self.interpret}, {m})")

@@ -10,6 +10,7 @@ a pjit mesh (``repro.distributed``).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -42,6 +43,11 @@ class GBDTConfig:
     goss_other_rate: float = 0.0     # GOSS: sampled fraction of the rest
     grow_policy: str = "depthwise"   # "depthwise" | "lossguide"
     max_leaves: Optional[int] = None  # lossguide only
+    fused_rounds: bool = False       # one jitted step per boosting round:
+    #                                  grow + leaf settle + margin update +
+    #                                  loss accumulate, margins donated,
+    #                                  history fetched every log_every rounds
+    log_every: int = 10              # host-fetch / verbose cadence (rounds)
     hist_strategy: str = "auto"      # see repro.kernels.ops
     partition_strategy: str = "auto"
     traversal_strategy: str = "auto"
@@ -55,6 +61,11 @@ class GBDTConfig:
             raise ValueError("max_depth must be in [1, 10]")
         if self.grow_policy not in ("depthwise", "lossguide"):
             raise ValueError(f"unknown grow_policy {self.grow_policy!r}")
+        if self.log_every < 1:
+            raise ValueError("log_every must be >= 1")
+        if self.fused_rounds and self.grow_policy != "depthwise":
+            raise ValueError("fused_rounds requires the depthwise "
+                             "grow_policy (lossguide growth is host-driven)")
         if self.goss_top_rate or self.goss_other_rate:
             if not (0.0 <= self.goss_top_rate < 1.0
                     and 0.0 < self.goss_other_rate <= 1.0
@@ -285,6 +296,83 @@ def _validate_multiclass_labels(K: int, y, eval_y=None) -> None:
                 f"[0, {K}); observed range [{y_min}, {y_max}]")
 
 
+# --------------------------------------------------------------------------
+# fused boosting rounds: one jitted step per round, margins donated
+# --------------------------------------------------------------------------
+def _fused_step_key(config: GBDTConfig) -> GBDTConfig:
+    """Strip the fields that do not shape the compiled round (loop
+    controls like seed/n_trees/early stopping, and the legacy strategy
+    strings already lifted into the plan) so e.g. a seed sweep or CV
+    loop reuses ONE compiled step instead of retracing per config."""
+    return dataclasses.replace(
+        config, n_trees=1, seed=0, early_stopping_rounds=None, log_every=1,
+        max_leaves=None, hist_strategy="auto", partition_strategy="auto",
+        traversal_strategy="auto", host_offload_split=False)
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_round_step(config: GBDTConfig, plan: ExecutionPlan, n: int,
+                      F: int, n_bins: int, n_eval: Optional[int]):
+    """Compile one boosting round as a single jitted step.
+
+    The step fuses the whole round — gradient statistics, per-round
+    stochastic filters, tree growth (steps ①–④), leaf shrinkage, step-⑤
+    margin refresh and the device-side loss reduction — so the host
+    dispatches once per round and never synchronizes on intermediate
+    values.  Margins (train and eval) are donated where the backend
+    supports donation, so the round updates them in place.  Cached per
+    (``_fused_step_key(config)``, plan, shapes): repeated fits reuse the
+    compiled step.
+    """
+    loss = losses_mod.get_loss(config.objective, config.n_classes)
+    K = loss.n_outputs
+    with_eval = n_eval is not None
+
+    def body(margins, y, tkey, codes, codes_cm, is_cat_field):
+        g, h = loss.grad_hess(margins, y)
+        g, h, field_mask = _round_stats(config, tkey, g, h, n, F, K)
+        common = dict(depth=config.max_depth, n_bins=n_bins,
+                      missing_bin=n_bins - 1, is_cat_field=is_cat_field,
+                      field_mask=field_mask, lambda_=config.lambda_,
+                      gamma=config.gamma,
+                      min_child_weight=config.min_child_weight, plan=plan)
+        if K is not None:
+            tree = tree_mod.fit_forest(codes, codes_cm, g.T, h.T, **common)
+        else:
+            tree = tree_mod.fit_tree(codes, codes_cm, g, h, **common)
+        tree = tree._replace(
+            leaf_value=tree.leaf_value * config.learning_rate)
+        data = BinnedDataset(codes, codes_cm, is_cat_field, n_bins,
+                             None, None)
+        delta = (_predict_forest(tree, data, plan) if K is not None
+                 else _predict_one_tree(tree, data, plan))
+        margins = margins + delta
+        return margins, tree, jnp.mean(loss.value(margins, y))
+
+    if not with_eval:
+        step = body
+        donate = (0,)
+    else:
+        def step(margins, ev_margins, y, y_ev, tkey, codes, codes_cm,
+                 ev_codes, ev_codes_cm, is_cat_field):
+            margins, tree, train_loss = body(margins, y, tkey, codes,
+                                             codes_cm, is_cat_field)
+            ev_data = BinnedDataset(ev_codes, ev_codes_cm, is_cat_field,
+                                    n_bins, None, None)
+            ev_delta = (_predict_forest(tree, ev_data, plan)
+                        if K is not None
+                        else _predict_one_tree(tree, ev_data, plan))
+            ev_margins = ev_margins + ev_delta
+            ev_loss = jnp.mean(loss.value(ev_margins, y_ev))
+            return margins, ev_margins, tree, train_loss, ev_loss
+        donate = (0, 1)
+    # donation is a no-op (plus a warning) on the CPU backend — only ask
+    # for it where XLA actually aliases the buffers
+    if jax.default_backend() not in ("tpu", "gpu"):
+        donate = ()
+    return jax.jit(step, donate_argnums=donate)
+
+
 def train(config: GBDTConfig, data: BinnedDataset, y,
           eval_set: Optional[Tuple[BinnedDataset, jax.Array]] = None,
           init_model: Optional[GBDTModel] = None,
@@ -342,7 +430,13 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
     key = jax.random.PRNGKey(config.seed)
     best_eval, best_round = np.inf, -1
 
-    for t_idx in range(len(trees), len(trees) + config.n_trees):
+    if config.fused_rounds:
+        return _train_fused(config, plan, data, y, eval_set, trees, margins,
+                            eval_margins, base_margin, history, step_times,
+                            key, callback, verbose, n, F)
+
+    start = len(trees)
+    for t_idx in range(start, start + config.n_trees):
         tkey = jax.random.fold_in(key, t_idx)  # deterministic replay stream
         t0 = time.perf_counter()
         g, h = loss.grad_hess(margins, y)
@@ -407,7 +501,8 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
                 break
         step_times["other"] += time.perf_counter() - t2
 
-        if verbose and (t_idx % 10 == 0 or t_idx == config.n_trees - 1):
+        if verbose and (t_idx % config.log_every == 0
+                        or t_idx == start + config.n_trees - 1):
             print(f"[gbdt] tree {t_idx:4d}  train_loss={train_loss:.6f}")
         if callback is not None:
             callback(t_idx, _as_model(trees, base_margin, config,
@@ -417,6 +512,69 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
                                        data.missing_bin, F),
                        history=history, step_times=step_times,
                        stats={"n_rows": n})
+
+
+def _train_fused(config, plan, data, y, eval_set, trees, margins,
+                 eval_margins, base_margin, history, step_times, key,
+                 callback, verbose, n, F) -> TrainResult:
+    """The device-resident boosting loop: one jitted dispatch per round.
+
+    The host never synchronizes on per-round values unless it has to —
+    losses stay device scalars, fetched every ``config.log_every`` rounds
+    for verbose logging and once in bulk at the end.  Early stopping is
+    the one per-round consumer: it pulls the eval scalar each round
+    (still a single dispatch per round).  Per-step attribution is not
+    possible inside a fused round, so wall time lands in a dedicated
+    ``fused_rounds`` slot of ``step_times``.
+    """
+    step = _fused_round_step(
+        _fused_step_key(config), plan, n, F, data.n_bins,
+        None if eval_set is None else int(eval_set[1].shape[0]))
+    y_ev = (jnp.asarray(eval_set[1], jnp.float32)
+            if eval_set is not None else None)
+    train_dev: List[jax.Array] = []
+    eval_dev: List[jax.Array] = []
+    best_eval, best_round = np.inf, -1
+    t_loop = time.perf_counter()
+    start = len(trees)
+    for t_idx in range(start, start + config.n_trees):
+        tkey = jax.random.fold_in(key, t_idx)   # same stream as host loop
+        if eval_set is None:
+            margins, tree, tl = step(margins, y, tkey, data.codes,
+                                     data.codes_cm, data.is_categorical)
+        else:
+            margins, eval_margins, tree, tl, ev = step(
+                margins, eval_margins, y, y_ev, tkey, data.codes,
+                data.codes_cm, eval_set[0].codes, eval_set[0].codes_cm,
+                data.is_categorical)
+            eval_dev.append(ev)
+        trees.append(tree)
+        train_dev.append(tl)
+        if eval_set is not None and config.early_stopping_rounds is not None:
+            ev_f = float(ev)                    # the one per-round sync
+            if ev_f < best_eval - 1e-12:
+                best_eval, best_round = ev_f, t_idx
+            if t_idx - best_round >= config.early_stopping_rounds:
+                if verbose:
+                    print(f"[gbdt] early stop at tree {t_idx} "
+                          f"(best {best_round}: {best_eval:.6f})")
+                break
+        if verbose and (t_idx % config.log_every == 0
+                        or t_idx == start + config.n_trees - 1):
+            print(f"[gbdt] tree {t_idx:4d}  train_loss={float(tl):.6f}")
+        if callback is not None:
+            callback(t_idx, _as_model(trees, base_margin, config,
+                                      data.missing_bin, F))
+    # one bulk fetch materializes the whole loss trajectory
+    history["train_loss"].extend(float(v) for v in jax.device_get(train_dev))
+    if eval_set is not None:
+        history["eval_loss"].extend(float(v) for v in jax.device_get(eval_dev))
+    jax.block_until_ready(margins)
+    step_times["fused_rounds"] = time.perf_counter() - t_loop
+    return TrainResult(model=_as_model(trees, base_margin, config,
+                                       data.missing_bin, F),
+                       history=history, step_times=step_times,
+                       stats={"n_rows": n, "fused_rounds": True})
 
 
 def _as_model(trees, base_margin, config, missing_bin, F) -> GBDTModel:
@@ -501,6 +659,11 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
     zero-weight record stream from the histogram *stat* volume each round
     while node ids stay maintained for every record, so margins (and the
     next round's gradients) remain exact.
+
+    ``config.fused_rounds`` is ignored here: every round is a host-driven
+    chunk pipeline by construction.  ``plan.hist_subtraction`` applies —
+    levels > 0 accumulate only smaller-child statistics per chunk and
+    derive the sibling histograms once per level.
     """
     if plan is None:
         plan = ExecutionPlan.from_config(config)
@@ -594,7 +757,8 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
     key = jax.random.PRNGKey(config.seed)
     best_eval, best_round = np.inf, -1
 
-    for t_idx in range(len(trees), len(trees) + config.n_trees):
+    start = len(trees)
+    for t_idx in range(start, start + config.n_trees):
         tkey = jax.random.fold_in(key, t_idx)
         t0 = time.perf_counter()
         g, h = loss.grad_hess(margins, y)
@@ -649,7 +813,8 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
                 break
         step_times["other"] += time.perf_counter() - t2
 
-        if verbose and (t_idx % 10 == 0 or t_idx == config.n_trees - 1):
+        if verbose and (t_idx % config.log_every == 0
+                        or t_idx == start + config.n_trees - 1):
             print(f"[gbdt] tree {t_idx:4d}  train_loss={train_loss:.6f}  "
                   f"({n_chunks[0]} chunks x {chunk_rows} rows)")
         if callback is not None:

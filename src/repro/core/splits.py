@@ -41,6 +41,12 @@ class SplitDecision(NamedTuple):
     default_left: jax.Array  # (NN,) int32 missing direction
     node_g: jax.Array        # (NN,) float32 parent G (for leaf weights)
     node_h: jax.Array        # (NN,) float32 parent H
+    left_h: jax.Array        # (NN,) float32 hessian mass routed LEFT by the
+    #                          chosen split (incl. the missing bin when
+    #                          default_left) — the "counts channel" the
+    #                          subtraction growers use to pick the smaller
+    #                          child without a device→host trip (h ≡ 1 for
+    #                          squared error, so this IS the record count)
 
 
 def leaf_weight(G, H, lambda_):
@@ -90,13 +96,21 @@ def find_best_splits(hist, is_cat_field, field_mask, lambda_, gamma,
     cand = jnp.maximum(cand_dl, cand_dr)                   # (NN, F, NB-1)
     cand = jnp.where(field_mask[None, :, None], cand, _NEG)
 
+    # hessian routed left per candidate (counts channel): cumulative for
+    # numeric, single-bin for categorical, + the missing mass when the
+    # chosen direction sends missing records left
+    HL = jnp.where(cat_f, v[..., 1], cumH)                 # (NN, F, NB-1)
+    HL = HL + jnp.where(go_dl, Hm[..., None], 0.0)
+
     t_best = jnp.argmax(cand, axis=-1)                     # (NN, F)
     gain_f = jnp.take_along_axis(cand, t_best[..., None], -1)[..., 0]
     dl_f = jnp.take_along_axis(go_dl, t_best[..., None], -1)[..., 0]
+    hl_f = jnp.take_along_axis(HL, t_best[..., None], -1)[..., 0]
     f_best = jnp.argmax(gain_f, axis=-1)                   # (NN,)
     gain = jnp.take_along_axis(gain_f, f_best[:, None], 1)[:, 0]
     thr = jnp.take_along_axis(t_best, f_best[:, None], 1)[:, 0]
     dl = jnp.take_along_axis(dl_f, f_best[:, None], 1)[:, 0]
+    hl = jnp.take_along_axis(hl_f, f_best[:, None], 1)[:, 0]
     gain = jnp.where(jnp.isfinite(gain), gain, jnp.float32(-1.0))
     return SplitDecision(
         gain=gain.astype(jnp.float32),
@@ -106,6 +120,7 @@ def find_best_splits(hist, is_cat_field, field_mask, lambda_, gamma,
         default_left=dl.astype(jnp.int32),
         node_g=Gp.astype(jnp.float32),
         node_h=Hp.astype(jnp.float32),
+        left_h=hl.astype(jnp.float32),
     )
 
 
@@ -141,17 +156,22 @@ def _np_best_splits(hist, is_cat_field, field_mask, lambda_, gamma,
     go_dl = cand_dl > cand_dr
     cand = np.where(field_mask[None, :, None],
                     np.maximum(cand_dl, cand_dr), -np.inf)
+    HL = np.where(catf, v[..., 1], cumH) + np.where(go_dl, Hm[..., None],
+                                                    0.0)
     t_best = np.argmax(cand, -1)
     gain_f = np.take_along_axis(cand, t_best[..., None], -1)[..., 0]
     dl_f = np.take_along_axis(go_dl, t_best[..., None], -1)[..., 0]
+    hl_f = np.take_along_axis(HL, t_best[..., None], -1)[..., 0]
     f_best = np.argmax(gain_f, -1)
     gain = np.take_along_axis(gain_f, f_best[:, None], 1)[:, 0]
     thr = np.take_along_axis(t_best, f_best[:, None], 1)[:, 0]
     dl = np.take_along_axis(dl_f, f_best[:, None], 1)[:, 0]
+    hl = np.take_along_axis(hl_f, f_best[:, None], 1)[:, 0]
     gain = np.where(np.isfinite(gain), gain, -1.0)
     return (gain.astype(np.float32), f_best.astype(np.int32),
             thr.astype(np.int32), is_cat_field[f_best].astype(np.int32),
-            dl.astype(np.int32), Gp.astype(np.float32), Hp.astype(np.float32))
+            dl.astype(np.int32), Gp.astype(np.float32), Hp.astype(np.float32),
+            hl.astype(np.float32))
 
 
 def find_best_splits_host(hist, is_cat_field, field_mask, lambda_, gamma,
@@ -164,6 +184,7 @@ def find_best_splits_host(hist, is_cat_field, field_mask, lambda_, gamma,
         jax.ShapeDtypeStruct((NN,), jnp.int32),
         jax.ShapeDtypeStruct((NN,), jnp.int32),
         jax.ShapeDtypeStruct((NN,), jnp.int32),
+        jax.ShapeDtypeStruct((NN,), jnp.float32),
         jax.ShapeDtypeStruct((NN,), jnp.float32),
         jax.ShapeDtypeStruct((NN,), jnp.float32),
     )

@@ -8,8 +8,11 @@ Two growers, matching the two configurations described in §II-A:
     fixed-shape, fully jittable primary path: every record carries a
     level-local node id; one histogram pass per level computes all vertex
     histograms at once; the partition kernel routes records to children.
-    One full-data scan per level — the same total work the smaller-child
-    subtraction trick achieves in vertex mode.
+    One full-data scan per level by default; with
+    ``ExecutionPlan.hist_subtraction`` levels > 0 bin only the smaller
+    child of every split parent (a compacted half-stream pass) and derive
+    the sibling as ``parent − smaller`` — the paper's §II-A trick applied
+    level-synchronously.
 
   * ``fit_tree_lossguide`` — the *vertex-by-vertex* (leaf-wise, best-first)
     configuration with the paper's step-① optimization applied literally:
@@ -114,12 +117,20 @@ def fit_forest(codes, codes_cm, g, h, *, depth: int, n_bins: int,
 
     state = (feature, threshold, is_cat, default_left, value_bottom,
              value_set)
+    prev_hist = None
     for level in range(depth):
         nn = 2 ** level
 
-        # step ① — one batched pass covers all K class partitions
-        hist = ops.build_histogram(codes, g, h, node_ids, n_nodes=nn,
-                                   n_bins=n_bins, plan=plan)  # (K,nn,F,NB,2)
+        # step ① — one batched pass covers all K class partitions; with
+        # plan.hist_subtraction, levels > 0 bin only the smaller child of
+        # each parent and derive the sibling from the previous level's hist
+        if plan.hist_subtraction and level > 0:
+            hist = _subtract_level_hist(codes, g, h, node_ids, prev_hist,
+                                        n_nodes=nn, n_bins=n_bins, plan=plan)
+        else:
+            hist = ops.build_histogram(codes, g, h, node_ids, n_nodes=nn,
+                                       n_bins=n_bins, plan=plan)
+        prev_hist = hist                                      # (K,nn,F,NB,2)
         # step ② — split decisions + tree-table updates (shared with the
         # chunked grower, which accumulates the same hist across chunks)
         state, best, do_split = _decide_level(
@@ -191,6 +202,95 @@ def _settle_bottom_leaves(g, h, node_ids, value_bottom, value_set, n_leaf,
         hh.astype(jnp.float32), nid, n_leaf))(h, node_ids)
     wb = splits_mod.leaf_weight(Gb, Hb, lambda_)
     return jnp.where(value_set, value_bottom, wb)
+
+
+# --------------------------------------------------------------------------
+# histogram subtraction (paper §II-A) for the level-wise growers
+# --------------------------------------------------------------------------
+def _child_is_smaller(smaller_is_left):
+    """(K, NN/2) per-parent 'left child is smaller' -> (K, NN) per-child
+    'this node is the smaller sibling' (children of parent p sit at slots
+    2p / 2p+1)."""
+    sil2 = jnp.repeat(smaller_is_left, 2, axis=1)             # (K, NN)
+    left_slot = (jnp.arange(sil2.shape[1]) % 2) == 0
+    return jnp.where(left_slot[None, :], sil2, ~sil2)
+
+
+def _combine_sibling_hist(parent_hist, small, is_small):
+    """Derive the level histogram from the smaller-child partial histogram:
+    ``hist[c] = small[c]`` where c is the smaller sibling, else
+    ``parent[c // 2] − small[sibling(c)]`` — the paper's "without any
+    explicit binning at the other child".  Exact in real arithmetic; in
+    float32 the derived sibling reassociates the parent sum (documented
+    tolerance, see docs/api.md)."""
+    K, nn, F, NB, S = small.shape
+    sib = small.reshape(K, nn // 2, 2, F, NB, S)[:, :, ::-1]
+    derived = jnp.repeat(parent_hist, 2, axis=1) - sib.reshape(small.shape)
+    return jnp.where(is_small[:, :, None, None, None], small, derived)
+
+
+def _compact_selected(codes, g, h, nid, sel, n_half: int):
+    """Pack the ``sel``-marked records into a fixed (n_half, ...) buffer.
+
+    ``n_half = n // 2`` always fits: summed over parents,
+    ``min(left, right) <= (left + right) / 2``, so the smaller children
+    hold at most ``n // 2`` records (selection is by RECORD COUNT, which
+    is what guarantees the bound — hessian mass does not, e.g. under
+    GOSS zero-weighting).  Slots past the selected count are padding with
+    zero gradient statistics (contributing exactly +0.0) and node 0.
+    """
+    n = codes.shape[0]
+    pos = jnp.where(sel, jnp.cumsum(sel) - 1, n_half)         # dump slot
+    idx = jnp.full((n_half + 1,), n, jnp.int32).at[pos].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")[:n_half]
+    valid = idx < n
+    take = jnp.where(valid, idx, 0)
+    return (codes[take],
+            jnp.where(valid, g[take], 0.0),
+            jnp.where(valid, h[take], 0.0),
+            jnp.where(valid, nid[take], 0))
+
+
+def _subtract_level_hist(codes, g, h, node_ids, parent_hist, *,
+                         n_nodes: int, n_bins: int, plan: ExecutionPlan):
+    """Step ① for one level (> 0) via smaller-child subtraction.
+
+    Bins ONLY the records that landed in the smaller child of each split
+    parent — compacted to an ``n // 2`` buffer so the histogram kernel
+    reads half the record stream — and derives every sibling as
+    ``parent − smaller``.  Per-node record counts come from an O(n)
+    on-device segment-sum of the freshly partitioned node ids (no
+    device→host trip in the level loop).
+
+    Class handling: the jnp strategies run one full pass *per class*
+    anyway, so per-class compaction halves their work at any K.  The
+    class-batched Pallas kernel reads the code stream ONCE for all K —
+    per-class compaction would read K·n/2 codes instead of n, a net
+    loss for K > 2 — so there the bigger-child records are masked to
+    zero statistics instead (single batched launch, work unchanged,
+    siblings still derived).
+    """
+    K, n = g.shape
+    ones = jnp.ones((n,), jnp.int32)
+    counts = jax.vmap(
+        lambda nid: jax.ops.segment_sum(ones, nid, n_nodes))(node_ids)
+    smaller_is_left = counts[:, 0::2] <= counts[:, 1::2]      # (K, NN/2)
+    is_small = _child_is_smaller(smaller_is_left)             # (K, NN)
+    sel = jax.vmap(lambda m, nid: m[nid])(is_small, node_ids)  # (K, n)
+    if K > 1 and plan.hist_strategy.startswith("pallas"):
+        w = sel.astype(jnp.float32)
+        small = ops.build_histogram(codes, g * w, h * w, node_ids,
+                                    n_nodes=n_nodes, n_bins=n_bins,
+                                    plan=plan)
+        return _combine_sibling_hist(parent_hist, small, is_small)
+    n_half = max(1, n // 2)
+    smalls = []
+    for k in range(K):
+        ck, gk, hk, nk = _compact_selected(codes, g[k], h[k], node_ids[k],
+                                           sel[k], n_half)
+        smalls.append(ops.build_histogram(ck, gk, hk, nk, n_nodes=n_nodes,
+                                          n_bins=n_bins, plan=plan))
+    return _combine_sibling_hist(parent_hist, jnp.stack(smalls), is_small)
 
 
 # --------------------------------------------------------------------------
@@ -273,20 +373,43 @@ def fit_forest_chunked(chunks, g, h, *, depth: int, n_bins: int,
         node_ids[:, lo:hi] = np.asarray(nid[:, :hi - lo])
         return nid
 
+    use_sub = bool(plan.hist_subtraction)
+    prev_hist = None
+    smaller_is_left = None            # (K, nn) hessian-based, per level
     for level in range(depth):
         nn = 2 ** level
+        sub_level = use_sub and level > 0
+        # chunked subtraction: every chunk must be streamed anyway (the
+        # previous level's partition is applied lazily in this pass), so
+        # instead of compacting, the bigger-child records are masked to
+        # zero stats — the accumulator stays class-batched — and siblings
+        # are derived once per level from the previous level's histogram.
+        # Smaller-child selection comes from the decision's left_h channel
+        # (hessian mass), available BEFORE the pass; masking keeps any
+        # selection exact, so hessian-vs-count ties are harmless here.
+        is_small = _child_is_smaller(smaller_is_left) if sub_level else None
         hist = jnp.zeros((K, nn, F, n_bins, 2), jnp.float32)
         for lo, hi, codes in chunks():
             codes = jnp.asarray(codes)
             rows = codes.shape[0]
             nid = apply_pending(codes, lo, hi, rows)
+            gc = stat_chunk(g, lo, hi, rows)
+            hc = stat_chunk(h, lo, hi, rows)
+            if sub_level:
+                w = jax.vmap(lambda m, i: m[i])(is_small, nid)
+                w = w.astype(jnp.float32)
+                gc, hc = gc * w, hc * w
             hist = ops.accumulate_histogram(
-                hist, codes, stat_chunk(g, lo, hi, rows),
-                stat_chunk(h, lo, hi, rows), nid, n_nodes=nn,
+                hist, codes, gc, hc, nid, n_nodes=nn,
                 n_bins=n_bins, plan=plan)
+        if sub_level:
+            hist = _combine_sibling_hist(prev_hist, hist, is_small)
+        prev_hist = hist
         state, best, do_split = _decide_level(
             hist, level, depth, state, is_cat_field, field_mask, lambda_,
             gamma, min_child_weight, find)
+        smaller_is_left = jnp.where(do_split,
+                                    2.0 * best.left_h <= best.node_h, False)
         pending = (best.feature, best.threshold, best.is_cat,
                    best.default_left, do_split)
 
@@ -341,7 +464,7 @@ def fit_tree_lossguide(codes, codes_cm, g, h, *, depth: int, n_bins: int,
                                         lambda_, gamma, min_child_weight)
         return jax.device_get(
             (d.gain[0], d.feature[0], d.threshold[0], d.is_cat[0],
-             d.default_left[0], d.node_g[0], d.node_h[0]))
+             d.default_left[0], d.node_g[0], d.node_h[0], d.left_h[0]))
 
     root_mask = jnp.ones((n,), jnp.float32)
     root_hist = hist_of(root_mask)
@@ -350,11 +473,11 @@ def fit_tree_lossguide(codes, codes_cm, g, h, *, depth: int, n_bins: int,
 
     def push(pos, level, hist, mask):
         nonlocal counter
-        gain, f, t, c, dl, G, H = best_of(hist)
+        gain, f, t, c, dl, G, H, HL = best_of(hist)
         heapq.heappush(heap, (-float(gain), counter,
                               dict(pos=pos, level=level, hist=hist, mask=mask,
                                    f=int(f), t=int(t), c=int(c), dl=int(dl),
-                                   G=float(G), H=float(H),
+                                   G=float(G), H=float(H), HL=float(HL),
                                    gain=float(gain))))
         counter += 1
 
@@ -385,9 +508,11 @@ def fit_tree_lossguide(codes, codes_cm, g, h, *, depth: int, n_bins: int,
         mask_r = e["mask"] - mask_l
 
         # the paper's step-① optimization: bin ONLY the smaller child, the
-        # sibling histogram is parent − child (no explicit binning).
-        hl = float(jnp.sum(mask_l))
-        hr = float(jnp.sum(mask_r))
+        # sibling histogram is parent − child (no explicit binning).  The
+        # decision's left_h counts channel already crossed to the host with
+        # the split, so picking the smaller side costs no extra syncs.
+        hl = e["HL"]
+        hr = e["H"] - e["HL"]
         if hl <= hr:
             hist_small = hist_of(mask_l)
             hist_l, hist_r = hist_small, e["hist"] - hist_small

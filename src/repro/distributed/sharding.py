@@ -135,8 +135,8 @@ def distributed_split_combine(mesh: Mesh, hist, is_cat_field, field_mask,
             best.threshold.astype(jnp.float32),
             best.is_cat.astype(jnp.float32),
             best.default_left.astype(jnp.float32),
-            best.node_g, best.node_h], axis=-1)               # (NN, 7)
-        allc = jax.lax.all_gather(cand, "model")              # (M, NN, 7)
+            best.node_g, best.node_h, best.left_h], axis=-1)  # (NN, 8)
+        allc = jax.lax.all_gather(cand, "model")              # (M, NN, 8)
         win = jnp.argmax(allc[..., 0], axis=0)                # (NN,)
         sel = jnp.take_along_axis(allc, win[None, :, None], axis=0)[0]
         return sel
@@ -152,7 +152,7 @@ def distributed_split_combine(mesh: Mesh, hist, is_cat_field, field_mask,
         threshold=sel[:, 2].astype(jnp.int32),
         is_cat=sel[:, 3].astype(jnp.int32),
         default_left=sel[:, 4].astype(jnp.int32),
-        node_g=sel[:, 5], node_h=sel[:, 6])
+        node_g=sel[:, 5], node_h=sel[:, 6], left_h=sel[:, 7])
 
 
 def distributed_partition_bits(mesh: Mesh, node_ids, codes_cm, feat, thr,

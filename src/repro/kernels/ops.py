@@ -196,6 +196,26 @@ def build_histogram(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
                      f"choose from {HIST_STRATEGIES}")
 
 
+@functools.lru_cache(maxsize=None)
+def _accumulate_jit(n_nodes: int, n_bins: int, plan: ExecutionPlan):
+    """Jitted ``hist += chunk_hist`` with the accumulator donated.
+
+    Donation lets XLA update the (K, NN, F, NB, 2) accumulator in place
+    instead of allocating a fresh buffer per chunk — the out-of-core
+    trainer calls this once per chunk per level, so without donation the
+    allocator churns one accumulator-sized buffer per chunk.  Donation is
+    only requested on backends that implement it (TPU/GPU); the CPU
+    backend would warn and copy anyway.
+    """
+    donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+
+    def impl(hist, codes, g, h, node_ids):
+        return hist + build_histogram(codes, g, h, node_ids, n_nodes=n_nodes,
+                                      n_bins=n_bins, plan=plan)
+
+    return jax.jit(impl, donate_argnums=donate)
+
+
 def accumulate_histogram(hist, codes, g, h, node_ids, *, n_nodes: int,
                          n_bins: int,
                          plan: Optional[ExecutionPlan] = None):
@@ -204,12 +224,15 @@ def accumulate_histogram(hist, codes, g, h, node_ids, *, n_nodes: int,
     The out-of-core trainer accumulates the per-level histogram across
     device-sized chunks — every chunk reuses the per-chunk strategy
     unchanged (Pallas or jnp), and only the (n_nodes, F, n_bins, 2)
-    accumulator stays resident between chunks.  Adding a zero-stat padded
-    record contributes exactly +0.0, so padded chunks keep bit-equality
-    with the monolithic histogram.
+    accumulator stays resident between chunks (donated into the jit, so
+    no fresh accumulator-sized allocation per chunk).  Adding a zero-stat
+    padded record contributes exactly +0.0, so padded chunks keep
+    bit-equality with the monolithic histogram.
     """
-    return hist + build_histogram(codes, g, h, node_ids, n_nodes=n_nodes,
-                                  n_bins=n_bins, plan=plan)
+    # chunk budgets don't change the kernel — drop them from the jit key
+    return _accumulate_jit(n_nodes, n_bins,
+                           resolve_plan(plan).without_chunking())(
+        hist, codes, g, h, node_ids)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,86 @@
+"""The CI perf gate (benchmarks/check_regression.py) — pure-dict logic."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import (check, machine_calibration,  # noqa: E402
+                                         throughput_lanes)
+
+
+def _report(rps, error=None):
+    return {"benches": {
+        "training": {
+            "error": error,
+            "rows": [{"name": name,
+                      "us_per_call": 1.0,
+                      "derived": f"rows_per_sec={v:.0f};n=1"}
+                     for name, v in rps.items()],
+        }}}
+
+
+def test_lane_extraction_ignores_non_throughput_rows():
+    rep = _report({"a": 100.0})
+    rep["benches"]["training"]["rows"].append(
+        {"name": "modeled", "us_per_call": 5.0, "derived": "x=3.10"})
+    assert throughput_lanes(rep) == {("training", "a"): 100.0}
+
+
+def test_within_tolerance_passes():
+    base = _report({"a": 1000.0, "b": 500.0, "c": 2000.0})
+    ci = _report({"a": 980.0, "b": 400.0, "c": 2100.0})   # worst: -20%
+    assert check(ci, base, tolerance=0.30) == []
+
+
+def test_per_lane_regression_fails():
+    """Two lanes hold, one drops 45% — calibration (median ratio 1.0)
+    does not mask a genuine single-lane regression."""
+    base = _report({"a": 1000.0, "b": 500.0, "c": 2000.0})
+    ci = _report({"a": 1000.0, "b": 500.0, "c": 1100.0})
+    failures = check(ci, base, tolerance=0.30)
+    assert len(failures) == 1 and "training/c" in failures[0]
+
+
+def test_uniform_machine_speed_difference_passes():
+    """A slower runner class (every lane at ~0.5x) is calibrated away."""
+    base = _report({"a": 1000.0, "b": 500.0, "c": 2000.0})
+    ci = _report({"a": 520.0, "b": 240.0, "c": 1000.0})
+    assert machine_calibration(throughput_lanes(base),
+                               throughput_lanes(ci)) == 0.5
+    assert check(ci, base, tolerance=0.30) == []
+
+
+def test_calibration_clamped_for_collapse():
+    """An across-the-board 5x collapse exceeds the 3x clamp and fails —
+    it cannot all be explained away as hardware."""
+    base = _report({"a": 1000.0, "b": 500.0, "c": 2000.0})
+    ci = _report({"a": 200.0, "b": 100.0, "c": 400.0})
+    assert check(ci, base, tolerance=0.30) != []
+
+
+def test_absolute_mode_skips_calibration():
+    base = _report({"a": 1000.0})
+    ci = _report({"a": 650.0})                   # -35%, single lane
+    assert check(ci, base, tolerance=0.30) == []          # calibrated away
+    failures = check(ci, base, tolerance=0.30, absolute=True)
+    assert len(failures) == 1 and "below" in failures[0]
+
+
+def test_missing_lane_fails():
+    base = _report({"a": 1000.0, "b": 500.0})
+    ci = _report({"a": 1000.0})
+    failures = check(ci, base, tolerance=0.30)
+    assert len(failures) == 1 and "missing" in failures[0]
+
+
+def test_errored_bench_fails_once():
+    base = _report({"a": 1000.0, "b": 500.0})
+    ci = _report({}, error="RuntimeError('boom')")
+    failures = check(ci, base, tolerance=0.30)
+    assert len(failures) == 1 and "errored in CI" in failures[0]
+
+
+def test_faster_ci_always_passes():
+    base = _report({"a": 1000.0, "b": 500.0})
+    ci = _report({"a": 5000.0, "b": 2600.0})
+    assert check(ci, base, tolerance=0.30) == []

@@ -29,9 +29,11 @@ def main():
     est.fit(X, y, plan=ExecutionPlan.auto(hist_strategy="scatter"))
     print(f"trained {est.n_trees_} trees (depth {args.depth})")
 
-    # bin once up front so the timings isolate the traversal kernels
+    # bin once up front so the timings isolate the traversal kernels;
+    # "scan" is the legacy per-tree baseline, "reference" the
+    # tree-batched level walk, "pallas" the tree-blocked kernel
     codes = est.binner_.transform(X)
-    for name in ("reference", "pallas"):
+    for name in ("scan", "reference", "pallas"):
         plan = ExecutionPlan.auto(traversal_strategy=name)
         fn = lambda: est.model_.predict_margin(codes, plan=plan)
         jax.block_until_ready(fn())  # compile

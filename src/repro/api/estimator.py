@@ -444,21 +444,25 @@ class BoosterEstimator:
                        ) -> jax.Array:
         """Raw ensemble margins for raw (unbinned) ``X``.
 
-        A plan carrying a ``mesh`` dispatches the paper's §III-D scheme:
+        The default path is the serving engine: the batch is binned ON
+        DEVICE and dispatched through the compile-once, shape-bucketed
+        predict cache (see ``docs/api.md`` — varying request batch sizes
+        reuse one compiled step per power-of-two bucket).  A plan
+        carrying a ``mesh`` dispatches the paper's §III-D scheme instead:
         trees shard round-robin over the mesh's ``"model"`` axis (the
-        ensemble is zero-padded to divide it), records over the data axes.
+        ensemble is zero-padded to divide it — and to keep per-shard
+        tree counts a multiple of K for multi-class ensembles), records
+        over the data axes.
         """
         model = self._check_fitted()
         plan = self._resolve_plan(plan)
-        data = self._bin(X)
         if plan.mesh is not None:
-            if model.n_classes > 1:
-                raise NotImplementedError(
-                    "mesh-sharded inference does not support multi-class "
-                    "ensembles yet; predict without a mesh plan")
-            padded = pad_trees(model, plan.mesh.shape["model"])
-            return sharded_predict(plan.mesh, padded, data.codes)
-        return model.predict_margin(data.codes, plan=plan)
+            data = self._bin(X)
+            padded = pad_trees(model, plan.mesh.shape["model"]
+                               * max(model.n_classes, 1))
+            return sharded_predict(plan.mesh, padded, data.codes,
+                                   plan=plan)
+        return self.to_pipeline().predict_margin(X, plan=plan)
 
     def predict(self, X, *, plan: Optional[ExecutionPlan] = None
                 ) -> jax.Array:

@@ -26,7 +26,7 @@ import jax
 HIST_STRATEGIES = ("scatter", "scatter_private", "sort", "onehot",
                    "pallas_grouped", "pallas_packed")
 PARTITION_STRATEGIES = ("reference", "pallas")
-TRAVERSAL_STRATEGIES = ("reference", "pallas")
+TRAVERSAL_STRATEGIES = ("reference", "scan", "pallas")
 
 
 @functools.lru_cache(maxsize=None)
@@ -47,11 +47,21 @@ class ExecutionPlan:
     ------
     hist_strategy:       step ① — one of ``HIST_STRATEGIES`` or ``"auto"``
     partition_strategy:  step ③ — ``"reference"`` | ``"pallas"`` | ``"auto"``
-    traversal_strategy:  step ⑤ / batch inference — same choices as above
+    traversal_strategy:  step ⑤ / batch inference — ``"reference"`` (the
+                         tree-batched level walk: every tree advances one
+                         depth level per pass over the codes),
+                         ``"scan"`` (legacy one-tree-at-a-time lax.scan —
+                         kept as the baseline the benchmarks compare
+                         against), ``"pallas"`` (tree-blocked one-hot
+                         kernel), or ``"auto"``
     interpret:           run Pallas kernels in interpret mode (None = auto:
                          interpret everywhere except a real TPU)
     records_per_block:   Pallas histogram grid — records per kernel block
     fields_per_block:    Pallas histogram grid — fields per kernel block
+    trees_per_block:     Pallas batch inference (§III-D) — tree tables
+                         resident per grid step; each record block fetched
+                         into VMEM is amortized across this many trees
+                         (the ensemble is zero-padded to a multiple)
     host_offload_split:  run step ② split selection on host (paper's offload)
     hist_subtraction:    step ① sibling subtraction in the level-wise
                          growers — at each level > 0 only the *smaller*
@@ -79,6 +89,7 @@ class ExecutionPlan:
     interpret: Optional[bool] = None
     records_per_block: int = 512
     fields_per_block: int = 8
+    trees_per_block: int = 8
     host_offload_split: bool = False
     hist_subtraction: Optional[bool] = None
     chunk_bytes: Optional[int] = None
@@ -88,6 +99,8 @@ class ExecutionPlan:
         if self.chunk_bytes is not None and self.chunk_bytes <= 0:
             raise ValueError("chunk_bytes must be positive (or None for "
                              "in-memory training)")
+        if self.trees_per_block < 1:
+            raise ValueError("trees_per_block must be >= 1")
         if self.hist_strategy not in HIST_STRATEGIES + ("auto",):
             raise ValueError(
                 f"unknown histogram strategy {self.hist_strategy!r}; "

@@ -20,6 +20,7 @@ Bin-code conventions (per field, ``n_bins = max_bins`` total):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence
 
 import jax
@@ -131,6 +132,35 @@ class Binner:
             codes[:, f] = np.where(nan, missing_code, c).astype(np.uint8)
         return codes
 
+    def _device_tables(self):
+        """Edge/category tables as device arrays, cached per fit — the
+        lookup state of :meth:`transform_codes_device`."""
+        cached = getattr(self, "_dev_tables", None)
+        if cached is None or cached[0] is not self._edges:
+            tables = (jnp.asarray(self._edges, jnp.float32),
+                      jnp.asarray(self._is_cat),
+                      jnp.asarray(self._n_value_bins, jnp.int32))
+            self._dev_tables = cached = (self._edges, tables)
+        return cached[1]
+
+    def transform_codes_device(self, X) -> Array:
+        """(n, F) uint8 bin codes computed ON DEVICE in one jitted
+        dispatch — the serving path's binned transform.
+
+        Unlike :meth:`transform_codes` (host numpy, one pass per field)
+        this never round-trips through numpy per request: ``X`` is
+        shipped once and searchsorted against float32 edge tables
+        resident on device.  Codes match the host path except for raw
+        values whose float64/float32 roundings straddle a bin edge
+        (distinct float64 values that collapse in float32) — measure-zero
+        for real feature streams, and irrelevant for float32 inputs.
+        """
+        if self._edges is None:
+            raise RuntimeError("Binner.fit must run before transform")
+        return _transform_codes_jit(jnp.asarray(X, jnp.float32),
+                                    *self._device_tables(),
+                                    missing_code=self.max_bins - 1)
+
     def transform(self, X: np.ndarray) -> BinnedDataset:
         codes = self.transform_codes(X)
         codes_j = jnp.asarray(codes)
@@ -145,6 +175,23 @@ class Binner:
 
     def fit_transform(self, X: np.ndarray) -> BinnedDataset:
         return self.fit(X).transform(X)
+
+
+@functools.partial(jax.jit, static_argnames=("missing_code",))
+def _transform_codes_jit(X, edges, is_cat, n_value_bins, *,
+                         missing_code: int):
+    """Device twin of ``Binner.transform_codes``: NaN -> missing code,
+    categoricals truncate-and-clip, numerics searchsorted per field
+    (``edges`` rows are inf-padded, so the sentinel never matches)."""
+    nan = jnp.isnan(X)
+    filled = jnp.where(nan, 0.0, X)
+    num = jax.vmap(
+        lambda e, col: jnp.searchsorted(e, col, side="right"))(
+            edges, filled.T).T.astype(jnp.int32)             # (n, F)
+    cat = jnp.clip(filled.astype(jnp.int32), 0,
+                   n_value_bins[None, :] - 1)
+    codes = jnp.where(is_cat[None, :], cat, num)
+    return jnp.where(nan, missing_code, codes).astype(jnp.uint8)
 
 
 class _QuantileSketch:

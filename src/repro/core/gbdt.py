@@ -120,9 +120,22 @@ class GBDTModel:
             self.objective, self.n_classes if self.n_classes > 1 else None)
 
     def predict_margin(self, codes, strategy: Optional[str] = None, *,
-                       plan: Optional[ExecutionPlan] = None) -> jax.Array:
+                       plan: Optional[ExecutionPlan] = None,
+                       cached: bool = False) -> jax.Array:
+        """Raw ensemble margins for binned ``codes``.
+
+        ``cached=True`` routes through the compile-once predict engine
+        (:func:`repro.core.inference.predict_margin_cached`): rows and
+        tree count are padded to power-of-two buckets so repeated calls
+        with varying batch sizes reuse one compiled step per bucket —
+        the serving path.  ``cached=False`` dispatches directly (exact
+        request shapes; what training-internal callers want).
+        """
         codes = codes.codes if isinstance(codes, BinnedDataset) else codes
         plan = self._resolve_plan(plan, strategy)
+        if cached and plan.mesh is None:
+            from repro.core.inference import predict_margin_cached
+            return predict_margin_cached(self, codes, plan=plan)
         out = ops.predict_ensemble(self.trees, codes,
                                    missing_bin=self.missing_bin,
                                    depth=self.max_depth, plan=plan,
@@ -132,9 +145,10 @@ class GBDTModel:
         return out + self.base_margin
 
     def predict(self, codes, strategy: Optional[str] = None, *,
-                plan: Optional[ExecutionPlan] = None) -> jax.Array:
+                plan: Optional[ExecutionPlan] = None,
+                cached: bool = False) -> jax.Array:
         return self.loss.transform(
-            self.predict_margin(codes, strategy, plan=plan))
+            self.predict_margin(codes, strategy, plan=plan, cached=cached))
 
     @staticmethod
     def _resolve_plan(plan: Optional[ExecutionPlan],

@@ -264,10 +264,70 @@ def traverse_tree(tree: TreeArrays, codes, *, missing_bin: int,
                   interpret: Optional[bool] = None):
     plan = resolve_plan(plan, _caller="traverse_tree",
                         traversal_strategy=strategy, interpret=interpret)
-    if plan.traversal_strategy == "reference":
+    # "scan" only changes multi-tree inference; a single walk is a walk
+    if plan.traversal_strategy in ("reference", "scan"):
         return _ref.traverse_ref(tree, codes, missing_bin)
     return _trav_k.traverse_pallas(tree, codes, missing_bin=missing_bin,
                                    interpret=plan.interpret)
+
+
+_PREDICT_ROWS_PER_CHUNK = 1024   # (chunk, T) walk state stays cache-sized
+
+
+@functools.partial(jax.jit, static_argnames=("missing_bin", "n_classes"))
+def _predict_batched_jit(trees, codes, missing_bin, n_classes):
+    """Optimized tree-batched level walk (same math as the
+    :func:`repro.kernels.ref.predict_ensemble_batched` oracle — node
+    decisions are integer-exact, so the two agree bit-for-bit on the
+    walks and to float tolerance on the fold):
+
+    * the four per-node parameters are packed into ONE int32 table
+      ``((feat+1) << 16) | (thr << 8) | (cat << 1) | dl`` so each level
+      costs a single table gather + a single code gather instead of
+      five (bin codes are uint8 and field counts < 2**15 — the repo's
+      binning invariants — so the pack is lossless);
+    * records walk in ``lax.map`` chunks so the (chunk, T) node matrix
+      and its gather intermediates stay cache-resident instead of
+      materializing (n, T) arrays per level.
+    """
+    n = codes.shape[0]
+    T = trees.feature.shape[0]
+    depth = int(trees.leaf_value.shape[-1]).bit_length() - 1
+    if codes.shape[1] >= 1 << 15:
+        # field ids this wide overflow the int32 pack — take the unpacked
+        # (slower, still one-pass) walk instead of silently corrupting
+        return _ref.predict_ensemble_batched(trees, codes, missing_bin,
+                                             n_classes=n_classes)
+    packed_t = (((trees.feature + 1) << 16) | (trees.threshold << 8)
+                | (trees.is_cat << 1) | trees.default_left).T  # (N_int, T)
+    leaf_t = trees.leaf_value.T                                # (N_leaf, T)
+    cls_oh = (None if n_classes == 1 else
+              jax.nn.one_hot(jnp.arange(T) % n_classes, n_classes,
+                             dtype=jnp.float32))               # (T, K)
+
+    def walk(cb):
+        node = jnp.zeros((cb.shape[0], T), jnp.int32)
+        for _ in range(depth):
+            p = jnp.take_along_axis(packed_t, node, axis=0)
+            f = (p >> 16) - 1
+            code = jnp.take_along_axis(cb, jnp.maximum(f, 0), axis=1)
+            thr = (p >> 8) & 255
+            go_left = jnp.where((p >> 1) & 1, code == thr, code <= thr)
+            go_left = jnp.where(code == missing_bin, (p & 1) == 1,
+                                go_left)
+            go_left = jnp.where(f < 0, True, go_left)
+            node = 2 * node + 2 - go_left.astype(jnp.int32)
+        vals = jnp.take_along_axis(leaf_t, node - packed_t.shape[0],
+                                   axis=0)                     # (chunk, T)
+        if cls_oh is None:
+            return jnp.sum(vals, axis=1)
+        return jax.lax.dot_general(vals, cls_oh, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    chunk = min(_PREDICT_ROWS_PER_CHUNK, max(1, n))
+    cp = jnp.pad(codes.astype(jnp.int32), ((0, -n % chunk), (0, 0)))
+    out = jax.lax.map(walk, cp.reshape(-1, chunk, cp.shape[1]))
+    return out.reshape((-1,) + out.shape[2:])[:n]
 
 
 def predict_ensemble(trees: TreeArrays, codes, *, missing_bin: int,
@@ -275,12 +335,22 @@ def predict_ensemble(trees: TreeArrays, codes, *, missing_bin: int,
                      strategy: Optional[str] = None,
                      interpret: Optional[bool] = None, n_classes: int = 1):
     """Ensemble margins: (n,) for scalar objectives, (n, K) when
-    ``n_classes > 1`` (trees round-major, tree t feeds class t % K)."""
+    ``n_classes > 1`` (trees round-major, tree t feeds class t % K).
+
+    ``plan.traversal_strategy`` picks the engine: ``"reference"`` is the
+    tree-batched level walk (one pass over the codes for the whole
+    ensemble, jitted), ``"scan"`` the legacy per-tree lax.scan baseline,
+    ``"pallas"`` the tree-blocked kernel (``plan.trees_per_block`` tree
+    tables resident per grid step).
+    """
     plan = resolve_plan(plan, _caller="predict_ensemble",
                         traversal_strategy=strategy, interpret=interpret)
-    if plan.traversal_strategy == "reference":
+    if plan.traversal_strategy == "scan":
         return _ref.predict_ensemble_ref(trees, codes, missing_bin,
                                          n_classes=n_classes)
+    if plan.traversal_strategy == "reference":
+        return _predict_batched_jit(trees, codes, missing_bin, n_classes)
     return _trav_k.predict_ensemble_pallas(
         trees, codes, missing_bin=missing_bin, depth=depth,
-        interpret=plan.interpret, n_classes=n_classes)
+        interpret=plan.interpret, n_classes=n_classes,
+        trees_per_block=plan.trees_per_block)

@@ -119,13 +119,17 @@ def traverse_ref(tree: TreeArrays, codes: Array, missing_bin: int) -> Array:
 
 def predict_ensemble_ref(trees: TreeArrays, codes: Array, missing_bin: int,
                          n_classes: int = 1) -> Array:
-    """Batch inference oracle: sum of per-tree outputs (paper §II-B).
+    """Legacy batch inference: one tree at a time (paper §II-B baseline).
 
     ``trees`` holds stacked arrays with a leading tree dimension (T, ...).
     Multi-class ensembles store trees round-major (round r, class k at
     index ``r * K + k``); tree t accumulates into margin column ``t % K``
     and the output gains a class axis: (n, K).  ``n_classes == 1`` keeps
     the scalar (n,) output.
+
+    A depth-T ensemble re-reads every code T times here — this is the
+    ``"scan"`` traversal strategy the benchmarks keep as the software
+    baseline; the production path is :func:`predict_ensemble_batched`.
     """
     T = trees.feature.shape[0]
     cls_oh = jax.nn.one_hot(jnp.arange(T) % n_classes, n_classes,
@@ -140,3 +144,49 @@ def predict_ensemble_ref(trees: TreeArrays, codes: Array, missing_bin: int,
     init = jnp.zeros((codes.shape[0], n_classes), jnp.float32)
     out, _ = jax.lax.scan(body, init, (tuple(trees), cls_oh))
     return out[:, 0] if n_classes == 1 else out
+
+
+def predict_ensemble_batched(trees: TreeArrays, codes: Array,
+                             missing_bin: int, n_classes: int = 1) -> Array:
+    """Tree-batched batch inference: all trees advance one level per pass.
+
+    The paper's §III-D scheme pins one tree per BU and streams a *shared*
+    record stream past all of them — the software analog keeps an (n, T)
+    node-index matrix and advances every tree simultaneously per depth
+    level with batched ``take_along_axis`` over the stacked (T, N_int)
+    node tables, so the whole ensemble makes ONE pass over the codes
+    instead of T.  A final (T, K) one-hot contraction folds the
+    round-major per-tree leaf values into class margins (a plain tree-sum
+    for ``n_classes == 1``).
+
+    Decision semantics are identical to the per-tree scan — node paths
+    and leaf choices are bit-equal; only the floating accumulation order
+    of the final fold differs.
+    """
+    T = trees.feature.shape[0]
+    depth = int(trees.leaf_value.shape[-1]).bit_length() - 1
+    codes = codes.astype(jnp.int32)
+    # (N_int, T) transposed tables: take_along_axis(tab, node, axis=0)
+    # fetches tab[node[i, t], t] — every tree's parameter in one gather
+    feat_t = trees.feature.T
+    thr_t = trees.threshold.T
+    cat_t = trees.is_cat.T
+    dl_t = trees.default_left.T
+    node = jnp.zeros((codes.shape[0], T), jnp.int32)         # (n, T)
+    for _ in range(depth):
+        f = jnp.take_along_axis(feat_t, node, axis=0)        # (n, T)
+        code = jnp.take_along_axis(codes, jnp.maximum(f, 0), axis=1)
+        go_left = _decide_go_left(code, f,
+                                  jnp.take_along_axis(thr_t, node, axis=0),
+                                  jnp.take_along_axis(cat_t, node, axis=0),
+                                  jnp.take_along_axis(dl_t, node, axis=0),
+                                  missing_bin)
+        node = 2 * node + 2 - go_left.astype(jnp.int32)
+    leaf = node - (2 ** depth - 1)
+    vals = jnp.take_along_axis(trees.leaf_value.T, leaf, axis=0)  # (n, T)
+    if n_classes == 1:
+        return jnp.sum(vals, axis=1)
+    cls_oh = jax.nn.one_hot(jnp.arange(T) % n_classes, n_classes,
+                            dtype=jnp.float32)               # (T, K)
+    return jax.lax.dot_general(vals, cls_oh, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)

@@ -15,9 +15,13 @@ independent VMEM gathers, so the walk is re-expressed gather-free:
     walk is D dense vector steps, zero irregular accesses.
 
 Batch inference (§III-D) adds a tree grid dimension: record blocks stream
-while each grid step holds one tree's table resident, accumulating the
-ensemble sum in the revisited output block — the analog of Booster pinning
-one tree per BU and averaging load across records.
+while each grid step holds a *block* of ``trees_per_block`` tree tables
+resident, accumulating the ensemble sum in the revisited output block —
+the analog of Booster pinning one tree per BU and averaging load across
+records.  Tree-blocking amortizes each record block fetched into VMEM
+across ``trees_per_block`` walks (the same trick the histogram kernel
+uses to class-batch stats), cutting the code-stream traffic from T reads
+per record to ``T / trees_per_block``.
 """
 from __future__ import annotations
 
@@ -118,46 +122,70 @@ def traverse_pallas(tree: TreeArrays, codes, *, missing_bin: int,
 
 
 def _ensemble_kernel(codes_ref, table_ref, leaf_ref, out_ref, *,
-                     depth: int, missing_bin: int, n_classes: int):
+                     depth: int, missing_bin: int, n_classes: int,
+                     trees_per_block: int):
     @pl.when(pl.program_id(1) == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
     rblk = codes_ref.shape[0]
     codes = codes_ref[...].astype(jnp.float32)
-    table = table_ref[0]                                      # (N_int, 4)
-    node = jnp.zeros((rblk, 1), jnp.int32)
-    for _ in range(depth):
-        node = _walk_step(node, codes, table, float(missing_bin))
-    leaf = node - table.shape[0]
     n_leaf = leaf_ref.shape[1]
-    oh_leaf = (leaf == _iota((rblk, n_leaf), 1)).astype(jnp.float32)
-    vals = lax.dot_general(oh_leaf, leaf_ref[0],
-                           (((1,), (0,)), ((), ())),
-                           preferred_element_type=jnp.float32)  # (RBLK, 1)
-    # multi-class: round-major tree order, tree t owns margin column t % K;
-    # a one-hot class row routes the accumulation (K == 1: plain add)
-    cls = pl.program_id(1) % n_classes
-    oh_cls = (cls == _iota((1, n_classes), 1)).astype(jnp.float32)
-    out_ref[...] += vals * oh_cls
+    acc = jnp.zeros((rblk, n_classes), jnp.float32)
+    # the codes block is fetched ONCE and walked by every resident tree
+    # table (paper: one record stream shared by all BUs); the tree loop is
+    # static, so each walk is the same D dense vector steps as before
+    for tb in range(trees_per_block):
+        table = table_ref[tb]                                 # (N_int, 4)
+        node = jnp.zeros((rblk, 1), jnp.int32)
+        for _ in range(depth):
+            node = _walk_step(node, codes, table, float(missing_bin))
+        leaf = node - table.shape[0]
+        oh_leaf = (leaf == _iota((rblk, n_leaf), 1)).astype(jnp.float32)
+        vals = lax.dot_general(oh_leaf, leaf_ref[tb],
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (RBLK, 1)
+        # multi-class: round-major tree order, tree t owns margin column
+        # t % K; a one-hot class row routes the accumulation (K == 1:
+        # plain add).  Zero-leaf padding trees contribute exactly 0.
+        cls = (pl.program_id(1) * trees_per_block + tb) % n_classes
+        oh_cls = (cls == _iota((1, n_classes), 1)).astype(jnp.float32)
+        acc += vals * oh_cls
+    out_ref[...] += acc
 
 
 @functools.partial(jax.jit, static_argnames=("missing_bin", "depth",
                                              "records_per_block", "interpret",
-                                             "n_classes"))
+                                             "n_classes", "trees_per_block"))
 def predict_ensemble_pallas(trees: TreeArrays, codes, *, missing_bin: int,
                             depth: int, records_per_block: int = 1024,
-                            interpret: bool = True, n_classes: int = 1):
+                            interpret: bool = True, n_classes: int = 1,
+                            trees_per_block: int = 8):
     """Batch inference: trees hold stacked (T, ...) arrays; codes (n, F).
 
-    Grid = (record blocks, trees): each step holds one tree table resident
-    in VMEM (paper: one tree per BU) and accumulates into the revisited
-    output block.  Returns (n,) float32 ensemble sums — or (n, K) per-class
-    margins when ``n_classes > 1`` (trees round-major; tree t feeds class
-    t % K via a one-hot column route, so the walk itself is unchanged).
+    Grid = (record blocks, T / trees_per_block): each step holds a block
+    of ``trees_per_block`` tree tables resident in VMEM (paper: one tree
+    per BU, here a BU block per grid step) and accumulates into the
+    revisited output block — each record block read is amortized across
+    the whole tree block.  The ensemble is zero-padded (pass-through
+    trees with all-zero leaves) up to a multiple of ``trees_per_block``;
+    padding contributes exactly +0.0.  Returns (n,) float32 ensemble sums
+    — or (n, K) per-class margins when ``n_classes > 1`` (trees
+    round-major; tree t feeds class t % K via a one-hot column route, so
+    the walk itself is unchanged).
     """
     n, n_cols = codes.shape
     T = trees.feature.shape[0]
+    tblk = min(trees_per_block, T)
+    t_pad = -T % tblk
+    if t_pad:
+        trees = TreeArrays(
+            feature=jnp.pad(trees.feature, ((0, t_pad), (0, 0)),
+                            constant_values=-1),
+            threshold=jnp.pad(trees.threshold, ((0, t_pad), (0, 0))),
+            is_cat=jnp.pad(trees.is_cat, ((0, t_pad), (0, 0))),
+            default_left=jnp.pad(trees.default_left, ((0, t_pad), (0, 0))),
+            leaf_value=jnp.pad(trees.leaf_value, ((0, t_pad), (0, 0))))
     rblk = min(records_per_block, max(8, n))
     n_pad = -n % rblk
     codes = jnp.pad(codes, ((0, n_pad), (0, 0)))
@@ -169,12 +197,13 @@ def predict_ensemble_pallas(trees: TreeArrays, codes, *, missing_bin: int,
             trees.feature, trees.threshold, trees.is_cat, trees.default_left)
     out = pl.pallas_call(
         functools.partial(_ensemble_kernel, depth=depth,
-                          missing_bin=missing_bin, n_classes=n_classes),
-        grid=(np_ // rblk, T),
+                          missing_bin=missing_bin, n_classes=n_classes,
+                          trees_per_block=tblk),
+        grid=(np_ // rblk, (T + t_pad) // tblk),
         in_specs=[
             pl.BlockSpec((rblk, n_cols), lambda ri, ti: (ri, 0)),
-            pl.BlockSpec((1, n_int, 4), lambda ri, ti: (ti, 0, 0)),
-            pl.BlockSpec((1, n_leaf, 1), lambda ri, ti: (ti, 0, 0)),
+            pl.BlockSpec((tblk, n_int, 4), lambda ri, ti: (ti, 0, 0)),
+            pl.BlockSpec((tblk, n_leaf, 1), lambda ri, ti: (ti, 0, 0)),
         ],
         out_specs=pl.BlockSpec((rblk, n_classes), lambda ri, ti: (ri, 0)),
         out_shape=jax.ShapeDtypeStruct((np_, n_classes), jnp.float32),

@@ -3,12 +3,19 @@
 Two entry modes:
   * ``--mode gbdt`` (default) — the paper's workload: load a trained GBDT
     bundle through the unified ``repro.api`` serialization and stream
-    record batches through ensemble inference (§III-D).  When no bundle
-    exists at ``--model-dir`` a small demo model is trained and saved
-    first, so the driver is self-contained.
+    record batches through the compile-once inference engine (§III-D).
+    Request sizes VARY across the loop (real traffic is ragged) to
+    exercise the engine's power-of-two shape buckets; requests larger
+    than ``--microbatch`` are chopped into micro-batches so tail latency
+    stays bounded.  The driver reports p50/p99 request latency alongside
+    sustained rows/sec, plus the predict-cache retrace count — a warm
+    server must show ZERO retraces after the first request per bucket.
+    When no bundle exists at ``--model-dir`` a small demo model is
+    trained and saved first, so the driver is self-contained.
   * ``--mode lm --arch <id>`` — the assigned-architecture LM stack at
     smoke scale: one prefill, then jit'd single-token decode steps against
-    the (ring-buffered where SWA) KV/SSM caches.
+    the (ring-buffered where SWA) KV/SSM caches.  ``--no-greedy`` samples
+    from the softmax at ``--temperature`` instead of argmax decoding.
 
     PYTHONPATH=src python -m repro.launch.serve --mode gbdt --batch 4096
     PYTHONPATH=src python -m repro.launch.serve --mode lm \
@@ -29,6 +36,7 @@ import jax.numpy as jnp
 def run_gbdt(args):
     from repro.api import (BoosterClassifier, ExecutionPlan, load,
                            make_tabular)
+    from repro.core.inference import predict_cache_stats
 
     plan = ExecutionPlan.auto()
     if not os.path.isdir(args.model_dir):
@@ -43,25 +51,47 @@ def run_gbdt(args):
     print(f"[serve] loaded {type(est).__name__} with {est.n_trees_} trees "
           f"({plan.describe()})")
 
-    # serving loop: raw NaN-carrying batches in, predictions out
+    # ragged request sizes (real traffic) — the engine's power-of-two
+    # buckets mean each DISTINCT bucket compiles once, then never again
     n_fields = est.model_.n_fields
     rng = np.random.default_rng(0)
-    warm = rng.normal(size=(args.batch, n_fields))
-    jax.block_until_ready(est.predict_margin(warm, plan=plan))  # compile
+    sizes = [max(1, args.batch), max(1, args.batch // 2),
+             max(1, (3 * args.batch) // 4), max(1, args.batch // 3)]
+    mb = args.microbatch or max(sizes)
 
-    total, t_total = 0, 0.0
-    for i in range(args.requests):
-        Xb = rng.normal(size=(args.batch, n_fields))
+    def request(n_rows):
+        """One request, served in <= --microbatch slices."""
+        Xb = rng.normal(size=(n_rows, n_fields))
         Xb[rng.random(Xb.shape) < 0.02] = np.nan     # missing values
         t0 = time.perf_counter()
-        out = np.asarray(est.predict(Xb, plan=plan))  # blocks: host labels
-        dt = time.perf_counter() - t0
-        total += args.batch
-        t_total += dt
-        print(f"[serve] request {i}: {args.batch} records in {dt*1e3:.1f} ms"
-              f" ({args.batch/dt:.0f} rec/s)")
-    print(f"[serve] sustained: {total/t_total:.0f} records/s "
-          f"over {args.requests} requests")
+        parts = [np.asarray(est.predict(Xb[lo:lo + mb], plan=plan))
+                 for lo in range(0, n_rows, mb)]      # blocks: host labels
+        np.concatenate(parts)
+        return time.perf_counter() - t0
+
+    # warm every micro-batch slice length once (micro-batching chops a
+    # request into mb-sized slices plus a ragged tail — each lands in its
+    # own pad bucket), then the measured loop must not trace anything new
+    for sl in sorted({min(mb, s - lo)
+                      for s in sizes for lo in range(0, s, mb)}):
+        request(sl)
+    warm_traces = predict_cache_stats()["traces"]
+
+    lat, total = [], 0
+    for i in range(args.requests):
+        n_rows = sizes[i % len(sizes)]
+        dt = request(n_rows)
+        lat.append(dt)
+        total += n_rows
+        print(f"[serve] request {i}: {n_rows} records in {dt*1e3:.1f} ms"
+              f" ({n_rows/dt:.0f} rec/s)")
+    p50, p99 = np.percentile(np.asarray(lat) * 1e3, [50, 99])
+    retraces = predict_cache_stats()["traces"] - warm_traces
+    print(f"[serve] sustained: {total/sum(lat):.0f} records/s over "
+          f"{args.requests} requests (micro-batch {mb}); "
+          f"p50 {p50:.1f} ms, p99 {p99:.1f} ms")
+    print(f"[serve] predict-cache retraces after warmup: {retraces}"
+          f" {'(OK)' if retraces == 0 else '(UNEXPECTED)'}")
 
 
 def run_lm(args):
@@ -94,18 +124,32 @@ def run_lm(args):
           f"({B*S/t_prefill:.0f} tok/s)")
 
     decode = jax.jit(functools.partial(lm.decode_step, cfg))
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    key = jax.random.PRNGKey(args.seed)
+
+    def pick(logits, key):
+        """Greedy argmax, or temperature sampling with --no-greedy."""
+        if args.greedy:
+            return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        scaled = logits / max(args.temperature, 1e-6)
+        return jax.random.categorical(key, scaled, axis=-1).astype(
+            jnp.int32)[:, None]
+
+    key, sub = jax.random.split(key)
+    tok = pick(logits, sub)
     out_tokens = [tok]
     t0 = time.perf_counter()
     for i in range(args.gen - 1):
         logits, cache = decode(params, cache, tok,
                                jnp.asarray(S + i, jnp.int32))
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        key, sub = jax.random.split(key)
+        tok = pick(logits, sub)
         out_tokens.append(tok)
     jax.block_until_ready(tok)
     t_dec = time.perf_counter() - t0
     gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
-    print(f"[serve] decoded {args.gen - 1} steps x {B} seqs: "
+    mode = ("greedy" if args.greedy
+            else f"sampled@T={args.temperature:g}")
+    print(f"[serve] decoded {args.gen - 1} steps x {B} seqs ({mode}): "
           f"{t_dec*1e3:.1f} ms ({B*(args.gen-1)/t_dec:.0f} tok/s)")
     print(f"[serve] first sequence: {gen[0][:16].tolist()} ...")
 
@@ -118,6 +162,9 @@ def main():
     # gbdt serving
     ap.add_argument("--model-dir", default="/tmp/repro_serve_bundle")
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="rows per inference micro-batch (0 = whole "
+                         "request in one dispatch)")
     # lm serving
     ap.add_argument("--arch", default="qwen3-14b", choices=ARCH_IDS)
     ap.add_argument("--batch", type=int, default=None,
@@ -125,7 +172,14 @@ def main():
                          "sequences (lm, default 4)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--greedy", action="store_true", default=True)
+    # BooleanOptionalAction: the old action="store_true", default=True
+    # combination made --greedy a no-op (it could never be False)
+    ap.add_argument("--greedy", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="argmax decoding; --no-greedy samples at "
+                         "--temperature")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.batch is None:
         args.batch = 4096 if args.mode == "gbdt" else 4

@@ -1,0 +1,381 @@
+"""The tree-batched inference engine (PR 5).
+
+* batched level walk vs the legacy per-tree scan: BIT parity (leaf
+  decisions are discrete; integer-valued leaves make every accumulation
+  order exact) across depths x K x missing values,
+* tree-blocked Pallas kernel parity across ``trees_per_block`` tiles,
+  including tree counts that do not divide the tile,
+* predict-cache retrace accounting (power-of-two row/tree buckets),
+* device-resident binned transform vs the host path,
+* sharded multi-class inference vs single-device.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.api import ExecutionPlan
+from repro.core.binning import Binner
+from repro.core.gbdt import GBDTModel
+from repro.core.inference import (GBDTPipeline, bucket_pow2, bucket_trees,
+                                  pad_trees, predict_cache_clear,
+                                  predict_cache_stats,
+                                  predict_margin_cached, sharded_predict)
+from repro.kernels import ops, ref
+from repro.kernels.ref import TreeArrays
+
+N_BINS = 16
+MISSING = N_BINS - 1
+
+
+def rand_forest(rng, T, depth, n_cols, int_leaves=True):
+    """Stacked (T, ...) trees; integer leaf values keep float sums exact
+    in ANY association, so scan-vs-batched parity can be asserted
+    bit-for-bit (the walks themselves are discrete and identical)."""
+    n_int, n_leaf = 2 ** depth - 1, 2 ** depth
+
+    def one():
+        feat = rng.integers(0, n_cols, n_int).astype(np.int32)
+        feat[rng.uniform(size=n_int) < 0.2] = -1            # pass-through
+        leaves = (rng.integers(-8, 8, n_leaf).astype(np.float32)
+                  if int_leaves else
+                  rng.normal(size=n_leaf).astype(np.float32))
+        return TreeArrays(
+            feature=jnp.asarray(feat),
+            threshold=jnp.asarray(rng.integers(0, N_BINS - 1, n_int),
+                                  jnp.int32),
+            is_cat=jnp.asarray(rng.integers(0, 2, n_int), jnp.int32),
+            default_left=jnp.asarray(rng.integers(0, 2, n_int), jnp.int32),
+            leaf_value=jnp.asarray(leaves))
+
+    trees = [one() for _ in range(T)]
+    return TreeArrays(*[jnp.stack([getattr(t, f) for t in trees])
+                        for f in TreeArrays._fields])
+
+
+def rand_codes(rng, n, n_cols, missing_rate=0.1):
+    codes = rng.integers(0, N_BINS, (n, n_cols)).astype(np.uint8)
+    codes[rng.uniform(size=codes.shape) < missing_rate] = MISSING
+    return jnp.asarray(codes)
+
+
+# --------------------------------------------------------------------------
+# batched level walk vs legacy per-tree scan
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("depth", [1, 3, 6])
+@pytest.mark.parametrize("K", [1, 3])
+def test_batched_walk_bit_equals_scan(depth, K):
+    rng = np.random.default_rng(depth * 10 + K)
+    T = 3 * K * (2 if depth < 6 else 1)
+    trees = rand_forest(rng, T, depth, n_cols=9)
+    codes = rand_codes(rng, 257, 9)
+    want = ref.predict_ensemble_ref(trees, codes, MISSING, n_classes=K)
+    got = ref.predict_ensemble_batched(trees, codes, MISSING, n_classes=K)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_batched_walk_float_leaves_close_to_scan():
+    """Real (non-integer) leaves: only the fold's accumulation order can
+    differ, so the paths agree to float tolerance."""
+    rng = np.random.default_rng(7)
+    trees = rand_forest(rng, 40, 5, n_cols=12, int_leaves=False)
+    codes = rand_codes(rng, 400, 12)
+    want = ref.predict_ensemble_ref(trees, codes, MISSING)
+    got = ref.predict_ensemble_batched(trees, codes, MISSING)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_reference_dispatches_batched_walk():
+    rng = np.random.default_rng(3)
+    trees = rand_forest(rng, 6, 4, n_cols=5)
+    codes = rand_codes(rng, 100, 5)
+    via_ops = ops.predict_ensemble(
+        trees, codes, missing_bin=MISSING, depth=4,
+        plan=ExecutionPlan.auto(traversal_strategy="reference"))
+    direct = ref.predict_ensemble_batched(trees, codes, MISSING)
+    np.testing.assert_array_equal(np.asarray(via_ops), np.asarray(direct))
+    via_scan = ops.predict_ensemble(
+        trees, codes, missing_bin=MISSING, depth=4,
+        plan=ExecutionPlan.auto(traversal_strategy="scan"))
+    np.testing.assert_array_equal(np.asarray(via_scan),
+                                  np.asarray(ref.predict_ensemble_ref(
+                                      trees, codes, MISSING)))
+
+
+def test_batched_walk_survives_wide_field_ids():
+    """Field ids >= 2**15 overflow the packed int32 table — the dispatch
+    must fall back to the unpacked walk, not silently corrupt."""
+    F = (1 << 15) + 100
+    tree = TreeArrays(
+        feature=jnp.asarray([[F - 100]], jnp.int32),      # id 32868
+        threshold=jnp.asarray([[1]], jnp.int32),
+        is_cat=jnp.asarray([[0]], jnp.int32),
+        default_left=jnp.asarray([[0]], jnp.int32),
+        leaf_value=jnp.asarray([[1.0, 2.0]], jnp.float32))
+    codes = np.zeros((4, F), np.uint8)
+    codes[2:, F - 100] = 3                                 # > threshold
+    codes = jnp.asarray(codes)
+    for strat in ("reference", "scan"):
+        out = ops.predict_ensemble(
+            tree, codes, missing_bin=MISSING, depth=1,
+            plan=ExecutionPlan.auto(traversal_strategy=strat))
+        np.testing.assert_array_equal(np.asarray(out),
+                                      [1.0, 1.0, 2.0, 2.0])
+
+
+# --------------------------------------------------------------------------
+# tree-blocked Pallas kernel
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("K", [1, 3])
+@pytest.mark.parametrize("T,tblk", [(8, 8), (12, 4), (10, 4), (5, 8),
+                                    (7, 1)])
+def test_pallas_tree_blocking_matches_batched(K, T, tblk):
+    """Every tile size — including T % tblk != 0 and tblk > T — agrees
+    with the batched reference walk."""
+    rng = np.random.default_rng(T * 10 + tblk + K)
+    depth = 4
+    trees = rand_forest(rng, T * K, depth, n_cols=9)
+    codes = rand_codes(rng, 300, 9)
+    plan = ExecutionPlan.auto(traversal_strategy="pallas",
+                              trees_per_block=tblk)
+    got = ops.predict_ensemble(trees, codes, missing_bin=MISSING,
+                               depth=depth, plan=plan, n_classes=K)
+    want = ref.predict_ensemble_batched(trees, codes, MISSING, n_classes=K)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# the compile-once predict cache
+# --------------------------------------------------------------------------
+def _model(rng, T=6, depth=4, F=5, K=1):
+    trees = rand_forest(rng, T, depth, F)
+    base = (np.zeros((K,), np.float32) if K > 1 else 0.5)
+    return GBDTModel(trees=trees, base_margin=base,
+                     objective="multi:softmax" if K > 1
+                     else "reg:squarederror",
+                     missing_bin=MISSING, n_fields=F, max_depth=depth,
+                     n_classes=K)
+
+
+def test_bucket_pow2():
+    assert bucket_pow2(0) == 1
+    assert bucket_pow2(1) == 1
+    assert bucket_pow2(3) == 4
+    assert bucket_pow2(128) == 128
+    assert bucket_pow2(129) == 256
+    assert bucket_pow2(5, floor=128) == 128
+
+
+def test_bucket_trees_caps_padding_overhead():
+    # small ensembles: exact (granule 1), zero padded-walk tax
+    assert bucket_trees(5) == 5
+    assert bucket_trees(8) == 8
+    # larger: next multiple of pow2(T)/16 — at most 12.5% padding
+    assert bucket_trees(100) == 104          # granule 8
+    assert bucket_trees(104) == 104
+    assert bucket_trees(105) == 112
+    assert bucket_trees(300) == 320          # granule 32, 6.7% pad
+    assert bucket_trees(512) == 512
+    for T in range(1, 600):
+        b = bucket_trees(T)
+        assert b >= T and (b - T) <= max(1, T // 8)
+
+
+def test_predict_cache_zero_retrace_within_bucket():
+    rng = np.random.default_rng(11)
+    model = _model(rng)
+    predict_cache_clear()
+    plan = ExecutionPlan.auto()
+    out = predict_margin_cached(model, rand_codes(rng, 100, 5), plan=plan)
+    assert out.shape == (100,)
+    t0 = predict_cache_stats()["traces"]
+    assert t0 >= 1
+    # same 128-row bucket: NO new compilation
+    predict_margin_cached(model, rand_codes(rng, 128, 5), plan=plan)
+    predict_margin_cached(model, rand_codes(rng, 65, 5), plan=plan)
+    assert predict_cache_stats()["traces"] == t0
+    # new bucket (256): exactly one more trace, then warm again
+    predict_margin_cached(model, rand_codes(rng, 200, 5), plan=plan)
+    assert predict_cache_stats()["traces"] == t0 + 1
+    predict_margin_cached(model, rand_codes(rng, 256, 5), plan=plan)
+    assert predict_cache_stats()["traces"] == t0 + 1
+
+
+def test_predict_cache_tree_bucket_absorbs_growth():
+    """Checkpoint-resume: 99 -> 100 -> 104 trees all land in the
+    104-tree bucket and reuse one executable."""
+    rng = np.random.default_rng(12)
+    codes = rand_codes(rng, 64, 5)
+    plan = ExecutionPlan.auto()
+    predict_cache_clear()
+    predict_margin_cached(_model(rng, T=99), codes, plan=plan)
+    t0 = predict_cache_stats()["traces"]
+    predict_margin_cached(_model(rng, T=100), codes, plan=plan)
+    predict_margin_cached(_model(rng, T=104), codes, plan=plan)
+    assert predict_cache_stats()["traces"] == t0
+    predict_margin_cached(_model(rng, T=105), codes, plan=plan)  # 112
+    assert predict_cache_stats()["traces"] == t0 + 1
+
+
+def test_predict_cache_key_ignores_training_only_plan_fields():
+    """Two plans differing only in training-side knobs (histogram
+    strategy, offload, chunking) share one cached step AND one compiled
+    executable."""
+    rng = np.random.default_rng(14)
+    model = _model(rng)
+    codes = rand_codes(rng, 64, 5)
+    predict_cache_clear()
+    predict_margin_cached(model, codes, plan=ExecutionPlan.auto())
+    t0, e0 = (predict_cache_stats()["traces"],
+              predict_cache_stats()["entries"])
+    predict_margin_cached(
+        model, codes,
+        plan=ExecutionPlan.auto(hist_strategy="sort",
+                                host_offload_split=True,
+                                chunk_bytes=1 << 20))
+    assert predict_cache_stats()["traces"] == t0
+    assert predict_cache_stats()["entries"] == e0
+
+
+@pytest.mark.parametrize("K", [1, 3])
+def test_predict_cached_matches_direct(K):
+    """Row/tree pad buckets NEVER change results (the docs contract)."""
+    rng = np.random.default_rng(13 + K)
+    model = _model(rng, T=5 * K, K=K)
+    codes = rand_codes(rng, 203, 5)
+    cached = predict_margin_cached(model, codes,
+                                   plan=ExecutionPlan.auto())
+    direct = model.predict_margin(codes, plan=ExecutionPlan.auto())
+    np.testing.assert_allclose(np.asarray(cached), np.asarray(direct),
+                               rtol=1e-6, atol=1e-6)
+    via_model = model.predict_margin(codes, plan=ExecutionPlan.auto(),
+                                     cached=True)
+    np.testing.assert_array_equal(np.asarray(cached),
+                                  np.asarray(via_model))
+
+
+# --------------------------------------------------------------------------
+# device-resident binned transform
+# --------------------------------------------------------------------------
+def test_device_binning_matches_host():
+    rng = np.random.default_rng(21)
+    n, F = 500, 8
+    X = rng.normal(size=(n, F)).astype(np.float32).astype(np.float64)
+    X[:, 6] = rng.integers(0, 5, n)                  # categorical
+    X[:, 7] = rng.integers(0, 3, n)
+    X[rng.uniform(size=X.shape) < 0.05] = np.nan
+    binner = Binner(max_bins=32, categorical_fields=[6, 7]).fit(X)
+    host = binner.transform_codes(X)
+    dev = np.asarray(binner.transform_codes_device(X))
+    np.testing.assert_array_equal(dev, host)
+
+
+def test_pipeline_predict_uses_engine_and_matches_direct():
+    rng = np.random.default_rng(22)
+    n, F = 300, 5
+    X = rng.normal(size=(n, F)).astype(np.float32).astype(np.float64)
+    binner = Binner(max_bins=N_BINS).fit(X)
+    model = _model(rng, F=F)
+    pipe = GBDTPipeline(binner=binner, model=model)
+    direct = np.asarray(model.predict(binner.transform(X)))
+    predict_cache_clear()
+    got = np.asarray(pipe.predict(X))
+    np.testing.assert_allclose(got, direct, rtol=1e-5, atol=1e-6)
+    t0 = predict_cache_stats()["traces"]
+    np.testing.assert_allclose(np.asarray(pipe.predict(X[:57])),
+                               direct[:57], rtol=1e-5, atol=1e-6)
+    # 57 rows pad into a bucket <= 300's: engine may reuse or add ONE
+    assert predict_cache_stats()["traces"] <= t0 + 1
+
+
+# --------------------------------------------------------------------------
+# sharded inference (multi-class + plan support)
+# --------------------------------------------------------------------------
+def test_sharded_predict_multiclass_single_device_mesh():
+    """The psum path on a 1-device mesh: exercises specs/combine without
+    needing host-platform device emulation."""
+    from repro.launch.mesh import make_mesh
+    rng = np.random.default_rng(31)
+    K = 3
+    model = _model(rng, T=2 * K, K=K)
+    codes = rand_codes(rng, 128, 5)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    padded = pad_trees(model, mesh.shape["model"] * K)
+    with mesh:
+        out = sharded_predict(mesh, padded, codes,
+                              plan=ExecutionPlan.auto(
+                                  traversal_strategy="reference"))
+    want = model.predict_margin(codes)
+    assert out.shape == (128, K)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_predict_rejects_class_splitting_shards():
+    """A per-shard tree count not divisible by K would silently scramble
+    the round-major class routing — must raise instead."""
+    from repro.launch.mesh import make_mesh
+    rng = np.random.default_rng(32)
+    model = _model(rng, T=3, K=3)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    bad = dataclasses_replace_trees(model, 4)
+    with pytest.raises(ValueError, match="multiple of n_classes"):
+        sharded_predict(mesh, bad, rand_codes(rng, 16, 5))
+
+
+def dataclasses_replace_trees(model, T_new):
+    """Pad to a tree count that does NOT respect K-alignment."""
+    import dataclasses
+    t = model.trees
+    pad = T_new - t.feature.shape[0]
+    padded = TreeArrays(
+        feature=jnp.concatenate(
+            [t.feature, jnp.full((pad,) + t.feature.shape[1:], -1,
+                                 t.feature.dtype)]),
+        threshold=jnp.pad(t.threshold, ((0, pad), (0, 0))),
+        is_cat=jnp.pad(t.is_cat, ((0, pad), (0, 0))),
+        default_left=jnp.pad(t.default_left, ((0, pad), (0, 0))),
+        leaf_value=jnp.pad(t.leaf_value, ((0, pad), (0, 0))))
+    return dataclasses.replace(model, trees=padded)
+
+
+@pytest.mark.slow
+def test_sharded_predict_multiclass_matches_single_device():
+    """Paper §III-D with a class axis: trees round-robin across 2 model
+    shards x 4 data shards, per-class psum."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    code = r"""
+import numpy as np, jax.numpy as jnp
+from repro.core import GBDTConfig, bin_dataset, train
+from repro.core.inference import pad_trees, sharded_predict
+from repro.data import make_tabular
+from repro.launch.mesh import make_mesh
+
+X, y, _ = make_tabular(1024, 5, 0, task="multiclass", seed=2)
+K = int(y.max()) + 1
+data = bin_dataset(X, max_bins=16)
+model = train(GBDTConfig(n_trees=3, max_depth=3, objective="multi:softmax",
+                         n_classes=K, hist_strategy="scatter"),
+              data, y).model
+mesh = make_mesh((4, 2), ("data", "model"))
+padded = pad_trees(model, 2 * K)
+with mesh:
+    out = sharded_predict(mesh, padded, data.codes)
+ref = model.predict_margin(data.codes)
+assert out.shape == (1024, K), out.shape
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                           rtol=1e-5, atol=1e-5)
+print("SHARDED_MULTICLASS_OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "SHARDED_MULTICLASS_OK" in out.stdout

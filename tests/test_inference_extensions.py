@@ -49,14 +49,17 @@ def test_pipeline_raw_predict_and_roundtrip(trained, tmp_path):
     pipe = GBDTPipeline(binner=binner, model=model)
     direct = np.asarray(model.predict(data))
     via_raw = np.asarray(pipe.predict(X))
-    np.testing.assert_allclose(via_raw, direct, rtol=1e-6)
+    # the pipeline serves through the fused compile-once engine: the one
+    # XLA program may reassociate the tree fold, so margins near zero
+    # need an absolute floor on top of the relative tolerance
+    np.testing.assert_allclose(via_raw, direct, rtol=1e-5, atol=1e-6)
 
     from repro.distributed import checkpoint as ckpt
     ckpt.save(str(tmp_path), pipe.to_state(), step=1)
     state, _, _ = ckpt.restore(str(tmp_path), like=pipe.to_state())
     pipe2 = GBDTPipeline.from_state(state)
     np.testing.assert_allclose(np.asarray(pipe2.predict(X)), direct,
-                               rtol=1e-6)
+                               rtol=1e-5, atol=1e-6)
 
 
 @pytest.mark.slow

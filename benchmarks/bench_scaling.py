@@ -13,6 +13,7 @@ import numpy as np
 
 from benchmarks.common import BOOSTER, IDEAL_CPU, IDEAL_GPU, csv_row, time_call
 from benchmarks.bench_training import modeled_training_time
+from repro.api import ExecutionPlan
 from repro.data import paper_dataset
 from repro.kernels import ops
 
@@ -51,7 +52,8 @@ def run(base_scale: float = 0.5, max_bins: int = 128):
         h = jnp.ones((n,), jnp.float32)
         nid = jnp.asarray(rng.integers(0, 8, n), jnp.int32)
         t = time_call(lambda: ops.build_histogram(
-            codes, g, h, nid, n_nodes=8, n_bins=NB, strategy="scatter"))
+            codes, g, h, nid, n_nodes=8, n_bins=NB,
+            plan=ExecutionPlan.auto(hist_strategy="scatter")))
         rows.append(csv_row(f"scaling_measured_scatter_n{n}", t * 1e6,
                             f"ns_per_update={t/(n*F)*1e9:.2f}"))
     return rows

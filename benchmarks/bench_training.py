@@ -13,6 +13,11 @@ Two complementary reproductions:
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -80,6 +85,64 @@ def run_e2e(scale: float = 1.0, depth: int = 6, n_trees: int = 5):
     return rows
 
 
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# timed in a subprocess: the 8-way mesh needs XLA_FLAGS=
+# --xla_force_host_platform_device_count set before jax initializes,
+# which the parent bench process is too late for
+_DIST_CHILD = r"""
+import json, time
+import jax
+from repro.core import GBDTConfig, bin_dataset
+from repro.data import make_tabular
+from repro.distributed.trainer import data_parallel_mesh, train_distributed
+
+n, n_trees, depth = {n}, {n_trees}, {depth}
+X, y, cats = make_tabular(n, 20, 0, task="regression", seed=0)
+data = bin_dataset(X, max_bins=64)
+cfg = GBDTConfig(n_trees=n_trees, max_depth=depth, learning_rate=0.3)
+out = {{}}
+for tag, devs in (("1shard", jax.devices()[:1]), ("8shard", jax.devices())):
+    mesh = data_parallel_mesh(devs)
+    train_distributed(cfg, data, y, mesh=mesh)   # warm: step cached by mesh
+    t0 = time.perf_counter()
+    train_distributed(cfg, data, y, mesh=mesh)
+    out[tag] = time.perf_counter() - t0
+print(json.dumps(out))
+"""
+
+
+def run_distributed(scale: float = 1.0, depth: int = 5, n_trees: int = 4):
+    """End-to-end ``train_distributed`` rows/sec on a 1-shard vs an
+    8-virtual-device ``("data",)`` mesh.  On a CPU host the 8 "devices"
+    share the same cores, so the scaling row measures the psum +
+    shard_map overhead rather than real speedup — the two rows/sec lanes
+    are what the perf gate tracks."""
+    n = max(4000, int(40000 * scale))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(_ROOT, "src"),
+                    env.get("PYTHONPATH", "")) if p)
+    code = _DIST_CHILD.format(n=n, n_trees=n_trees, depth=depth)
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=_ROOT,
+                         capture_output=True, text=True, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError("distributed bench subprocess failed:\n"
+                           + out.stderr[-2000:])
+    timed = json.loads(out.stdout.strip().splitlines()[-1])
+    rows, rps = [], {}
+    for tag in ("1shard", "8shard"):
+        t = timed[tag]
+        rps[tag] = n * n_trees / t
+        rows.append(csv_row(f"train_dist_{tag}", t * 1e6,
+                            f"rows_per_sec={rps[tag]:.0f};n={n};"
+                            f"n_trees={n_trees}"))
+    rows.append(csv_row("train_dist_scaling", 0.0,
+                        f"x={rps['8shard'] / rps['1shard']:.2f}"))
+    return rows
+
+
 def run(scale: float = 1.0, max_bins: int = 128):
     rows = []
     geo = {m["name"]: [] for m in (IDEAL_GPU, BOOSTER)}
@@ -129,6 +192,8 @@ def run(scale: float = 1.0, max_bins: int = 128):
                             f"x={float(np.exp(np.mean(np.log(v)))):.2f}"))
     # (c) end-to-end depth-6 trainer: direct vs subtraction + fused rounds
     rows.extend(run_e2e(scale=scale))
+    # (d) the distributed engine: 1-shard vs 8-virtual-device data mesh
+    rows.extend(run_distributed(scale=scale))
     return rows
 
 

@@ -35,6 +35,11 @@ _LAZY = {
     "NpzShardSource": ("repro.data.pipeline", "NpzShardSource"),
     "SyntheticSource": ("repro.data.synthetic", "SyntheticSource"),
     "write_npz_shards": ("repro.data.pipeline", "write_npz_shards"),
+    # distributed training engine (fit(mesh=...) / train_distributed)
+    "DistributedConfig": ("repro.distributed.trainer", "DistributedConfig"),
+    "train_distributed": ("repro.distributed.trainer", "train_distributed"),
+    "data_parallel_mesh": ("repro.distributed.trainer",
+                           "data_parallel_mesh"),
 }
 
 __all__ = ["ExecutionPlan", "resolve_plan"] + sorted(_LAZY)

@@ -178,6 +178,7 @@ class BoosterEstimator:
     def fit(self, X=None, y=None, *, data: Any = None,
             eval_set: Optional[Tuple] = None,
             xgb_model: Any = None, plan: Optional[ExecutionPlan] = None,
+            mesh: Optional[jax.sharding.Mesh] = None,
             checkpoint_dir: Optional[str] = None,
             checkpoint_every: int = 25, callback=None,
             verbose: bool = False) -> "BoosterEstimator":
@@ -198,6 +199,12 @@ class BoosterEstimator:
                          ``GBDTModel``, or a bundle path — ``n_trees``
                          *additional* trees are grown (XGBoost semantics).
         plan:            ExecutionPlan override for this fit.
+        mesh:            data-parallel training mesh — records shard over
+                         the mesh's data axes and the fit runs through
+                         ``repro.distributed.train_distributed`` (per-shard
+                         histograms, one psum per level).  Shorthand for
+                         ``plan.replace(mesh=mesh)``; incompatible with
+                         the streaming (``data=``/``chunk_bytes``) path.
         checkpoint_dir:  when set, resumes from the newest valid step
                          checkpoint and writes one every
                          ``checkpoint_every`` trees (atomic, sha-verified).
@@ -205,6 +212,14 @@ class BoosterEstimator:
                          any existing checkpoints (a warning is emitted).
         """
         plan = self._resolve_plan(plan)
+        if mesh is not None:
+            plan = plan.replace(mesh=mesh)
+        if plan.mesh is not None and (data is not None
+                                      or plan.chunk_bytes is not None):
+            raise ValueError(
+                "distributed training (mesh=) shards in-memory records and "
+                "cannot combine with the out-of-core streaming path "
+                "(data=/plan.chunk_bytes) — drop one of the two")
         if data is None and plan.chunk_bytes is not None and X is not None:
             if y is None:
                 raise TypeError("fit needs (X, y) arrays or data=DataSource")

@@ -18,8 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 
@@ -80,7 +79,14 @@ class ExecutionPlan:
                          materializing the matrix (None = in-memory)
     mesh:                optional ``jax.sharding.Mesh``; when set, ensemble
                          inference shards trees over the ``"model"`` axis and
-                         records over the data axes (paper §III-D)
+                         records over the data axes (paper §III-D), and
+                         ``train``/``fit`` route through the data-parallel
+                         distributed trainer (paper §III-B — per-shard
+                         histograms + one psum per level)
+    data_axes:           mesh axes carrying *records* during distributed
+                         training; ``None`` resolves to every mesh axis
+                         except ``"model"`` (``launch.mesh.data_axes``).
+                         Only meaningful together with ``mesh``
     """
 
     hist_strategy: str = "auto"
@@ -94,8 +100,22 @@ class ExecutionPlan:
     hist_subtraction: Optional[bool] = None
     chunk_bytes: Optional[int] = None
     mesh: Optional[jax.sharding.Mesh] = None
+    data_axes: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self):
+        if self.data_axes is not None:
+            # normalize lists so plans stay hashable jit keys
+            object.__setattr__(self, "data_axes",
+                               tuple(str(a) for a in self.data_axes))
+            if self.mesh is None:
+                raise ValueError("data_axes only applies together with a "
+                                 "mesh (the distributed-training record "
+                                 "axes)")
+            missing = set(self.data_axes) - set(self.mesh.axis_names)
+            if missing:
+                raise ValueError(
+                    f"data_axes {sorted(missing)} not present on the mesh "
+                    f"(axes: {self.mesh.axis_names})")
         if self.chunk_bytes is not None and self.chunk_bytes <= 0:
             raise ValueError("chunk_bytes must be positive (or None for "
                              "in-memory training)")
@@ -180,26 +200,19 @@ class ExecutionPlan:
                 f"interpret={self.interpret}, {m})")
 
 
-_DEPRECATION_MSG = (
-    "loose strategy/interpret kwargs to {caller} are deprecated; pass "
-    "plan=ExecutionPlan(...) (or ExecutionPlan.auto(...)) instead")
-
-
-def resolve_plan(plan: Optional[ExecutionPlan] = None, *,
-                 _caller: Optional[str] = None, **loose) -> ExecutionPlan:
-    """Resolve a plan plus legacy loose kwargs into a concrete plan.
+def resolve_plan(plan: Optional[ExecutionPlan] = None,
+                 **loose) -> ExecutionPlan:
+    """Resolve a plan plus config-level loose kwargs into a concrete plan.
 
     ``loose`` entries that are ``None`` or ``"auto"`` are ignored; any other
-    value overrides the plan field of the same name and (when ``_caller``
-    is given) emits a DeprecationWarning — the thin shim that keeps old
-    ``strategy=`` call sites working.
+    value overrides the plan field of the same name.  This is the lifting
+    layer for config-level strategy strings (``GBDTConfig``'s legacy
+    fields, ``distributed_histogram(strategy=...)``); the ``kernels.ops``
+    entry points take ``plan=`` only.
     """
     loose = {k: v for k, v in loose.items()
              if v is not None and v != "auto"}
     base = plan if plan is not None else ExecutionPlan()
     if loose:
-        if _caller is not None:
-            warnings.warn(_DEPRECATION_MSG.format(caller=_caller),
-                          DeprecationWarning, stacklevel=3)
         base = dataclasses.replace(base, **loose)
     return base.resolved()

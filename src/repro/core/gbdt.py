@@ -401,6 +401,14 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
     if plan is None:
         plan = ExecutionPlan.from_config(config)
     plan = plan.resolved()
+    if plan.mesh is not None:
+        # a training mesh routes the whole fit through the data-parallel
+        # engine (records sharded over plan.data_axes, one histogram psum
+        # per level) — see repro.distributed.trainer
+        from repro.distributed.trainer import train_distributed
+        return train_distributed(config, data, y, eval_set=eval_set,
+                                 init_model=init_model, callback=callback,
+                                 verbose=verbose, plan=plan)
     loss = losses_mod.get_loss(config.objective, config.n_classes)
     K = loss.n_outputs                 # None for scalar objectives
     y = jnp.asarray(y, jnp.float32)

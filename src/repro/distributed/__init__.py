@@ -1,1 +1,5 @@
-from repro.distributed import checkpoint, elastic, fault, sharding
+from repro.distributed import (checkpoint, elastic, fault, sharding,
+                               trainer)
+from repro.distributed.trainer import (DistributedConfig,
+                                       data_parallel_mesh,
+                                       train_distributed)

@@ -1,0 +1,567 @@
+"""Data-parallel distributed GBDT training with elastic fault tolerance.
+
+The paper's §III-B decomposition, wired into an actual fit: records are
+partitioned across the mesh's data axes, each shard runs the class-batched
+histogram kernel over its local records, and the per-shard histograms are
+reduced with ONE psum at the end of step ① per level — O(nodes·F·bins)
+bytes per level crossing the interconnect instead of the record stream.
+Everything downstream of the reduction (step ② split decisions, the tree
+tables) is replicated math on the psum'd histogram, so every shard grows
+the *same* tree; step ③ partitions each shard's records locally.
+
+A whole boosting round stays on-device per host (the ``fused_rounds``
+semantics): gradients, the per-round stochastic filters, the sharded
+grower, leaf shrinkage, the margin refresh and the loss reduction compile
+into one jitted step dispatched once per round.
+
+Determinism contract (see docs/api.md "Distributed training"):
+
+  * the per-round RNG stream is ``fold_in(PRNGKey(seed), round)`` and all
+    stochastic filters (GOSS, subsample, colsample) are computed on the
+    GLOBAL statistics before sharding — the draws are identical for any
+    shard count, so tree *structure* differences across meshes can only
+    come from float reassociation in the histogram psum;
+  * D=1 is bit-equal to the single-device trainer (padding rows carry
+    zero statistics, contributing exactly +0.0);
+  * for D>1 every histogram cell is a psum of per-shard partial sums —
+    exact whenever the per-cell sums are exactly representable (integer
+    counts always; dyadic gradient values too), otherwise within the
+    documented float tolerance.
+
+Elasticity and fault tolerance (``DistributedConfig``): a worker failure
+mid-round surfaces as an exception from the round dispatch; recovery
+re-meshes onto the surviving devices, restores the newest
+``checkpoint.save_named`` step and deterministically replays the in-flight
+tree — the fit never restarts.  A grow event (devices arriving) re-meshes
+back up between rounds; training state is mesh-agnostic so a re-mesh is a
+re-placement, not a restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.api.plan import ExecutionPlan
+from repro.compat import shard_map
+from repro.core import gbdt as gbdt_mod
+from repro.core import losses as losses_mod
+from repro.core import splits as splits_mod
+from repro.core import tree as tree_mod
+from repro.core.binning import BinnedDataset
+from repro.core.gbdt import (GBDTConfig, GBDTModel, TrainResult, _as_model,
+                             _round_stats, _stack_trees, _unstack_forests,
+                             model_from_meta)
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.sharding import padded_record_count
+from repro.kernels import ops
+from repro.kernels.ref import TreeArrays
+from repro.launch.mesh import data_axes, make_mesh, n_data_shards
+
+
+@dataclasses.dataclass
+class DistributedConfig:
+    """Elasticity / fault-tolerance policy for :func:`train_distributed`.
+
+    checkpoint_dir:     where ``checkpoint.save_named`` steps land; None
+                        disables checkpointing (a failure then replays the
+                        whole fit from round 0 on the surviving devices)
+    checkpoint_every:   save cadence in completed rounds
+    keep_last:          checkpoint GC horizon
+    max_restarts:       failures tolerated before the exception propagates
+    fault_injector:     any object with ``check(round)`` raising to
+                        simulate a worker loss (``fault.FaultInjector``);
+                        checked after the round dispatch, before commit —
+                        the in-flight tree is the one replayed
+    available_devices:  optional ``round -> device list`` callable polled
+                        between rounds; a changed list re-meshes the fit
+                        up or down (elastic grow/shrink without failure)
+    survivors:          maps the failed mesh's device list to the
+                        surviving one; default drops the last device
+    """
+
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 25
+    keep_last: int = 3
+    max_restarts: int = 2
+    fault_injector: Optional[object] = None
+    available_devices: Optional[Callable[[int], Sequence]] = None
+    survivors: Optional[Callable[[Sequence], Sequence]] = None
+
+
+def data_parallel_mesh(devices: Optional[Sequence] = None) -> Mesh:
+    """A ``("data",)`` mesh over ``devices`` (default: every device)."""
+    devs = list(devices) if devices is not None else list(jax.devices())
+    return make_mesh((len(devs),), ("data",), devices=devs)
+
+
+def _check_data_parallel(mesh: Mesh) -> Tuple[str, ...]:
+    """The trainer shards records only; a real model axis is not supported."""
+    da = data_axes(mesh)
+    if "model" in mesh.axis_names and mesh.shape["model"] != 1:
+        raise ValueError(
+            "train_distributed is data-parallel: the mesh's 'model' axis "
+            f"must have size 1, got {mesh.shape['model']} (use "
+            "distributed_fit_tree for field sharding)")
+    if not da:
+        raise ValueError("mesh has no data axes to shard records over")
+    return da
+
+
+def _trainer_kernel_plan(plan: ExecutionPlan) -> ExecutionPlan:
+    """The plan the kernels inside the sharded step see: mesh/data-axis
+    routing stripped (the step IS the mesh program), chunking dropped from
+    the jit key, partition pinned to the reference kernel (the Pallas
+    partition path is untested inside shard_map), and the step-② host
+    offload disabled (a host round-trip cannot live inside one jit)."""
+    return plan.replace(mesh=None, data_axes=None, chunk_bytes=None,
+                        partition_strategy="reference",
+                        host_offload_split=False).resolved()
+
+
+# --------------------------------------------------------------------------
+# the sharded grower: per-shard histograms + one psum per level
+# --------------------------------------------------------------------------
+def _grow_forest_sharded(mesh: Mesh, da: Tuple[str, ...], *, depth: int,
+                         n_bins: int, lambda_: float, gamma: float,
+                         min_child_weight: float, plan: ExecutionPlan):
+    """Build the shard_map'd level-wise grower for ``mesh``.
+
+    Returns ``fn(codes, codes_cm, g2, h2, is_cat_field, field_mask) ->
+    (TreeArrays with (K, ...) axes, node_ids (K, n_pad))`` where codes is
+    (n_pad, F) sharded over the data axes, codes_cm its (F, n_pad)
+    column-major copy, and g2/h2 the (K, n_pad) per-class statistics
+    (padding rows MUST carry zero stats).  The returned node ids are the
+    records' final bottom-leaf slots — step ⑤ is a leaf-value lookup, no
+    traversal pass (the streaming trainer's trick, reused verbatim).
+    """
+    missing_bin = n_bins - 1
+    n_int, n_leaf = 2 ** depth - 1, 2 ** depth
+
+    def local(codes_l, codes_cm_l, g_l, h_l, is_cat_field, field_mask):
+        K, n_loc = g_l.shape
+        state = (jnp.full((K, n_int), -1, jnp.int32),      # feature
+                 jnp.zeros((K, n_int), jnp.int32),         # threshold
+                 jnp.zeros((K, n_int), jnp.int32),         # is_cat
+                 jnp.zeros((K, n_int), jnp.int32),         # default_left
+                 jnp.zeros((K, n_leaf), jnp.float32),      # value_bottom
+                 jnp.zeros((K, n_leaf), bool))             # value_set
+        node_ids = jnp.zeros((K, n_loc), jnp.int32)
+        part = jax.vmap(functools.partial(ops.partition_level,
+                                          missing_bin=missing_bin,
+                                          plan=plan))
+        prev_hist = None
+        for level in range(depth):
+            nn = 2 ** level
+            # step ① — local class-batched accumulation, then the paper's
+            # end-of-step-① reduction across record partitions.  The local
+            # pass reuses ``accumulate_histogram`` (the chunked trainers'
+            # reduction unit), so every step-① entry point in the repo
+            # dispatches through one jit.
+            zero = jnp.zeros((K, nn, is_cat_field.shape[0], n_bins, 2),
+                             jnp.float32)
+            if plan.hist_subtraction and level > 0:
+                # smaller-child masking per shard (paper §II-A): selection
+                # uses psum'd *record counts* — integer sums are exact, so
+                # every shard (and every shard count) picks the same child
+                ones = jnp.ones((n_loc,), jnp.int32)
+                counts = jax.lax.psum(
+                    jax.vmap(lambda nid: jax.ops.segment_sum(
+                        ones, nid, nn))(node_ids), da)
+                is_small = tree_mod._child_is_smaller(
+                    counts[:, 0::2] <= counts[:, 1::2])        # (K, nn)
+                w = jax.vmap(lambda m, nid: m[nid])(
+                    is_small, node_ids).astype(jnp.float32)
+                small = jax.lax.psum(
+                    ops.accumulate_histogram(zero, codes_l, g_l * w,
+                                             h_l * w, node_ids, n_nodes=nn,
+                                             n_bins=n_bins, plan=plan), da)
+                hist = tree_mod._combine_sibling_hist(prev_hist, small,
+                                                      is_small)
+            else:
+                hist = jax.lax.psum(
+                    ops.accumulate_histogram(zero, codes_l, g_l, h_l,
+                                             node_ids, n_nodes=nn,
+                                             n_bins=n_bins, plan=plan), da)
+            prev_hist = hist
+            # step ② — replicated math on the reduced histogram: every
+            # shard takes the same decisions and grows the same tree
+            state, best, do_split = tree_mod._decide_level(
+                hist, level, depth, state, is_cat_field, field_mask,
+                lambda_, gamma, min_child_weight,
+                splits_mod.find_best_splits)
+            # step ③ — route the local records only
+            codes_lvl = codes_cm_l[jnp.where(do_split, best.feature, 0)]
+            node_ids = part(
+                node_ids, codes_lvl.transpose(0, 2, 1),
+                jnp.where(do_split,
+                          jnp.broadcast_to(jnp.arange(nn, dtype=jnp.int32),
+                                           (K, nn)), -1),
+                best.threshold, best.is_cat, best.default_left)
+
+        feature, threshold, is_cat, default_left, value_bottom, value_set \
+            = state
+        # step ④ — bottom-leaf weights from psum'd per-shard G/H sums
+        Gb = jax.lax.psum(jax.vmap(lambda gg, nid: jax.ops.segment_sum(
+            gg.astype(jnp.float32), nid, n_leaf))(g_l, node_ids), da)
+        Hb = jax.lax.psum(jax.vmap(lambda hh, nid: jax.ops.segment_sum(
+            hh.astype(jnp.float32), nid, n_leaf))(h_l, node_ids), da)
+        wb = splits_mod.leaf_weight(Gb, Hb, lambda_)
+        value_bottom = jnp.where(value_set, value_bottom, wb)
+        return (feature, threshold, is_cat, default_left, value_bottom,
+                node_ids)
+
+    # tree tables are replicated by VALUE (identical psum'd inputs on every
+    # shard), which varying-manual-axes inference cannot prove — turn the
+    # static check off, as the other shard_map paths in sharding.py do
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(da), P(None, da), P(None, da), P(None, da), P(), P()),
+        out_specs=(P(), P(), P(), P(), P(), P(None, da)),
+        check_vma=False)
+
+    def grow(codes, codes_cm, g2, h2, is_cat_field, field_mask):
+        feature, threshold, is_cat, default_left, leaf_value, node_ids = fn(
+            codes, codes_cm, g2, h2, is_cat_field, field_mask)
+        tree = TreeArrays(feature=feature, threshold=threshold,
+                          is_cat=is_cat, default_left=default_left,
+                          leaf_value=leaf_value)
+        return tree, node_ids
+
+    return grow
+
+
+# --------------------------------------------------------------------------
+# one boosting round as a single jitted dispatch (fused_rounds semantics)
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=32)
+def _distributed_round_step(config: GBDTConfig, plan: ExecutionPlan,
+                            mesh: Mesh, da: Tuple[str, ...], n: int,
+                            n_pad: int, F: int, n_bins: int,
+                            n_eval: Optional[int]):
+    """Compile one distributed boosting round: global gradients + RNG
+    filters (shard-count invariant), the sharded grower, leaf shrinkage,
+    the leaf-lookup margin refresh and the loss reduction — one dispatch
+    per round per host.  Cached per (fused-style config key, kernel plan,
+    mesh, shapes): an elastic re-mesh compiles a new step, a replay on the
+    same mesh reuses the old one.
+    """
+    loss = losses_mod.get_loss(config.objective, config.n_classes)
+    K = loss.n_outputs
+    Kb = K or 1
+    grow = _grow_forest_sharded(
+        mesh, da, depth=config.max_depth, n_bins=n_bins,
+        lambda_=config.lambda_, gamma=config.gamma,
+        min_child_weight=config.min_child_weight, plan=plan)
+
+    def body(margins, y, tkey, codes, codes_cm, is_cat_field):
+        g, h = loss.grad_hess(margins, y)
+        g, h, field_mask = _round_stats(config, tkey, g, h, n, F, K)
+        g2 = g.T if K is not None else g[None]                  # (Kb, n)
+        h2 = h.T if K is not None else h[None]
+        # padding rows carry zero statistics: exactly +0.0 per histogram
+        # cell and leaf sum, so D=1 stays bit-equal to the monolithic path
+        g2 = jnp.pad(g2, ((0, 0), (0, n_pad - n)))
+        h2 = jnp.pad(h2, ((0, 0), (0, n_pad - n)))
+        forest, node_ids = grow(codes, codes_cm, g2, h2, is_cat_field,
+                                field_mask)
+        forest = forest._replace(
+            leaf_value=forest.leaf_value * config.learning_rate)
+        # step ⑤ for free: final node ids ARE bottom-leaf slots
+        delta = jax.vmap(lambda v, i: v[i])(forest.leaf_value,
+                                            node_ids)[:, :n]   # (Kb, n)
+        margins = margins + (delta.T if K is not None else delta[0])
+        tree = (forest if K is not None
+                else TreeArrays(*[a[0] for a in forest]))
+        return margins, tree, jnp.mean(loss.value(margins, y))
+
+    if n_eval is None:
+        step = body
+    else:
+        def step(margins, ev_margins, y, y_ev, tkey, codes, codes_cm,
+                 ev_codes, ev_codes_cm, is_cat_field):
+            margins, tree, train_loss = body(margins, y, tkey, codes,
+                                             codes_cm, is_cat_field)
+            ev_data = BinnedDataset(ev_codes, ev_codes_cm, is_cat_field,
+                                    n_bins, None, None)
+            ev_delta = (gbdt_mod._predict_forest(tree, ev_data, plan)
+                        if K is not None
+                        else gbdt_mod._predict_one_tree(tree, ev_data,
+                                                        plan))
+            ev_margins = ev_margins + ev_delta
+            return (margins, ev_margins, tree, train_loss,
+                    jnp.mean(loss.value(ev_margins, y_ev)))
+
+    return jax.jit(step)
+
+
+# --------------------------------------------------------------------------
+# placement + checkpoint plumbing
+# --------------------------------------------------------------------------
+def _place_dataset(data: BinnedDataset, mesh: Mesh, da: Tuple[str, ...]):
+    """Pad records to divide the data axes and device_put both layouts.
+    Pad rows replicate the edge record; training neutralizes them with
+    zero gradient statistics inside the round step."""
+    n = data.codes.shape[0]
+    n_pad = padded_record_count(n, mesh)
+    codes = jnp.pad(data.codes, ((0, n_pad - n), (0, 0)), mode="edge")
+    codes_cm = jnp.pad(data.codes_cm, ((0, 0), (0, n_pad - n)), mode="edge")
+    codes = jax.device_put(codes, NamedSharding(mesh, P(da)))
+    codes_cm = jax.device_put(codes_cm, NamedSharding(mesh, P(None, da)))
+    return codes, codes_cm, n_pad
+
+
+def _replicate(mesh: Mesh, *arrays):
+    sh = NamedSharding(mesh, P())
+    out = tuple(None if a is None else jax.device_put(a, sh)
+                for a in arrays)
+    return out if len(out) > 1 else out[0]
+
+
+def _save_round_checkpoint(dist: DistributedConfig, config: GBDTConfig,
+                           trees, base_margin, margins, eval_margins,
+                           history, missing_bin: int, F: int,
+                           rounds_done: int) -> None:
+    model = _as_model(trees, base_margin, config, missing_bin, F)
+    arrays = {f"trees/{f}": np.asarray(getattr(model.trees, f))
+              for f in TreeArrays._fields}
+    arrays["margins"] = np.asarray(margins)
+    arrays["train_loss"] = np.asarray(history["train_loss"], np.float32)
+    if eval_margins is not None:
+        arrays["eval_margins"] = np.asarray(eval_margins)
+        arrays["eval_loss"] = np.asarray(history["eval_loss"], np.float32)
+    ckpt.save_named(dist.checkpoint_dir, arrays, step=rounds_done,
+                    keep_last=dist.keep_last,
+                    extra_meta={"round": rounds_done,
+                                "model": model.meta()})
+
+
+def _restore_round_checkpoint(dist: DistributedConfig, K: Optional[int]):
+    """Newest valid step -> (trees list, margins, eval_margins, history
+    arrays, rounds_done); None when no checkpoint exists (replay from 0)."""
+    if dist.checkpoint_dir is None:
+        return None
+    try:
+        arrays, step, meta = ckpt.restore_named(dist.checkpoint_dir)
+    except FileNotFoundError:
+        return None
+    stacked = TreeArrays(*[np.asarray(arrays[f"trees/{f}"])
+                           for f in TreeArrays._fields])
+    model = model_from_meta(stacked, meta["model"])
+    if K is not None:
+        trees = _unstack_forests(model.trees, model.n_rounds, K)
+    else:
+        trees = [TreeArrays(*[a[i] for a in model.trees])
+                 for i in range(model.n_trees)]
+    margins = jnp.asarray(arrays["margins"])
+    eval_margins = (jnp.asarray(arrays["eval_margins"])
+                    if "eval_margins" in arrays else None)
+    history = {"train_loss": [float(v) for v in arrays["train_loss"]]}
+    if "eval_loss" in arrays:
+        history["eval_loss"] = [float(v) for v in arrays["eval_loss"]]
+    return trees, margins, eval_margins, history, int(meta["round"])
+
+
+# --------------------------------------------------------------------------
+# the engine
+# --------------------------------------------------------------------------
+def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
+                      mesh: Optional[Mesh] = None,
+                      dist: Optional[DistributedConfig] = None,
+                      eval_set: Optional[Tuple[BinnedDataset, jax.Array]]
+                      = None,
+                      init_model: Optional[GBDTModel] = None,
+                      callback: Optional[Callable[[int, GBDTModel], None]]
+                      = None,
+                      verbose: bool = False,
+                      plan: Optional[ExecutionPlan] = None) -> TrainResult:
+    """Fit a GBDT ensemble data-parallel across ``mesh`` (see module doc).
+
+    ``mesh`` defaults to ``plan.mesh``; one of the two must be set.  The
+    result's ``stats`` records the distributed evidence: final shard
+    count, restarts survived, and every re-mesh event as
+    ``(kind, round, n_shards)`` tuples.
+    """
+    if plan is None:
+        plan = ExecutionPlan.from_config(config)
+    if mesh is None:
+        mesh = plan.mesh
+    if mesh is None:
+        raise ValueError("train_distributed needs a mesh (argument or "
+                         "plan.mesh)")
+    _check_data_parallel(mesh)
+    kernel_plan = _trainer_kernel_plan(plan)
+    dist = dist or DistributedConfig()
+    if config.grow_policy != "depthwise":
+        raise ValueError("distributed training supports only the depthwise "
+                         "grow_policy")
+
+    loss = losses_mod.get_loss(config.objective, config.n_classes)
+    K = loss.n_outputs
+    y = jnp.asarray(y, jnp.float32)
+    if K is not None:
+        gbdt_mod._validate_multiclass_labels(
+            K, y, eval_set[1] if eval_set is not None else None)
+    n, F = data.codes.shape
+    n_eval = None if eval_set is None else int(eval_set[1].shape[0])
+    y_ev = (jnp.asarray(eval_set[1], jnp.float32)
+            if eval_set is not None else None)
+    cfg_key = gbdt_mod._fused_step_key(config)
+
+    # -- initial state (identical to core.gbdt.train) ----------------------
+    trees: List[TreeArrays] = []
+    if init_model is not None:
+        if K is not None:
+            trees = _unstack_forests(init_model.trees, init_model.n_rounds,
+                                     K)
+        else:
+            trees = [TreeArrays(*[a[i] for a in init_model.trees])
+                     for i in range(init_model.n_trees)]
+        base_margin = init_model.base_margin
+        margins = init_model.predict_margin(data.codes, plan=kernel_plan)
+        eval_margins = (init_model.predict_margin(eval_set[0].codes,
+                                                  plan=kernel_plan)
+                        if eval_set is not None else None)
+    elif K is not None:
+        base_margin = np.asarray(loss.base_margin(y), np.float32)
+        margins = jnp.broadcast_to(jnp.asarray(base_margin), (n, K))
+        eval_margins = (jnp.broadcast_to(jnp.asarray(base_margin),
+                                         (n_eval, K))
+                        if eval_set is not None else None)
+    else:
+        base_margin = float(loss.base_margin(y))
+        margins = jnp.full((n,), base_margin, jnp.float32)
+        eval_margins = (jnp.full((n_eval,), base_margin)
+                        if eval_set is not None else None)
+    init_margins, init_eval_margins = margins, eval_margins
+
+    history: Dict[str, List[float]] = {"train_loss": []}
+    if eval_set is not None:
+        history["eval_loss"] = []
+    step_times = {"fused_rounds": 0.0}
+    key = jax.random.PRNGKey(config.seed)
+    start = len(trees)
+    end = start + config.n_trees
+
+    devices = list(mesh.devices.flat)
+    events: List[Tuple[str, int, int]] = []
+    restarts = 0
+
+    def place(new_mesh):
+        nonlocal mesh, da, codes, codes_cm, n_pad, margins, eval_margins
+        nonlocal y, y_ev, is_cat, ev_codes, ev_codes_cm
+        mesh = new_mesh
+        # the plan's data-axis spec wins while it matches the live mesh;
+        # an elastic re-mesh always lands on a plain ("data",) topology
+        if (plan.data_axes
+                and set(plan.data_axes) <= set(mesh.axis_names)):
+            da = tuple(plan.data_axes)
+        else:
+            da = data_axes(mesh)
+        codes, codes_cm, n_pad = _place_dataset(data, mesh, da)
+        y = _replicate(mesh, y)
+        margins = _replicate(mesh, margins)
+        is_cat = _replicate(mesh, data.is_categorical)
+        if eval_set is not None:
+            ev_codes, ev_codes_cm = _replicate(mesh, eval_set[0].codes,
+                                               eval_set[0].codes_cm)
+            y_ev = _replicate(mesh, y_ev)
+            eval_margins = _replicate(mesh, eval_margins)
+
+    codes = codes_cm = is_cat = ev_codes = ev_codes_cm = None
+    n_pad, da = 0, ()
+    place(mesh)
+
+    t_loop = time.perf_counter()
+    t_idx = start
+    while t_idx < end:
+        try:
+            # elastic grow/shrink between rounds: a changed device list
+            # re-places the (mesh-agnostic) training state, no restore
+            if dist.available_devices is not None:
+                want = list(dist.available_devices(t_idx))
+                if [d.id for d in want] != [d.id for d in devices]:
+                    kind = "grow" if len(want) > len(devices) else "shrink"
+                    devices = want
+                    place(data_parallel_mesh(devices))
+                    events.append((kind, t_idx, n_data_shards(mesh)))
+                    if verbose:
+                        print(f"[dist] {kind} -> {n_data_shards(mesh)} "
+                              f"shards at round {t_idx}")
+            step = _distributed_round_step(cfg_key, kernel_plan, mesh,
+                                           tuple(da), n, n_pad, F,
+                                           data.n_bins, n_eval)
+            tkey = jax.random.fold_in(key, t_idx)  # mesh-invariant stream
+            if eval_set is None:
+                new_margins, tree, tl = step(margins, y, tkey, codes,
+                                             codes_cm, is_cat)
+                new_eval = ev = None
+            else:
+                new_margins, new_eval, tree, tl, ev = step(
+                    margins, eval_margins, y, y_ev, tkey, codes, codes_cm,
+                    ev_codes, ev_codes_cm, is_cat)
+            jax.block_until_ready(new_margins)
+            if dist.fault_injector is not None:
+                dist.fault_injector.check(t_idx)   # worker dies mid-round
+        except Exception as e:  # noqa: BLE001 — any node fault
+            restarts += 1
+            if restarts > dist.max_restarts:
+                raise
+            surv = (dist.survivors(devices) if dist.survivors is not None
+                    else devices[:-1])
+            devices = list(surv)
+            place(data_parallel_mesh(devices))
+            events.append(("shrink", t_idx, n_data_shards(mesh)))
+            if verbose:
+                print(f"[dist] fault at round {t_idx} ({e}); resuming on "
+                      f"{n_data_shards(mesh)} shards")
+            restored = _restore_round_checkpoint(dist, K)
+            if restored is None:       # no checkpoint yet: replay the fit
+                trees = list(trees[:start])
+                margins, eval_margins = init_margins, init_eval_margins
+                history = {k: [] for k in history}
+                t_idx = start
+            else:
+                trees, margins, eval_margins, history, t_idx = restored
+            margins = _replicate(mesh, margins)
+            if eval_margins is not None:
+                eval_margins = _replicate(mesh, eval_margins)
+            continue                    # deterministic replay from t_idx
+
+        # -- commit the round ---------------------------------------------
+        margins, eval_margins = new_margins, new_eval
+        # committed trees go to host memory: the ensemble must outlive any
+        # mesh (an elastic re-mesh would otherwise mix device assemblies
+        # when the final model stacks rounds from different meshes)
+        trees.append(TreeArrays(*[np.asarray(a) for a in tree]))
+        history["train_loss"].append(float(tl))
+        if eval_set is not None:
+            history["eval_loss"].append(float(ev))
+        rounds_done = t_idx + 1
+        if (dist.checkpoint_dir is not None
+                and rounds_done % dist.checkpoint_every == 0):
+            _save_round_checkpoint(dist, config, trees, base_margin,
+                                   margins, eval_margins, history,
+                                   data.missing_bin, F, rounds_done)
+        if verbose and (t_idx % config.log_every == 0 or t_idx == end - 1):
+            print(f"[dist] round {t_idx:4d}  "
+                  f"train_loss={history['train_loss'][-1]:.6f}  "
+                  f"shards={n_data_shards(mesh)}")
+        if callback is not None:
+            callback(t_idx, _as_model(trees, base_margin, config,
+                                      data.missing_bin, F))
+        t_idx += 1
+
+    step_times["fused_rounds"] = time.perf_counter() - t_loop
+    return TrainResult(
+        model=_as_model(trees, base_margin, config, data.missing_bin, F),
+        history=history, step_times=step_times,
+        stats={"n_rows": n, "distributed": True,
+               "n_shards": n_data_shards(mesh), "restarts": restarts,
+               "remesh_events": events})

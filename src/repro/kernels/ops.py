@@ -21,9 +21,10 @@ traffic*:
 On non-TPU backends the Pallas kernels run in interpret mode (Python
 execution of the kernel body) — numerically identical, used for validation.
 
-Preferred calling convention: ``build_histogram(..., plan=plan)`` with a
-resolved plan.  The legacy loose ``strategy=`` / ``interpret=`` kwargs keep
-working through a thin deprecation shim (see ``repro.api.plan.resolve_plan``).
+Calling convention: ``build_histogram(..., plan=plan)`` with a resolved
+plan.  The PR-1 loose ``strategy=`` / ``interpret=`` kwargs are gone from
+these entry points; config-level strategy strings are lifted into a plan
+once, at the boundary (``repro.api.plan.resolve_plan``), not per call.
 """
 from __future__ import annotations
 
@@ -145,11 +146,7 @@ def _hist_onehot(codes, g, h, node_ids, n_nodes, n_bins, chunk=2048, fblk=8):
 
 
 def build_histogram(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
-                    plan: Optional[ExecutionPlan] = None,
-                    strategy: Optional[str] = None,
-                    interpret: Optional[bool] = None,
-                    records_per_block: Optional[int] = None,
-                    fields_per_block: Optional[int] = None):
+                    plan: Optional[ExecutionPlan] = None):
     """Dispatch: (n, F) codes -> (n_nodes, F, n_bins, 2) float32 histogram.
 
     Class-batched form (multi-class boosting): ``g``, ``h``, ``node_ids``
@@ -159,10 +156,7 @@ def build_histogram(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
     over the class axis; the Pallas kernel widens its stats operand so a
     single launch reads the codes once for all K classes.
     """
-    plan = resolve_plan(plan, _caller="build_histogram",
-                        hist_strategy=strategy, interpret=interpret,
-                        records_per_block=records_per_block,
-                        fields_per_block=fields_per_block)
+    plan = resolve_plan(plan)
     strategy = plan.hist_strategy
     batched = g.ndim == 2
 
@@ -240,11 +234,8 @@ def accumulate_histogram(hist, codes, g, h, node_ids, *, n_nodes: int,
 # --------------------------------------------------------------------------
 def partition_level(node_ids, codes_lvl, split_feature, split_threshold,
                     split_is_cat, split_default_left, *, missing_bin: int,
-                    plan: Optional[ExecutionPlan] = None,
-                    strategy: Optional[str] = None,
-                    interpret: Optional[bool] = None):
-    plan = resolve_plan(plan, _caller="partition_level",
-                        partition_strategy=strategy, interpret=interpret)
+                    plan: Optional[ExecutionPlan] = None):
+    plan = resolve_plan(plan)
     if plan.partition_strategy == "reference":
         return _ref.partition_ref(node_ids, codes_lvl, split_feature,
                                   split_threshold, split_is_cat,
@@ -259,11 +250,8 @@ def partition_level(node_ids, codes_lvl, split_feature, split_threshold,
 # step ⑤ — traversal / batch inference
 # --------------------------------------------------------------------------
 def traverse_tree(tree: TreeArrays, codes, *, missing_bin: int,
-                  plan: Optional[ExecutionPlan] = None,
-                  strategy: Optional[str] = None,
-                  interpret: Optional[bool] = None):
-    plan = resolve_plan(plan, _caller="traverse_tree",
-                        traversal_strategy=strategy, interpret=interpret)
+                  plan: Optional[ExecutionPlan] = None):
+    plan = resolve_plan(plan)
     # "scan" only changes multi-tree inference; a single walk is a walk
     if plan.traversal_strategy in ("reference", "scan"):
         return _ref.traverse_ref(tree, codes, missing_bin)
@@ -332,8 +320,7 @@ def _predict_batched_jit(trees, codes, missing_bin, n_classes):
 
 def predict_ensemble(trees: TreeArrays, codes, *, missing_bin: int,
                      depth: int, plan: Optional[ExecutionPlan] = None,
-                     strategy: Optional[str] = None,
-                     interpret: Optional[bool] = None, n_classes: int = 1):
+                     n_classes: int = 1):
     """Ensemble margins: (n,) for scalar objectives, (n, K) when
     ``n_classes > 1`` (trees round-major, tree t feeds class t % K).
 
@@ -343,8 +330,7 @@ def predict_ensemble(trees: TreeArrays, codes, *, missing_bin: int,
     ``"pallas"`` the tree-blocked kernel (``plan.trees_per_block`` tree
     tables resident per grid step).
     """
-    plan = resolve_plan(plan, _caller="predict_ensemble",
-                        traversal_strategy=strategy, interpret=interpret)
+    plan = resolve_plan(plan)
     if plan.traversal_strategy == "scan":
         return _ref.predict_ensemble_ref(trees, codes, missing_bin,
                                          n_classes=n_classes)

@@ -25,6 +25,7 @@ def run_gbdt(args):
     from repro.api import (BoosterClassifier, BoosterRegressor,
                            ExecutionPlan, paper_dataset)
     from repro.distributed.fault import StepJournal
+    from repro.launch.mesh import make_mesh
 
     X, y, cats, spec = paper_dataset(args.dataset,
                                      n_override=args.records)
@@ -38,13 +39,30 @@ def run_gbdt(args):
         if (t_idx + 1) % args.ckpt_every == 0:
             journal.append(t_idx, {})
 
+    # --data-shards N shards records over an N-way ("data",) mesh and the
+    # fit runs through the distributed engine (per-shard histograms + one
+    # psum per level); N must divide the available device count
+    mesh = None
+    if args.data_shards > 1:
+        n_dev = len(jax.devices())
+        if args.data_shards > n_dev:
+            raise SystemExit(
+                f"--data-shards {args.data_shards} exceeds the "
+                f"{n_dev} visible devices (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=N to emulate)")
+        mesh = make_mesh((args.data_shards,), ("data",),
+                         devices=jax.devices()[:args.data_shards])
+
     # checkpoint_dir resumes from the newest valid step and keeps writing
     # atomic, sha-verified bundles every --ckpt-every trees
     est.fit(X, y, plan=ExecutionPlan.auto(hist_strategy=args.strategy),
+            mesh=mesh,
             checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every,
             callback=cb, verbose=True)
     loss = est.history_.get("train_loss") or [float("nan")]
-    print(f"[train] done: {est.n_trees_} trees, loss {loss[-1]:.5f}")
+    shards = est.stats_.get("n_shards", 1)
+    print(f"[train] done: {est.n_trees_} trees, loss {loss[-1]:.5f}, "
+          f"shards {shards}")
 
 
 def run_lm(args):
@@ -86,6 +104,9 @@ def main():
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--max-bins", type=int, default=128)
     ap.add_argument("--strategy", default="auto")
+    ap.add_argument("--data-shards", type=int, default=1,
+                    help="data-parallel shards for distributed GBDT "
+                         "training (1 = single device)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--seed", type=int, default=0)

@@ -67,22 +67,20 @@ def test_plan_is_hashable_static_arg():
 
 
 # --------------------------------------------------------------------------
-# deprecation shim: loose kwargs == plan dispatch
+# the PR-1 loose-kwarg shim is gone: ops entry points are plan-only
 # --------------------------------------------------------------------------
-def test_ops_loose_kwargs_match_plan_and_warn():
+def test_ops_reject_loose_strategy_kwarg():
     rng = np.random.default_rng(0)
     codes = jnp.asarray(rng.integers(0, 8, (300, 4)), jnp.uint8)
     g = jnp.asarray(rng.normal(size=300), jnp.float32)
     h = jnp.asarray(rng.uniform(0, 1, 300), jnp.float32)
     nid = jnp.asarray(rng.integers(0, 2, 300), jnp.int32)
-    via_plan = ops.build_histogram(
-        codes, g, h, nid, n_nodes=2, n_bins=8,
-        plan=ExecutionPlan.auto(hist_strategy="sort"))
-    with pytest.warns(DeprecationWarning, match="loose strategy"):
-        via_loose = ops.build_histogram(codes, g, h, nid, n_nodes=2,
-                                        n_bins=8, strategy="sort")
-    np.testing.assert_array_equal(np.asarray(via_plan),
-                                  np.asarray(via_loose))
+    with pytest.raises(TypeError):
+        ops.build_histogram(codes, g, h, nid, n_nodes=2, n_bins=8,
+                            strategy="sort")
+    with pytest.raises(TypeError):
+        ops.build_histogram(codes, g, h, nid, n_nodes=2, n_bins=8,
+                            interpret=False)
 
 
 def test_ops_plan_dispatch_matches_reference():

@@ -29,7 +29,7 @@ def test_lane_extraction_ignores_non_throughput_rows():
 def test_within_tolerance_passes():
     base = _report({"a": 1000.0, "b": 500.0, "c": 2000.0})
     ci = _report({"a": 980.0, "b": 400.0, "c": 2100.0})   # worst: -20%
-    assert check(ci, base, tolerance=0.30) == []
+    assert check(ci, base, tolerance=0.30) == ([], [])
 
 
 def test_per_lane_regression_fails():
@@ -37,8 +37,9 @@ def test_per_lane_regression_fails():
     does not mask a genuine single-lane regression."""
     base = _report({"a": 1000.0, "b": 500.0, "c": 2000.0})
     ci = _report({"a": 1000.0, "b": 500.0, "c": 1100.0})
-    failures = check(ci, base, tolerance=0.30)
+    failures, warnings = check(ci, base, tolerance=0.30)
     assert len(failures) == 1 and "training/c" in failures[0]
+    assert warnings == []
 
 
 def test_uniform_machine_speed_difference_passes():
@@ -47,7 +48,7 @@ def test_uniform_machine_speed_difference_passes():
     ci = _report({"a": 520.0, "b": 240.0, "c": 1000.0})
     assert machine_calibration(throughput_lanes(base),
                                throughput_lanes(ci)) == 0.5
-    assert check(ci, base, tolerance=0.30) == []
+    assert check(ci, base, tolerance=0.30) == ([], [])
 
 
 def test_calibration_clamped_for_collapse():
@@ -55,32 +56,46 @@ def test_calibration_clamped_for_collapse():
     it cannot all be explained away as hardware."""
     base = _report({"a": 1000.0, "b": 500.0, "c": 2000.0})
     ci = _report({"a": 200.0, "b": 100.0, "c": 400.0})
-    assert check(ci, base, tolerance=0.30) != []
+    assert check(ci, base, tolerance=0.30)[0] != []
 
 
 def test_absolute_mode_skips_calibration():
     base = _report({"a": 1000.0})
     ci = _report({"a": 650.0})                   # -35%, single lane
-    assert check(ci, base, tolerance=0.30) == []          # calibrated away
-    failures = check(ci, base, tolerance=0.30, absolute=True)
+    assert check(ci, base, tolerance=0.30) == ([], [])    # calibrated away
+    failures, _ = check(ci, base, tolerance=0.30, absolute=True)
     assert len(failures) == 1 and "below" in failures[0]
 
 
-def test_missing_lane_fails():
+def test_disappeared_lane_warns_but_passes():
+    """A baseline lane absent from a successful CI bench (renamed or
+    retired) must not fail the gate — it becomes a printed warning."""
     base = _report({"a": 1000.0, "b": 500.0})
     ci = _report({"a": 1000.0})
-    failures = check(ci, base, tolerance=0.30)
-    assert len(failures) == 1 and "missing" in failures[0]
+    failures, warnings = check(ci, base, tolerance=0.30)
+    assert failures == []
+    assert len(warnings) == 1 and "training/b" in warnings[0]
+    assert "disappeared" in warnings[0]
+
+
+def test_new_ci_lane_without_baseline_is_ignored():
+    """A lane only the CI run reports (new bench, baseline not yet
+    regenerated) must neither fail nor warn — and must not skew the
+    machine calibration."""
+    base = _report({"a": 1000.0})
+    ci = _report({"a": 1000.0, "new_lane": 1.0})
+    assert check(ci, base, tolerance=0.30) == ([], [])
 
 
 def test_errored_bench_fails_once():
     base = _report({"a": 1000.0, "b": 500.0})
     ci = _report({}, error="RuntimeError('boom')")
-    failures = check(ci, base, tolerance=0.30)
+    failures, warnings = check(ci, base, tolerance=0.30)
     assert len(failures) == 1 and "errored in CI" in failures[0]
+    assert warnings == []   # errored lanes are failures, not warnings
 
 
 def test_faster_ci_always_passes():
     base = _report({"a": 1000.0, "b": 500.0})
     ci = _report({"a": 5000.0, "b": 2600.0})
-    assert check(ci, base, tolerance=0.30) == []
+    assert check(ci, base, tolerance=0.30) == ([], [])

@@ -39,8 +39,9 @@ codes = jnp.asarray(rng.integers(0, NB, (n, F)), jnp.uint8)
 g = jnp.asarray(rng.normal(size=n), jnp.float32)
 h = jnp.asarray(rng.uniform(.1, 1, n), jnp.float32)
 nid = jnp.asarray(rng.integers(0, NN, n), jnp.int32)
+from repro.api import ExecutionPlan
 ref = ops.build_histogram(codes, g, h, nid, n_nodes=NN, n_bins=NB,
-                          strategy="scatter")
+                          plan=ExecutionPlan.auto(hist_strategy="scatter"))
 dist = distributed_histogram(mesh, codes, g, h, nid, n_nodes=NN,
                              n_bins=NB, strategy="scatter")
 np.testing.assert_allclose(np.asarray(dist), np.asarray(ref),
@@ -98,6 +99,150 @@ np.testing.assert_allclose(pred1, pred0, rtol=1e-5, atol=1e-6)
 print("ELASTIC_OK")
 """)
     assert "ELASTIC_OK" in out
+
+
+@pytest.mark.slow
+def test_train_distributed_matches_single_device_regression():
+    """K=1 parity across shard counts {1, 2, 8}: dyadic targets (multiples
+    of 0.25, n a power of two, squared-error h=1) make every round-0
+    histogram cell exactly representable, so the first tree must be
+    BIT-equal for every shard count; D=1 must be bit-equal to the fused
+    single-device trainer for the WHOLE trajectory (trees and losses);
+    every D must match the per-op trainer within the documented
+    float-tolerance contract (identical structure, leaf values ~1e-6)."""
+    out = _run_with_devices(r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import GBDTConfig, bin_dataset, train
+from repro.distributed.trainer import train_distributed, data_parallel_mesh
+
+rng = np.random.default_rng(0)
+n, F = 4096, 6
+X = rng.normal(size=(n, F))
+y = (rng.integers(-8, 9, n) * 0.25).astype(np.float32)   # dyadic targets
+data = bin_dataset(X, max_bins=32)
+cfg = GBDTConfig(n_trees=4, max_depth=4, hist_strategy="scatter")
+ref = train(cfg, data, y)
+fused = train(GBDTConfig(n_trees=4, max_depth=4, hist_strategy="scatter",
+                         fused_rounds=True), data, y)
+pref = np.asarray(ref.model.predict(data))
+cfg1 = GBDTConfig(n_trees=1, max_depth=4, hist_strategy="scatter")
+tree0 = train(cfg1, data, y).model.trees
+for D in (1, 2, 8):
+    mesh = data_parallel_mesh(jax.devices()[:D])
+    res = train_distributed(cfg, data, y, mesh=mesh)
+    assert res.stats["n_shards"] == D
+    # round 0: bit-equal to the single-device tree for EVERY shard count
+    t0 = train_distributed(cfg1, data, y, mesh=mesh).model.trees
+    for a, b, nm in zip(t0, tree0, tree0._fields):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"round0 D={D} {nm}")
+    if D == 1:
+        # one shard reassociates nothing: the full trajectory is
+        # bit-equal to the fused trainer (same one-jit round program)
+        for a, b, nm in zip(res.model.trees, fused.model.trees,
+                            tree0._fields):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"D=1 fused {nm}")
+        assert res.history["train_loss"] == fused.history["train_loss"]
+    # full trajectory vs the per-op trainer: same structure, leaf values
+    # within the float contract (FMA/psum reassociation)
+    for nm in ("feature", "threshold", "is_cat", "default_left"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res.model.trees, nm)),
+            np.asarray(getattr(ref.model.trees, nm)),
+            err_msg=f"D={D} {nm}")
+    p = np.asarray(res.model.predict(data))
+    np.testing.assert_allclose(p, pref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(res.history["train_loss"],
+                               ref.history["train_loss"],
+                               rtol=1e-5, atol=1e-6)
+print("PARITY_K1_OK")
+""")
+    assert "PARITY_K1_OK" in out
+
+
+@pytest.mark.slow
+def test_train_distributed_matches_single_device_multiclass():
+    """K=3 softmax parity across shard counts {1, 2, 8}: softmax gradients
+    are not dyadic, so D>1 psum reassociation forbids bit-equality — the
+    contract is identical tree STRUCTURE (integer fields) plus allclose
+    leaf values/losses for the whole fit, and D=1 stays bit-equal."""
+    out = _run_with_devices(r"""
+import numpy as np, jax
+from repro.core import GBDTConfig, bin_dataset, train
+from repro.distributed.trainer import train_distributed, data_parallel_mesh
+
+rng = np.random.default_rng(1)
+n, F = 4096, 6
+X = rng.normal(size=(n, F))
+y = rng.integers(0, 3, n)
+data = bin_dataset(X, max_bins=32)
+cfg = GBDTConfig(n_trees=3, max_depth=3, objective="multi:softmax",
+                 n_classes=3, hist_strategy="scatter")
+ref = train(cfg, data, y, eval_set=(data, y))
+fused = train(GBDTConfig(n_trees=3, max_depth=3, objective="multi:softmax",
+                         n_classes=3, hist_strategy="scatter",
+                         fused_rounds=True), data, y, eval_set=(data, y))
+pfused = np.asarray(fused.model.predict_margin(data.codes))
+pref = np.asarray(ref.model.predict_margin(data.codes))
+for D in (1, 2, 8):
+    mesh = data_parallel_mesh(jax.devices()[:D])
+    res = train_distributed(cfg, data, y, mesh=mesh, eval_set=(data, y))
+    for nm in ("feature", "threshold", "is_cat", "default_left"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res.model.trees, nm)),
+            np.asarray(getattr(ref.model.trees, nm)),
+            err_msg=f"D={D} {nm}")
+    p = np.asarray(res.model.predict_margin(data.codes))
+    if D == 1:   # one shard: bit-equal to the fused one-jit round program
+        for a, b in zip(res.model.trees, fused.model.trees):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(p, pfused)
+    np.testing.assert_allclose(p, pref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(res.history["eval_loss"],
+                               ref.history["eval_loss"],
+                               rtol=1e-5, atol=1e-6)
+print("PARITY_K3_OK")
+""")
+    assert "PARITY_K3_OK" in out
+
+
+@pytest.mark.slow
+def test_train_distributed_hist_subtraction_and_estimator_mesh():
+    """The §II-A smaller-child masking path keeps shard parity (psum'd
+    integer counts pick the same child everywhere), and the estimator's
+    ``fit(mesh=...)`` surface routes through the distributed engine."""
+    out = _run_with_devices(r"""
+import numpy as np, jax
+from repro.api import BoosterRegressor, ExecutionPlan
+from repro.core import GBDTConfig, bin_dataset, train
+from repro.data import make_tabular
+from repro.distributed.trainer import train_distributed, data_parallel_mesh
+
+X, y, _ = make_tabular(2048, 6, 0, task="regression", seed=3)
+data = bin_dataset(X, max_bins=32)
+plan = ExecutionPlan.auto(hist_subtraction=True)
+cfg = GBDTConfig(n_trees=3, max_depth=4, hist_strategy="scatter")
+ref = train(cfg, data, y, plan=plan)
+res = train_distributed(cfg, data, y, plan=plan,
+                        mesh=data_parallel_mesh(jax.devices()))
+for nm in ("feature", "threshold", "is_cat", "default_left"):
+    np.testing.assert_array_equal(np.asarray(getattr(res.model.trees, nm)),
+                                  np.asarray(getattr(ref.model.trees, nm)),
+                                  err_msg=nm)
+np.testing.assert_allclose(np.asarray(res.model.predict(data)),
+                           np.asarray(ref.model.predict(data)),
+                           rtol=1e-5, atol=1e-6)
+
+est = BoosterRegressor(n_trees=3, max_depth=4, max_bins=32)
+est.fit(X, y, mesh=data_parallel_mesh(jax.devices()))
+assert est.stats_["distributed"] and est.stats_["n_shards"] == 8
+np.testing.assert_allclose(np.asarray(est.predict(X)),
+                           np.asarray(ref.model.predict(data)),
+                           rtol=1e-5, atol=1e-5)
+print("SUBTRACT_ESTIMATOR_OK")
+""")
+    assert "SUBTRACT_ESTIMATOR_OK" in out
 
 
 @pytest.mark.slow

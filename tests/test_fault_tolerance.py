@@ -1,6 +1,8 @@
 """Fault tolerance: checkpoint/restart with deterministic replay, journal
 recovery, corrupt-checkpoint fallback, injected failures."""
 import os
+import subprocess
+import sys
 
 import numpy as np
 import pytest
@@ -90,6 +92,78 @@ def test_restart_replay_is_exact(small_data, tmp_path):
     recovered = GBDTModel.from_state(state)
     for fa, fb in zip(recovered.trees, golden.model.trees):
         np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _run_with_devices(code: str, n_devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=_ROOT,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_distributed_fault_shrink_restore_replay(tmp_path):
+    """A FaultInjector-killed worker mid-round on an 8-shard fit must
+    recover WITHOUT restarting the fit: re-mesh onto 6 survivors, restore
+    the newest checkpoint.save_named step, and deterministically replay
+    the in-flight tree — landing on the same ensemble as an uninterrupted
+    run (identical structure; leaf floats within the documented
+    tolerance).  A grow event afterwards re-meshes back up to 8 shards
+    between rounds."""
+    out = _run_with_devices(r"""
+import numpy as np, jax, tempfile
+from repro.core import GBDTConfig, bin_dataset
+from repro.distributed.fault import FaultInjector
+from repro.distributed.trainer import (DistributedConfig,
+                                       data_parallel_mesh,
+                                       train_distributed)
+
+rng = np.random.default_rng(0)
+n, F = 4096, 6
+X = rng.normal(size=(n, F))
+y = (rng.integers(-8, 9, n) * 0.25).astype(np.float32)
+data = bin_dataset(X, max_bins=32)
+cfg = GBDTConfig(n_trees=8, max_depth=3, subsample=0.8, seed=11,
+                 hist_strategy="scatter")
+mesh8 = data_parallel_mesh(jax.devices())
+golden = train_distributed(cfg, data, y, mesh=mesh8)
+pg = np.asarray(golden.model.predict(data))
+
+with tempfile.TemporaryDirectory() as d:
+    dist = DistributedConfig(
+        checkpoint_dir=d, checkpoint_every=2,
+        fault_injector=FaultInjector(fail_at_steps=(5,)),
+        survivors=lambda devs: devs[:-2])       # lose two workers
+    res = train_distributed(cfg, data, y, mesh=mesh8, dist=dist)
+assert res.stats["restarts"] == 1, res.stats
+assert res.stats["remesh_events"] == [("shrink", 5, 6)], res.stats
+assert res.stats["n_shards"] == 6
+assert res.model.n_trees == cfg.n_trees            # the fit never restarted
+for nm in ("feature", "threshold", "is_cat", "default_left"):
+    np.testing.assert_array_equal(np.asarray(getattr(res.model.trees, nm)),
+                                  np.asarray(getattr(golden.model.trees,
+                                                     nm)), err_msg=nm)
+np.testing.assert_allclose(np.asarray(res.model.predict(data)), pg,
+                           rtol=1e-5, atol=1e-6)
+
+# grow event: 4 shards for rounds 0-3, back up to 8 from round 4
+grew = train_distributed(
+    cfg, data, y, mesh=data_parallel_mesh(jax.devices()[:4]),
+    dist=DistributedConfig(available_devices=lambda t:
+                           jax.devices()[:4] if t < 4 else jax.devices()))
+assert grew.stats["remesh_events"] == [("grow", 4, 8)], grew.stats
+assert grew.stats["n_shards"] == 8
+np.testing.assert_allclose(np.asarray(grew.model.predict(data)), pg,
+                           rtol=1e-5, atol=1e-6)
+print("FAULT_DIST_OK")
+""")
+    assert "FAULT_DIST_OK" in out
 
 
 def test_journal_survives_torn_writes(tmp_path):

@@ -4,10 +4,15 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from repro.api import ExecutionPlan
 from repro.kernels import ops, ref
 
 STRATEGIES = ["scatter", "scatter_private", "sort", "onehot",
               "pallas_grouped", "pallas_packed"]
+
+
+def _plan(strategy, **kw):
+    return ExecutionPlan.auto(hist_strategy=strategy, **kw)
 
 
 def _data(n, F, NB, NN, seed=0, gdtype=jnp.float32):
@@ -31,7 +36,7 @@ def test_strategies_match_oracle(strategy, n, F, NB, NN):
     codes, g, h, nid = _data(n, F, NB, NN)
     want = ref.histogram_ref(codes, g, h, nid, NN, NB)
     got = ops.build_histogram(codes, g, h, nid, n_nodes=NN, n_bins=NB,
-                              strategy=strategy)
+                              plan=_plan(strategy))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
 
@@ -43,7 +48,7 @@ def test_kernel_dtypes(strategy, gdtype):
     want = ref.histogram_ref(codes, g.astype(jnp.float32),
                              h.astype(jnp.float32), nid, 4, 16)
     got = ops.build_histogram(codes, g, h, nid, n_nodes=4, n_bins=16,
-                              strategy=strategy)
+                              plan=_plan(strategy))
     assert got.dtype == jnp.float32
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-2, atol=2e-2)
@@ -54,8 +59,9 @@ def test_kernel_block_shape_sweep(rblk, fblk):
     codes, g, h, nid = _data(1000, 9, 8, 2, seed=5)
     want = ref.histogram_ref(codes, g, h, nid, 2, 8)
     got = ops.build_histogram(codes, g, h, nid, n_nodes=2, n_bins=8,
-                              strategy="pallas_grouped",
-                              records_per_block=rblk, fields_per_block=fblk)
+                              plan=_plan("pallas_grouped",
+                                         records_per_block=rblk,
+                                         fields_per_block=fblk))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
 
@@ -83,7 +89,7 @@ def test_strategy_parity_matrix(K, n, F, NB, NN, all_missing_col):
     nid = jnp.asarray(rng.integers(0, NN, shape), jnp.int32)
 
     outs = {s: np.asarray(ops.build_histogram(
-        codes, g, h, nid, n_nodes=NN, n_bins=NB, strategy=s))
+        codes, g, h, nid, n_nodes=NN, n_bins=NB, plan=_plan(s)))
         for s in STRATEGIES}
     want_shape = (K, NN, F, NB, 2) if K > 1 else (NN, F, NB, 2)
     for s, got in outs.items():
@@ -101,7 +107,7 @@ def test_mass_conservation():
     'every record hits exactly one bin per field' density property."""
     codes, g, h, nid = _data(999, 7, 16, 4, seed=7)
     hist = ops.build_histogram(codes, g, h, nid, n_nodes=4, n_bins=16,
-                               strategy="pallas_grouped")
+                               plan=_plan("pallas_grouped"))
     per_field = np.asarray(hist.sum(axis=(0, 2)))           # (F, 2)
     np.testing.assert_allclose(per_field[:, 0], float(g.sum()), rtol=1e-4)
     np.testing.assert_allclose(per_field[:, 1], float(h.sum()), rtol=1e-4)
@@ -112,10 +118,10 @@ def test_shard_merge_equals_global():
     paper's end-of-step-① cluster reduction."""
     codes, g, h, nid = _data(800, 5, 8, 2, seed=9)
     full = ops.build_histogram(codes, g, h, nid, n_nodes=2, n_bins=8,
-                               strategy="scatter")
+                               plan=_plan("scatter"))
     parts = sum(
         ops.build_histogram(codes[i::4], g[i::4], h[i::4], nid[i::4],
-                            n_nodes=2, n_bins=8, strategy="scatter")
+                            n_nodes=2, n_bins=8, plan=_plan("scatter"))
         for i in range(4))
     np.testing.assert_allclose(np.asarray(parts), np.asarray(full),
                                rtol=1e-5, atol=1e-5)
@@ -126,9 +132,9 @@ def test_grouped_equals_packed():
     the Fig 9 ablation is a performance statement, not a semantic one."""
     codes, g, h, nid = _data(511, 6, 16, 4, seed=11)
     a = ops.build_histogram(codes, g, h, nid, n_nodes=4, n_bins=16,
-                            strategy="pallas_grouped")
+                            plan=_plan("pallas_grouped"))
     b = ops.build_histogram(codes, g, h, nid, n_nodes=4, n_bins=16,
-                            strategy="pallas_packed")
+                            plan=_plan("pallas_packed"))
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
 
 

@@ -3,7 +3,10 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from repro.api import ExecutionPlan
 from repro.kernels import ops, ref
+
+_PALLAS = ExecutionPlan.auto(partition_strategy="pallas")
 
 
 def _case(rng, n, nn, n_cols, n_bins):
@@ -23,7 +26,7 @@ def test_partition_matches_oracle(n, nn, n_cols, n_bins):
     args = _case(rng, n, nn, n_cols, n_bins)
     want = ref.partition_ref(*args, n_bins - 1)
     got = ops.partition_level(*args, missing_bin=n_bins - 1,
-                              strategy="pallas")
+                              plan=_PALLAS)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
@@ -33,7 +36,7 @@ def test_children_are_consistent():
     rng = np.random.default_rng(7)
     node_ids, codes, sf, st, sc, sd = _case(rng, 2048, 8, 8, 16)
     child = ops.partition_level(node_ids, codes, sf, st, sc, sd,
-                                missing_bin=15, strategy="pallas")
+                                missing_bin=15, plan=_PALLAS)
     child = np.asarray(child)
     parent = np.asarray(node_ids)
     assert ((child == 2 * parent) | (child == 2 * parent + 1)).all()
@@ -50,5 +53,5 @@ def test_passthrough_goes_left():
     child = ops.partition_level(
         node_ids, codes, jnp.asarray([-1], jnp.int32),
         jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
-        jnp.zeros((1,), jnp.int32), missing_bin=3, strategy="pallas")
+        jnp.zeros((1,), jnp.int32), missing_bin=3, plan=_PALLAS)
     assert (np.asarray(child) == 0).all()

@@ -9,6 +9,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from repro.api import ExecutionPlan
 from repro.core.splits import find_best_splits
 from repro.kernels import ops, ref
 from repro.kernels.ref import TreeArrays
@@ -32,7 +33,7 @@ def check_histogram_equivalence(shape, seed, strategy):
     nid = jnp.asarray(rng.integers(0, NN, n), jnp.int32)
     want = ref.histogram_ref(codes, g, h, nid, NN, NB)
     got = ops.build_histogram(codes, g, h, nid, n_nodes=NN, n_bins=NB,
-                              strategy=strategy)
+                              plan=ExecutionPlan.auto(hist_strategy=strategy))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=3e-4, atol=3e-4)
 
@@ -45,12 +46,13 @@ def check_histogram_permutation_invariance(n, seed):
     h = rng.uniform(0, 1, n).astype(np.float32)
     nid = rng.integers(0, 2, n).astype(np.int32)
     perm = rng.permutation(n)
+    plan = ExecutionPlan.auto(hist_strategy="scatter")
     a = ops.build_histogram(jnp.asarray(codes), jnp.asarray(g),
                             jnp.asarray(h), jnp.asarray(nid),
-                            n_nodes=2, n_bins=8, strategy="scatter")
+                            n_nodes=2, n_bins=8, plan=plan)
     b = ops.build_histogram(jnp.asarray(codes[perm]), jnp.asarray(g[perm]),
                             jnp.asarray(h[perm]), jnp.asarray(nid[perm]),
-                            n_nodes=2, n_bins=8, strategy="scatter")
+                            n_nodes=2, n_bins=8, plan=plan)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=1e-4, atol=1e-5)
 
@@ -85,8 +87,9 @@ def check_traversal_reaches_valid_leaf(depth, n, seed):
     codes = jnp.asarray(rng.integers(0, n_bins, (n, n_cols)), jnp.uint8)
     out = np.asarray(ref.traverse_ref(tree, codes, n_bins - 1))
     assert ((out >= 0) & (out <= n_leaf - 1)).all()
-    got = np.asarray(ops.traverse_tree(tree, codes, missing_bin=n_bins - 1,
-                                       strategy="pallas"))
+    got = np.asarray(ops.traverse_tree(
+        tree, codes, missing_bin=n_bins - 1,
+        plan=ExecutionPlan.auto(traversal_strategy="pallas")))
     np.testing.assert_allclose(got, out, rtol=1e-6)
 
 

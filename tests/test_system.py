@@ -3,6 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from repro.api import ExecutionPlan
 from repro.core import GBDTConfig, GBDTModel, bin_dataset, train
 from repro.data import make_tabular, paper_dataset
 from repro.kernels import ops
@@ -32,7 +33,8 @@ def test_predict_equals_sum_of_trees():
     for i in range(model.n_trees):
         one = ops.traverse_tree(
             type(model.trees)(*[a[i] for a in model.trees]), data.codes,
-            missing_bin=data.missing_bin, strategy="reference")
+            missing_bin=data.missing_bin,
+            plan=ExecutionPlan.auto(traversal_strategy="reference"))
         acc = acc + one
     np.testing.assert_allclose(np.asarray(total), np.asarray(acc),
                                rtol=1e-5, atol=1e-5)

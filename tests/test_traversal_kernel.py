@@ -3,8 +3,11 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from repro.api import ExecutionPlan
 from repro.kernels import ops, ref
 from repro.kernels.ref import TreeArrays
+
+_PALLAS = ExecutionPlan.auto(traversal_strategy="pallas")
 
 
 def rand_tree(rng, depth, n_cols, n_bins, p_passthrough=0.2):
@@ -28,7 +31,7 @@ def test_traverse_matches_oracle(depth, n, n_cols, n_bins):
     tree = rand_tree(rng, depth, n_cols, n_bins)
     want = ref.traverse_ref(tree, codes, n_bins - 1)
     got = ops.traverse_tree(tree, codes, missing_bin=n_bins - 1,
-                            strategy="pallas")
+                            plan=_PALLAS)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
 
 
@@ -41,7 +44,7 @@ def test_ensemble_matches_oracle(T):
         *[tuple(rand_tree(rng, depth, n_cols, n_bins)) for _ in range(T)])])
     want = ref.predict_ensemble_ref(trees, codes, n_bins - 1)
     got = ops.predict_ensemble(trees, codes, missing_bin=n_bins - 1,
-                               depth=depth, strategy="pallas")
+                               depth=depth, plan=_PALLAS)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
 
@@ -57,11 +60,11 @@ def test_missing_values_follow_default_direction():
         leaf_value=jnp.asarray([10.0, 20.0], jnp.float32))
     codes = jnp.asarray([[n_bins - 1]], jnp.uint8)  # missing
     out = ops.traverse_tree(tree, codes, missing_bin=n_bins - 1,
-                            strategy="pallas")
+                            plan=_PALLAS)
     assert float(out[0]) == 10.0  # default_left -> left leaf
     tree2 = tree._replace(default_left=jnp.asarray([0], jnp.int32))
     out2 = ops.traverse_tree(tree2, codes, missing_bin=n_bins - 1,
-                             strategy="pallas")
+                             plan=_PALLAS)
     assert float(out2[0]) == 20.0
 
 
@@ -75,5 +78,5 @@ def test_categorical_one_vs_rest():
         leaf_value=jnp.asarray([1.0, -1.0], jnp.float32))
     codes = jnp.asarray([[5], [2], [6]], jnp.uint8)
     out = ops.traverse_tree(tree, codes, missing_bin=n_bins - 1,
-                            strategy="pallas")
+                            plan=_PALLAS)
     np.testing.assert_allclose(np.asarray(out), [1.0, -1.0, -1.0])

@@ -77,6 +77,15 @@ class ExecutionPlan:
                          set, ``fit(data=...)`` streams chunk-sized
                          histogram/partition passes instead of
                          materializing the matrix (None = in-memory)
+    packed_codes:        store/stream bin codes 4-bit packed (two per byte,
+                         paper §III-B's compressed redundant representation).
+                         ``None`` = auto: pack whenever the dataset's
+                         ``n_bins <= 16``; ``True`` forces packing (errors
+                         above 16 bins); ``False`` forces plain uint8.
+                         Affects the resident-bytes model of
+                         ``chunk_rows()`` and the layout the streaming
+                         trainer writes/ships — results are bit-equal
+                         either way
     mesh:                optional ``jax.sharding.Mesh``; when set, ensemble
                          inference shards trees over the ``"model"`` axis and
                          records over the data axes (paper §III-D), and
@@ -98,6 +107,7 @@ class ExecutionPlan:
     trees_per_block: int = 8
     host_offload_split: bool = False
     hist_subtraction: Optional[bool] = None
+    packed_codes: Optional[bool] = None
     chunk_bytes: Optional[int] = None
     mesh: Optional[jax.sharding.Mesh] = None
     data_axes: Optional[Tuple[str, ...]] = None
@@ -175,12 +185,14 @@ class ExecutionPlan:
     def chunk_rows(self, n_fields: int, n_classes: int = 1) -> int:
         """Rows per streamed chunk under the ``chunk_bytes`` budget.
 
-        Per-row resident footprint during a chunked pass: the uint8 code
-        row plus its column-major transpose (2F bytes) and the per-class
-        float32 g/h/node-id triple (12K bytes).
+        Per-row resident footprint during a chunked pass: the code row
+        plus its column-major transpose (2F bytes unpacked; F bytes when
+        ``packed_codes`` halves both copies to a nibble each) and the
+        per-class float32 g/h/node-id triple (12K bytes).
         """
         budget = self.chunk_bytes or self.DEFAULT_CHUNK_BYTES
-        per_row = 2 * max(n_fields, 1) + 12 * max(n_classes, 1)
+        code_bytes = (1 if self.packed_codes else 2) * max(n_fields, 1)
+        per_row = code_bytes + 12 * max(n_classes, 1)
         return max(256, budget // per_row)
 
     def without_chunking(self) -> "ExecutionPlan":
@@ -194,6 +206,8 @@ class ExecutionPlan:
         m = (f"mesh{dict(self.mesh.shape)}" if self.mesh is not None
              else "single-device")
         sub = "+sub" if self.hist_subtraction else ""
+        if self.packed_codes is not None:
+            sub += f", packed={self.packed_codes}"
         return (f"ExecutionPlan(hist={self.hist_strategy}{sub}, "
                 f"partition={self.partition_strategy}, "
                 f"traversal={self.traversal_strategy}, "

@@ -29,20 +29,137 @@ import numpy as np
 
 Array = jax.Array
 
+# --------------------------------------------------------------------------
+# 4-bit packed codes (paper §III-B: the bandwidth-preserving compressed
+# representation).  Two bin codes per byte along the LAST axis whenever the
+# bin count fits a nibble (n_bins <= 16): the low nibble holds the even
+# index, the high nibble the odd index.  Packing is lossless — codes are
+# small integers — so every consumer stays bit-equal to the uint8 path.
+# --------------------------------------------------------------------------
+PACK_MAX_BINS = 16      # nibble capacity: codes 0..15
+
+
+def pack_nibbles(codes) -> Array:
+    """Pack integer codes <= 15 two-per-byte along the last axis.
+
+    An odd-length last axis is zero-padded to even before pairing; the
+    logical length must be carried alongside (``PackedCodes.n``) so
+    :func:`unpack_nibbles` can strip the pad nibble again.
+    """
+    codes = jnp.asarray(codes, jnp.uint8)
+    if codes.shape[-1] % 2:
+        pad = [(0, 0)] * (codes.ndim - 1) + [(0, 1)]
+        codes = jnp.pad(codes, pad)
+    return codes[..., 0::2] | (codes[..., 1::2] << 4)
+
+
+def unpack_nibbles(data, n: int) -> Array:
+    """Inverse of :func:`pack_nibbles`: (..., ceil(n/2)) -> (..., n)."""
+    data = jnp.asarray(data, jnp.uint8)
+    full = jnp.stack([data & 0xF, data >> 4], axis=-1)
+    return full.reshape(data.shape[:-1] + (-1,))[..., :n]
+
+
+def pack_nibbles_np(codes: np.ndarray) -> np.ndarray:
+    """Host (numpy) twin of :func:`pack_nibbles` — the shard writer's path."""
+    codes = np.ascontiguousarray(codes, np.uint8)
+    if codes.shape[-1] % 2:
+        pad = [(0, 0)] * (codes.ndim - 1) + [(0, 1)]
+        codes = np.pad(codes, pad)
+    return codes[..., 0::2] | (codes[..., 1::2] << 4)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedCodes:
+    """4-bit bin codes, two per byte along the last axis.
+
+    A jax pytree (the packed bytes are the single leaf; the logical
+    last-axis length is static aux data), so it flows through ``jit`` /
+    ``vmap`` untouched and kernels can consume the packed bytes directly.
+    Leading-axis indexing (``pc[idx]``) selects rows without unpacking —
+    the packed axis is always the *last* one in both layouts (row-major
+    packs fields, column-major packs records).
+    """
+
+    data: Array     # (..., ceil(n/2)) uint8 packed bytes
+    n: int          # logical last-axis length
+    bits: int = 4
+
+    @property
+    def shape(self):
+        return self.data.shape[:-1] + (self.n,)
+
+    @property
+    def ndim(self) -> int:
+        return self.data.ndim
+
+    @property
+    def dtype(self):
+        return jnp.uint8
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.data.shape))    # uint8: 1 byte/element
+
+    def unpack(self) -> Array:
+        return unpack_nibbles(self.data, self.n)
+
+    def __getitem__(self, idx) -> "PackedCodes":
+        """Leading-axis selection; the packed last axis is never indexed."""
+        return PackedCodes(self.data[idx], self.n, self.bits)
+
+    def __array__(self, dtype=None, copy=None):
+        """numpy conversion yields the UNPACKED logical matrix, so
+        ``np.asarray(codes)`` reads the same either layout."""
+        out = np.asarray(self.unpack())
+        return out if dtype is None else out.astype(dtype)
+
+    def tree_flatten(self):
+        return (self.data,), (self.n, self.bits)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], *aux)
+
+    @classmethod
+    def pack(cls, codes) -> "PackedCodes":
+        codes = jnp.asarray(codes)
+        return cls(pack_nibbles(codes), int(codes.shape[-1]))
+
+    @classmethod
+    def pack_np(cls, codes: np.ndarray) -> "PackedCodes":
+        """Pack on the host — the bytes stay numpy until a consumer ships
+        them (half the host->device traffic of shipping unpacked codes)."""
+        codes = np.asarray(codes, np.uint8)
+        return cls(pack_nibbles_np(codes), int(codes.shape[-1]))
+
+
+def as_unpacked(codes) -> Array:
+    """``codes`` as a plain (..., n) uint8 array, whatever the layout."""
+    if isinstance(codes, PackedCodes):
+        return codes.unpack()
+    return jnp.asarray(codes)
+
 
 @dataclasses.dataclass(frozen=True)
 class BinnedDataset:
-    """A pre-processed dataset: uint8 codes in redundant dual layout.
+    """A pre-processed dataset: bin codes in redundant dual layout.
 
     Paper §III: the redundant per-field column-major format is stored *in
     addition to* the natural per-record row-major format.  ``codes`` is the
     row-major (records, fields) copy consumed by histogram binning (step ①);
     ``codes_cm`` is the (fields, records) copy consumed by single-predicate
     evaluation (step ③) and one-tree traversal (step ⑤).
+
+    When ``n_bins <= 16`` both copies are stored as :class:`PackedCodes`
+    (4-bit, two codes per byte), so the redundant representation costs
+    *less* than one unpacked copy instead of doubling it.  Consumers
+    branch on ``isinstance(..., PackedCodes)``; results are bit-equal.
     """
 
-    codes: Array          # (n, F) uint8, row-major
-    codes_cm: Array       # (F, n) uint8, column-major (redundant copy)
+    codes: Array          # (n, F) uint8 row-major, or PackedCodes over F
+    codes_cm: Array       # (F, n) uint8 column-major, or PackedCodes over n
     is_categorical: Array  # (F,) bool
     n_bins: int            # total bins per field incl. the missing bin
     bin_edges: np.ndarray  # (F, n_bins-1) float64 upper edges (numeric fields)
@@ -161,12 +278,19 @@ class Binner:
                                     *self._device_tables(),
                                     missing_code=self.max_bins - 1)
 
-    def transform(self, X: np.ndarray) -> BinnedDataset:
+    def transform(self, X: np.ndarray,
+                  packed: Optional[bool] = None) -> BinnedDataset:
+        """Binned dataset in the redundant dual layout.
+
+        ``packed=None`` (auto) bit-packs both copies whenever the codes
+        fit a nibble (``max_bins <= 16``); pass ``False`` to force plain
+        uint8, or ``True`` to require packing (errors above 16 bins).
+        """
         codes = self.transform_codes(X)
-        codes_j = jnp.asarray(codes)
+        rm, cm = _dual_layout(codes, self.max_bins, packed)
         return BinnedDataset(
-            codes=codes_j,
-            codes_cm=jnp.asarray(codes.T.copy()),  # materialized redundant copy
+            codes=rm,
+            codes_cm=cm,   # materialized redundant copy (packed when <=16 bins)
             is_categorical=jnp.asarray(self._is_cat),
             n_bins=self.max_bins,
             bin_edges=self._edges,
@@ -366,22 +490,42 @@ class StreamingBinner(Binner):
         return self.finalize()
 
 
+def _dual_layout(codes_np: np.ndarray, n_bins: int,
+                 packed: Optional[bool] = None):
+    """Build the (row-major, column-major) device pair from host codes,
+    bit-packing both copies when the bin count fits a nibble."""
+    if packed is None:
+        packed = n_bins <= PACK_MAX_BINS
+    if packed and n_bins > PACK_MAX_BINS:
+        raise ValueError(
+            f"packed codes need n_bins <= {PACK_MAX_BINS}, got {n_bins}")
+    codes_np = np.ascontiguousarray(codes_np, np.uint8)
+    n, F = codes_np.shape
+    if packed:
+        rm = PackedCodes(jnp.asarray(pack_nibbles_np(codes_np)), F)
+        cm = PackedCodes(jnp.asarray(pack_nibbles_np(codes_np.T)), n)
+        return rm, cm
+    return jnp.asarray(codes_np), jnp.asarray(codes_np.T.copy())
+
+
 def bin_dataset(X: np.ndarray, max_bins: int = 256,
-                categorical_fields: Optional[Sequence[int]] = None
-                ) -> BinnedDataset:
-    return Binner(max_bins, categorical_fields).fit_transform(X)
+                categorical_fields: Optional[Sequence[int]] = None,
+                packed: Optional[bool] = None) -> BinnedDataset:
+    return Binner(max_bins, categorical_fields).fit(X).transform(
+        X, packed=packed)
 
 
-def dataset_from_codes(codes, is_categorical=None, n_bins: int = 256
-                       ) -> BinnedDataset:
+def dataset_from_codes(codes, is_categorical=None, n_bins: int = 256,
+                       packed: Optional[bool] = None) -> BinnedDataset:
     """Wrap pre-binned integer codes (tests / synthetic data) as a dataset."""
-    codes = jnp.asarray(codes, dtype=jnp.uint8)
-    n, F = codes.shape
+    codes_np = np.asarray(codes, dtype=np.uint8)
+    n, F = codes_np.shape
+    rm, cm = _dual_layout(codes_np, n_bins, packed)
     if is_categorical is None:
         is_categorical = jnp.zeros((F,), dtype=bool)
     return BinnedDataset(
-        codes=codes,
-        codes_cm=jnp.asarray(np.asarray(codes).T.copy()),
+        codes=rm,
+        codes_cm=cm,
         is_categorical=jnp.asarray(is_categorical),
         n_bins=n_bins,
         bin_edges=np.zeros((F, n_bins - 2)),

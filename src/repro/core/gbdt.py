@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.plan import ExecutionPlan
+from repro.core import binning as binning_mod
 from repro.core import losses as losses_mod
 from repro.core import tree as tree_mod
 from repro.core.binning import BinnedDataset
@@ -617,7 +618,10 @@ def _predict_one_tree(tree: TreeArrays, data: BinnedDataset,
     F = data.n_fields
     if F > n_int:
         # per-node column fetch: node i's field becomes renumbered column i
-        cols = data.codes_cm[jnp.maximum(tree.feature, 0)]        # (N_int, n)
+        # (unpacks only the <= N_int gathered fields when codes_cm is
+        # nibble-packed)
+        cols = tree_mod._gather_fields(
+            data.codes_cm, jnp.maximum(tree.feature, 0))          # (N_int, n)
         renum = jnp.where(tree.feature >= 0,
                           jnp.arange(n_int, dtype=jnp.int32), -1)
         tree_c = tree._replace(feature=renum)
@@ -703,6 +707,18 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
     n = int(y.shape[0])
     F = int(source.n_fields)
     depth = config.max_depth
+    # resolve the packed-codes layout BEFORE sizing chunks: 4-bit packing
+    # halves the per-row code bytes, so the same chunk_bytes budget fits
+    # ~2x the records per streamed chunk (paper §III-B)
+    if plan.packed_codes is None:
+        plan = plan.replace(
+            packed_codes=binner.max_bins <= binning_mod.PACK_MAX_BINS)
+        kernel_plan = plan.without_chunking()
+    elif plan.packed_codes and binner.max_bins > binning_mod.PACK_MAX_BINS:
+        raise ValueError(
+            f"plan requests 4-bit packed codes but the binner has "
+            f"max_bins={binner.max_bins} > {binning_mod.PACK_MAX_BINS}")
+    packed = bool(plan.packed_codes)
     if chunk_rows is None:
         chunk_rows = plan.chunk_rows(F, K or 1)
     # never pad past the data: a small dataset under a large byte budget
@@ -713,9 +729,11 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
     n_chunks = [0]
 
     def binned_chunks():
-        """One full pass: bin + pad each raw chunk on the host (prefetch
-        thread overlaps binning/transfer with device compute), yield
-        ``(lo, hi, codes)`` with a fixed (chunk_rows, F) device shape."""
+        """One full pass: bin + pad (+ 4-bit pack) each raw chunk on the
+        host (prefetch thread overlaps binning/transfer with device
+        compute), yield ``(lo, hi, codes)`` with a fixed (chunk_rows, F)
+        logical device shape — ``codes`` is a :class:`PackedCodes` when
+        the plan packs, so each chunk DMAs half the code bytes."""
         from repro.data.pipeline import PrefetchIterator
 
         def gen():
@@ -729,15 +747,20 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
                 if n_real < chunk_rows:
                     codes = np.pad(codes,
                                    ((0, chunk_rows - n_real), (0, 0)))
+                if packed:
+                    codes = binning_mod.pack_nibbles_np(codes)
                 yield {"rows": np.int32(n_real), "codes": codes}
 
         lo = 0
         count = 0
-        for batch in PrefetchIterator(gen(), depth=2):
-            n_real = int(batch["rows"])
-            yield lo, lo + n_real, batch["codes"]
-            lo += n_real
-            count += 1
+        with PrefetchIterator(gen(), depth=2) as batches:
+            for batch in batches:
+                n_real = int(batch["rows"])
+                codes = (binning_mod.PackedCodes(batch["codes"], F)
+                         if packed else batch["codes"])
+                yield lo, lo + n_real, codes
+                lo += n_real
+                count += 1
         if lo != n:
             raise ValueError(
                 f"source pass yielded {lo} rows but len(y) == {n}; "

@@ -34,7 +34,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.api.plan import ExecutionPlan
-from repro.core.binning import Binner, BinnedDataset
+from repro.core.binning import Binner, BinnedDataset, PackedCodes
 from repro.core.gbdt import GBDTModel
 from repro.kernels import ops
 from repro.kernels.ref import TreeArrays
@@ -125,6 +125,8 @@ def predict_margin_cached(model: GBDTModel, codes, *,
     plan = _inference_plan_key(
         (plan if plan is not None else ExecutionPlan()).resolved())
     codes = codes.codes if isinstance(codes, BinnedDataset) else codes
+    if isinstance(codes, PackedCodes):
+        codes = codes.unpack()     # row buckets key on the uint8 layout
     codes = jnp.asarray(codes)
     n = int(codes.shape[0]) if n_rows is None else int(n_rows)
     row_bucket = bucket_pow2(int(codes.shape[0]), ROW_BUCKET_FLOOR)

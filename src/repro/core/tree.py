@@ -36,8 +36,20 @@ import numpy as np
 
 from repro.api.plan import ExecutionPlan, resolve_plan
 from repro.core import splits as splits_mod
+from repro.core.binning import PackedCodes
 from repro.kernels import ops
 from repro.kernels.ref import TreeArrays
+
+
+def _gather_fields(codes_cm, idx):
+    """Leading-axis (field) gather from the column-major copy, unpacked.
+
+    ``codes_cm`` is (F, n) — plain uint8 or :class:`PackedCodes` over the
+    record axis.  Packed rows are selected WITHOUT unpacking the full
+    matrix; only the gathered level rows expand to uint8."""
+    if isinstance(codes_cm, PackedCodes):
+        return codes_cm[idx].unpack()
+    return codes_cm[idx]
 
 
 def fit_tree(codes, codes_cm, g, h, *, depth: int, n_bins: int,
@@ -138,7 +150,8 @@ def fit_forest(codes, codes_cm, g, h, *, depth: int, n_bins: int,
             gamma, min_child_weight, find)
 
         # step ③ — per-class predicate columns from the column-major copy
-        codes_lvl = codes_cm[jnp.where(do_split, best.feature, 0)]  # (K,nn,n)
+        codes_lvl = _gather_fields(
+            codes_cm, jnp.where(do_split, best.feature, 0))     # (K,nn,n)
         node_ids = part(
             node_ids, codes_lvl.transpose(0, 2, 1),
             jnp.where(do_split,
@@ -303,8 +316,11 @@ def _partition_chunk(codes, node_ids, feature, threshold, is_cat,
     """Step ③ for one chunk: route the chunk's per-class node ids through
     one level's split decisions.  The column-major copy is chunk-local
     (``codes.T``) — the paper's redundant representation kept to one
-    chunk's footprint."""
+    chunk's footprint.  Packed chunks unpack here, inside the jit, so the
+    chunk crosses host→device at half the bytes."""
     K, nn = feature.shape
+    if isinstance(codes, PackedCodes):
+        codes = codes.unpack()
     codes_cm = codes.T                                        # (F, rows)
     codes_lvl = codes_cm[jnp.where(do_split, feature, 0)]     # (K, nn, rows)
     part = jax.vmap(functools.partial(ops.partition_level,
@@ -323,7 +339,9 @@ def fit_forest_chunked(chunks, g, h, *, depth: int, n_bins: int,
     """Out-of-core twin of :func:`fit_forest`: same math, chunked scans.
 
     ``chunks`` is a zero-argument callable returning a fresh iterator of
-    ``(lo, hi, codes)`` tuples — ``codes`` a (rows, F) uint8 chunk whose
+    ``(lo, hi, codes)`` tuples — ``codes`` a (rows, F) uint8 chunk (or a
+    :class:`PackedCodes` carrying the same logical rows 4-bit packed, in
+    which case every host→device chunk copy moves half the bytes) whose
     first ``hi - lo`` rows are records ``lo:hi`` (extra rows are padding
     and are neutralized with zero gradient statistics).  One iteration
     happens per level (histogram accumulation, with the previous level's
@@ -390,7 +408,8 @@ def fit_forest_chunked(chunks, g, h, *, depth: int, n_bins: int,
         is_small = _child_is_smaller(smaller_is_left) if sub_level else None
         hist = jnp.zeros((K, nn, F, n_bins, 2), jnp.float32)
         for lo, hi, codes in chunks():
-            codes = jnp.asarray(codes)
+            if not isinstance(codes, PackedCodes):
+                codes = jnp.asarray(codes)
             rows = codes.shape[0]
             nid = apply_pending(codes, lo, hi, rows)
             gc = stat_chunk(g, lo, hi, rows)
@@ -414,7 +433,9 @@ def fit_forest_chunked(chunks, g, h, *, depth: int, n_bins: int,
                    best.default_left, do_split)
 
     for lo, hi, codes in chunks():    # final pass: last level's partition
-        apply_pending(jnp.asarray(codes), lo, hi, codes.shape[0])
+        if not isinstance(codes, PackedCodes):
+            codes = jnp.asarray(codes)
+        apply_pending(codes, lo, hi, codes.shape[0])
 
     feature, threshold, is_cat, default_left, value_bottom, value_set = state
     value_bottom = _settle_bottom_leaves(
@@ -499,7 +520,7 @@ def fit_tree_lossguide(codes, codes_cm, g, h, *, depth: int, n_bins: int,
         is_cat_a[pos], default_left[pos] = e["c"], e["dl"]
 
         # step ③ — one predicate, one column from the column-major copy
-        col = codes_cm[e["f"]].astype(jnp.int32)
+        col = _gather_fields(codes_cm, e["f"]).astype(jnp.int32)
         miss = col == missing_bin
         left = jnp.where(jnp.asarray(e["c"] == 1), col == e["t"],
                          col <= e["t"])

@@ -106,8 +106,21 @@ class NpzShardSource:
     def chunks(self, rows: int):
         for path in self.paths:
             with np.load(path) as z:
+                if self.x_key not in z:
+                    raise KeyError(
+                        f"shard {path!r} has no {self.x_key!r} array "
+                        f"(found {sorted(z.files)})")
                 X = z[self.x_key]
                 y = z[self.y_key] if self.y_key in z.files else None
+            if X.ndim != 2 or X.shape[1] != self._n_fields:
+                raise ValueError(
+                    f"shard {path!r} has X of shape {X.shape}; expected "
+                    f"(*, {self._n_fields}) to match the first shard — "
+                    "mixed-width shard directories cannot feed one model")
+            if y is not None and y.shape[0] != X.shape[0]:
+                raise ValueError(
+                    f"shard {path!r} has {X.shape[0]} rows of X but "
+                    f"{y.shape[0]} labels")
             for lo in range(0, X.shape[0], rows):
                 hi = min(lo + rows, X.shape[0])
                 yield X[lo:hi], (y[lo:hi] if y is not None else None)
@@ -137,6 +150,94 @@ def write_npz_shards(directory: str, source: "DataSource",
     return paths
 
 
+def write_binned_shards(directory: str, source: "DataSource", binner,
+                        rows_per_shard: int = 65536,
+                        packed: Optional[bool] = None) -> list:
+    """Bin a DataSource through a *fitted* binner and stage the code
+    matrix as npz shards — the compressed working set staged to disk
+    once, then re-streamed per level/round without re-binning the raw
+    floats (paper §III-B: the binned representation IS the record
+    stream).
+
+    When ``packed`` (default: auto — ``binner.max_bins <= 16``) the
+    codes are 4-bit nibble-packed on the host, so each shard holds HALF
+    the bytes of the plain uint8 codes.  Shard keys: ``codes`` (uint8,
+    possibly packed), ``rows`` (logical record count), ``n_fields``,
+    ``packed`` flags, and optional ``y``.  Read back with
+    :class:`BinnedShardSource`.
+    """
+    from repro.core.binning import PACK_MAX_BINS, pack_nibbles_np
+    if packed is None:
+        packed = binner.max_bins <= PACK_MAX_BINS
+    elif packed and binner.max_bins > PACK_MAX_BINS:
+        raise ValueError(
+            f"4-bit packing requires max_bins <= {PACK_MAX_BINS}; "
+            f"binner has {binner.max_bins}")
+    os.makedirs(directory, exist_ok=True)
+    for stale in glob.glob(os.path.join(directory, "*.npz")):
+        os.remove(stale)
+    paths = []
+    for i, (X, y) in enumerate(source.chunks(rows_per_shard)):
+        codes = binner.transform_codes(np.asarray(X))
+        arrays = {
+            "codes": pack_nibbles_np(codes) if packed else codes,
+            "rows": np.int64(codes.shape[0]),
+            "n_fields": np.int64(codes.shape[1]),
+            "packed": np.bool_(packed),
+        }
+        if y is not None:
+            arrays["y"] = np.asarray(y)
+        path = os.path.join(directory, f"binned_{i:05d}.npz")
+        np.savez(path, **arrays)
+        paths.append(path)
+    return paths
+
+
+class BinnedShardSource:
+    """Chunked stream over shards written by :func:`write_binned_shards`.
+
+    ``chunks(rows)`` yields ``(codes, y)`` with ``codes`` a
+    :class:`repro.core.binning.PackedCodes` (host-resident) when the
+    shards were written packed, else a plain uint8 array.  Packed shards
+    are sliced *without unpacking* — packing is row-major, so a row
+    slice of the logical matrix is a row slice of the packed bytes.
+    """
+
+    def __init__(self, directory: str):
+        self.directory = str(directory)
+        self.paths = sorted(glob.glob(
+            os.path.join(self.directory, "binned_*.npz")))
+        if not self.paths:
+            raise FileNotFoundError(
+                f"no binned_*.npz shards under {directory!r}")
+        with np.load(self.paths[0]) as z:
+            self._n_fields = int(z["n_fields"])
+            self.packed = bool(z["packed"])
+
+    @property
+    def n_fields(self) -> int:
+        return self._n_fields
+
+    def chunks(self, rows: int):
+        from repro.core.binning import PackedCodes
+        for path in self.paths:
+            with np.load(path) as z:
+                if int(z["n_fields"]) != self._n_fields or \
+                        bool(z["packed"]) != self.packed:
+                    raise ValueError(
+                        f"shard {path!r} has n_fields={int(z['n_fields'])} "
+                        f"packed={bool(z['packed'])}; expected "
+                        f"n_fields={self._n_fields} packed={self.packed}")
+                codes = z["codes"]
+                n = int(z["rows"])
+                y = z["y"] if "y" in z.files else None
+            for lo in range(0, n, rows):
+                hi = min(lo + rows, n)
+                chunk = (PackedCodes(codes[lo:hi], self._n_fields)
+                         if self.packed else codes[lo:hi])
+                yield chunk, (y[lo:hi] if y is not None else None)
+
+
 def as_source(data) -> "DataSource":
     """Coerce ``fit(data=...)`` inputs: a DataSource passes through, an
     ``(X, y)`` tuple wraps as :class:`ArraySource`, a string/path opens an
@@ -153,7 +254,16 @@ def as_source(data) -> "DataSource":
 
 
 class PrefetchIterator:
-    """Wrap a host batch generator; keep ``depth`` batches in flight."""
+    """Wrap a host batch generator; keep ``depth`` batches in flight.
+
+    The worker thread blocks on ``queue.put`` once ``depth`` batches are
+    staged, so a consumer that abandons the iterator early (exception,
+    ``break``) would otherwise leave the thread parked forever holding
+    device buffers.  Call :meth:`close` — or use the iterator as a
+    context manager — on every early-exit path: it stops the worker,
+    drains staged batches, and closes the underlying generator so its
+    ``finally`` blocks run.
+    """
 
     def __init__(self, gen: Iterator, shardings=None, depth: int = 2):
         self._gen = gen
@@ -161,18 +271,23 @@ class PrefetchIterator:
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._done = object()
         self._err: Optional[BaseException] = None
+        self._stop = threading.Event()
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
     def _worker(self):
         try:
             for batch in self._gen:
+                if self._stop.is_set():
+                    break
                 if self._shardings is not None:
                     batch = jax.tree.map(jax.device_put, batch,
                                          self._shardings)
                 else:
                     batch = jax.tree.map(jax.device_put, batch)
                 self._q.put(batch)
+                if self._stop.is_set():
+                    break
         except BaseException as e:  # noqa: BLE001 — surfaced on next()
             self._err = e
         finally:
@@ -188,6 +303,33 @@ class PrefetchIterator:
                 raise self._err
             raise StopIteration
         return item
+
+    def close(self):
+        """Stop the worker and release staged batches.  Idempotent; safe
+        after normal exhaustion too."""
+        self._stop.set()
+        # drain so a put-blocked worker wakes, sees the stop flag, exits
+        while self._thread.is_alive():
+            try:
+                self._q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+        # empty any leftovers (incl. the _done sentinel) so buffers free
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        close = getattr(self._gen, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
 
 def token_batches(rng: np.random.Generator, vocab: int, batch: int,

@@ -30,6 +30,7 @@ from repro.compat import shard_map
 from repro.api.plan import ExecutionPlan, resolve_plan
 from repro.core import splits as splits_mod
 from repro.core import tree as tree_mod
+from repro.core.binning import PackedCodes, as_unpacked
 from repro.kernels import ops
 from repro.kernels.ref import TreeArrays
 from repro.launch.mesh import data_axes
@@ -75,8 +76,13 @@ def shard_dataset(data, mesh: Mesh):
     sh = gbdt_shardings(mesh)
     n = data.codes.shape[0]
     n_pad = padded_record_count(n, mesh) - n
-    codes = jnp.pad(data.codes, ((0, n_pad), (0, 0)), mode="edge")
-    codes_cm = jnp.pad(data.codes_cm, ((0, 0), (0, n_pad)), mode="edge")
+    # the mesh grid shards BOTH axes of each layout; a nibble-packed axis
+    # cannot be split mid-byte, so distributed placement uses the plain
+    # uint8 layouts (single-device training keeps the packed halving)
+    codes = jnp.pad(as_unpacked(data.codes), ((0, n_pad), (0, 0)),
+                    mode="edge")
+    codes_cm = jnp.pad(as_unpacked(data.codes_cm), ((0, 0), (0, n_pad)),
+                       mode="edge")
     return data.__class__(
         codes=jax.device_put(codes, sh["codes"]),
         codes_cm=jax.device_put(codes_cm, sh["codes_cm"]),
@@ -100,6 +106,8 @@ def distributed_histogram(mesh: Mesh, codes, g, h, node_ids, *,
     """
     da = data_axes(mesh)
     plan = resolve_plan(plan, hist_strategy=strategy)
+    if isinstance(codes, PackedCodes):
+        codes = codes.unpack()     # the field axis is sharded mid-byte
 
     def local(codes_l, g_l, h_l, node_l):
         hist_l = ops.build_histogram(codes_l, g_l, h_l, node_l,
@@ -170,6 +178,8 @@ def distributed_partition_bits(mesh: Mesh, node_ids, codes_cm, feat, thr,
     da = data_axes(mesh)
     m_size = mesh.shape["model"]
     f_local = n_fields // m_size
+    if isinstance(codes_cm, PackedCodes):
+        codes_cm = codes_cm.unpack()   # the record axis is sharded mid-byte
 
     def local(codes_cm_l, node_l):
         rank = jax.lax.axis_index("model")
@@ -214,6 +224,8 @@ def distributed_fit_tree(mesh: Mesh, codes, codes_cm, g, h, *, depth: int,
 
     plan = _legacy_distributed_plan(plan, hist_strategy)
     da = data_axes(mesh)
+    codes = as_unpacked(codes)         # both shard grids split mid-byte
+    codes_cm = as_unpacked(codes_cm)
     F = codes.shape[1]
     n = codes.shape[0]
     n_int, n_leaf = 2 ** depth - 1, 2 ** depth

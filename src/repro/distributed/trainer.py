@@ -54,9 +54,9 @@ from repro.core import gbdt as gbdt_mod
 from repro.core import losses as losses_mod
 from repro.core import splits as splits_mod
 from repro.core import tree as tree_mod
-from repro.core.binning import BinnedDataset
+from repro.core.binning import BinnedDataset, PackedCodes
 from repro.core.gbdt import (GBDTConfig, GBDTModel, TrainResult, _as_model,
-                             _round_stats, _stack_trees, _unstack_forests,
+                             _round_stats, _unstack_forests,
                              model_from_meta)
 from repro.distributed import checkpoint as ckpt
 from repro.distributed.sharding import padded_record_count
@@ -130,16 +130,26 @@ def _trainer_kernel_plan(plan: ExecutionPlan) -> ExecutionPlan:
 # --------------------------------------------------------------------------
 def _grow_forest_sharded(mesh: Mesh, da: Tuple[str, ...], *, depth: int,
                          n_bins: int, lambda_: float, gamma: float,
-                         min_child_weight: float, plan: ExecutionPlan):
+                         min_child_weight: float, plan: ExecutionPlan,
+                         cm_packed: bool = False):
     """Build the shard_map'd level-wise grower for ``mesh``.
 
     Returns ``fn(codes, codes_cm, g2, h2, is_cat_field, field_mask) ->
     (TreeArrays with (K, ...) axes, node_ids (K, n_pad))`` where codes is
-    (n_pad, F) sharded over the data axes, codes_cm its (F, n_pad)
-    column-major copy, and g2/h2 the (K, n_pad) per-class statistics
-    (padding rows MUST carry zero stats).  The returned node ids are the
-    records' final bottom-leaf slots — step ⑤ is a leaf-value lookup, no
-    traversal pass (the streaming trainer's trick, reused verbatim).
+    (n_pad, F) sharded over the data axes — a plain uint8 matrix or a
+    :class:`PackedCodes` (its record axis shards cleanly; the histogram
+    dispatch unpacks or consumes nibbles per strategy) — codes_cm its
+    (F, n_pad) column-major copy, and g2/h2 the (K, n_pad) per-class
+    statistics (padding rows MUST carry zero stats).  With
+    ``cm_packed`` the column-major operand arrives as RAW nibble-packed
+    bytes (F, n_pad // 2): the record axis is the packed axis, so it is
+    shipped as bytes (half the cross-shard placement traffic), sharded
+    on whole bytes (``_place_dataset`` pads records so every shard gets
+    an even count), and only the <= 2^level gathered split rows are
+    unpacked per level inside the local function.  The returned node ids
+    are the records' final bottom-leaf slots — step ⑤ is a leaf-value
+    lookup, no traversal pass (the streaming trainer's trick, reused
+    verbatim).
     """
     missing_bin = n_bins - 1
     n_int, n_leaf = 2 ** depth - 1, 2 ** depth
@@ -198,6 +208,10 @@ def _grow_forest_sharded(mesh: Mesh, da: Tuple[str, ...], *, depth: int,
                 splits_mod.find_best_splits)
             # step ③ — route the local records only
             codes_lvl = codes_cm_l[jnp.where(do_split, best.feature, 0)]
+            if cm_packed:      # unpack just the gathered rows, in-shard
+                b = codes_lvl
+                codes_lvl = jnp.stack([b & 0xF, b >> 4], axis=-1).reshape(
+                    b.shape[0], b.shape[1], -1)
             node_ids = part(
                 node_ids, codes_lvl.transpose(0, 2, 1),
                 jnp.where(do_split,
@@ -244,7 +258,8 @@ def _grow_forest_sharded(mesh: Mesh, da: Tuple[str, ...], *, depth: int,
 def _distributed_round_step(config: GBDTConfig, plan: ExecutionPlan,
                             mesh: Mesh, da: Tuple[str, ...], n: int,
                             n_pad: int, F: int, n_bins: int,
-                            n_eval: Optional[int]):
+                            n_eval: Optional[int],
+                            cm_packed: bool = False):
     """Compile one distributed boosting round: global gradients + RNG
     filters (shard-count invariant), the sharded grower, leaf shrinkage,
     the leaf-lookup margin refresh and the loss reduction — one dispatch
@@ -258,7 +273,8 @@ def _distributed_round_step(config: GBDTConfig, plan: ExecutionPlan,
     grow = _grow_forest_sharded(
         mesh, da, depth=config.max_depth, n_bins=n_bins,
         lambda_=config.lambda_, gamma=config.gamma,
-        min_child_weight=config.min_child_weight, plan=plan)
+        min_child_weight=config.min_child_weight, plan=plan,
+        cm_packed=cm_packed)
 
     def body(margins, y, tkey, codes, codes_cm, is_cat_field):
         g, h = loss.grad_hess(margins, y)
@@ -307,14 +323,45 @@ def _distributed_round_step(config: GBDTConfig, plan: ExecutionPlan,
 def _place_dataset(data: BinnedDataset, mesh: Mesh, da: Tuple[str, ...]):
     """Pad records to divide the data axes and device_put both layouts.
     Pad rows replicate the edge record; training neutralizes them with
-    zero gradient statistics inside the round step."""
+    zero gradient statistics inside the round step.
+
+    Nibble-packed datasets (``n_bins <= 16``) ship packed: the row-major
+    layout stays a :class:`PackedCodes` (records shard on axis 0, the
+    packed field axis is shard-local), the column-major layout ships as
+    RAW packed bytes (F, n_pad // 2) — half the placement traffic of the
+    uint8 twin.  The packed cm form requires an even per-shard record
+    count (a byte must not straddle shards); ``n_pad`` is NEVER adjusted
+    for it — that would change the psum reduction shapes and cost the
+    bit-equality guarantee against the uint8 path — so when the count
+    comes out odd the cm copy falls back to plain uint8.  Pad-row code
+    values are immaterial (only their zero statistics matter), so
+    byte-level edge replication is as good as record-level.  Returns
+    ``(codes, codes_cm, n_pad, cm_packed)``.
+    """
     n = data.codes.shape[0]
     n_pad = padded_record_count(n, mesh)
-    codes = jnp.pad(data.codes, ((0, n_pad - n), (0, 0)), mode="edge")
-    codes_cm = jnp.pad(data.codes_cm, ((0, 0), (0, n_pad - n)), mode="edge")
-    codes = jax.device_put(codes, NamedSharding(mesh, P(da)))
+    rm_packed = isinstance(data.codes, PackedCodes)
+    cm_packed = isinstance(data.codes_cm, PackedCodes)
+    if cm_packed:
+        shards = int(np.prod([mesh.shape[a] for a in da])) if da else 1
+        cm_packed = (n_pad // shards) % 2 == 0
+    if rm_packed:
+        d = jnp.pad(data.codes.data, ((0, n_pad - n), (0, 0)), mode="edge")
+        codes = jax.device_put(PackedCodes(d, data.codes.n),
+                               NamedSharding(mesh, P(da)))
+    else:
+        codes = jnp.pad(data.codes, ((0, n_pad - n), (0, 0)), mode="edge")
+        codes = jax.device_put(codes, NamedSharding(mesh, P(da)))
+    if cm_packed:
+        d = data.codes_cm.data                       # (F, ceil(n / 2))
+        codes_cm = jnp.pad(d, ((0, 0), (0, n_pad // 2 - d.shape[1])),
+                           mode="edge")
+    else:
+        cm = data.codes_cm
+        cm = cm.unpack() if isinstance(cm, PackedCodes) else cm
+        codes_cm = jnp.pad(cm, ((0, 0), (0, n_pad - n)), mode="edge")
     codes_cm = jax.device_put(codes_cm, NamedSharding(mesh, P(None, da)))
-    return codes, codes_cm, n_pad
+    return codes, codes_cm, n_pad, cm_packed
 
 
 def _replicate(mesh: Mesh, *arrays):
@@ -455,7 +502,7 @@ def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
 
     def place(new_mesh):
         nonlocal mesh, da, codes, codes_cm, n_pad, margins, eval_margins
-        nonlocal y, y_ev, is_cat, ev_codes, ev_codes_cm
+        nonlocal y, y_ev, is_cat, ev_codes, ev_codes_cm, cm_packed
         mesh = new_mesh
         # the plan's data-axis spec wins while it matches the live mesh;
         # an elastic re-mesh always lands on a plain ("data",) topology
@@ -464,7 +511,7 @@ def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
             da = tuple(plan.data_axes)
         else:
             da = data_axes(mesh)
-        codes, codes_cm, n_pad = _place_dataset(data, mesh, da)
+        codes, codes_cm, n_pad, cm_packed = _place_dataset(data, mesh, da)
         y = _replicate(mesh, y)
         margins = _replicate(mesh, margins)
         is_cat = _replicate(mesh, data.is_categorical)
@@ -475,7 +522,7 @@ def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
             eval_margins = _replicate(mesh, eval_margins)
 
     codes = codes_cm = is_cat = ev_codes = ev_codes_cm = None
-    n_pad, da = 0, ()
+    n_pad, da, cm_packed = 0, (), False
     place(mesh)
 
     t_loop = time.perf_counter()
@@ -496,7 +543,7 @@ def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
                               f"shards at round {t_idx}")
             step = _distributed_round_step(cfg_key, kernel_plan, mesh,
                                            tuple(da), n, n_pad, F,
-                                           data.n_bins, n_eval)
+                                           data.n_bins, n_eval, cm_packed)
             tkey = jax.random.fold_in(key, t_idx)  # mesh-invariant stream
             if eval_set is None:
                 new_margins, tree, tl = step(margins, y, tkey, codes,

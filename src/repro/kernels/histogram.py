@@ -32,6 +32,12 @@ A ``packed`` variant reproduces the paper's *naive packing* baseline
 one-hot tile is ``FBLK``× larger, which on real hardware forces smaller
 record blocks / fewer resident fields — the VMEM-pressure analog of the
 paper's serialized SRAM accesses.
+
+When the codes arrive 4-bit packed (:class:`repro.core.binning.PackedCodes`
+— paper §III-B's compressed representation), the grouped kernel streams
+the packed *bytes* through the BlockSpec pipeline and unpacks the nibbles
+in VMEM per block: the HBM→VMEM code traffic halves while the contraction
+math — and therefore the histogram, bit for bit — is unchanged.
 """
 from __future__ import annotations
 
@@ -41,6 +47,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+
+from repro.core.binning import PackedCodes
 
 
 def _iota(shape, dim):
@@ -67,22 +75,33 @@ def _stats_node(node_ref, g_ref, h_ref, n_nodes: int):
 
 
 def _hist_kernel_grouped(codes_ref, node_ref, g_ref, h_ref, hist_ref, *,
-                         n_bins: int, n_nodes: int):
-    """Group-by-field: one (NB x RBLK) @ (RBLK x NN*2) matmul per field."""
+                         n_bins: int, n_nodes: int, nibble_packed: bool):
+    """Group-by-field: every field owns its own (RBLK, NB) one-hot tile
+    and its own bin rows of the accumulator, contracted against the
+    shared stats operand in ONE field-batched dot — not a Python-unrolled
+    per-field matmul chain, which serialized the kernel into ``FBLK``
+    dependent MXU issues per block.
+
+    ``nibble_packed``: the code block arrives as packed bytes
+    (RBLK, FBLK/2) and is unpacked to nibbles here, in VMEM — the block
+    DMA from HBM moves half the bytes."""
     @pl.when(pl.program_id(1) == 0)
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
-    rblk, fblk = codes_ref.shape
-    codes = codes_ref[...].astype(jnp.int32)                # (RBLK, FBLK)
+    raw = codes_ref[...]
+    if nibble_packed:
+        raw = jnp.stack([raw & 0xF, raw >> 4],
+                        axis=-1).reshape(raw.shape[0], -1)  # (RBLK, FBLK)
+    rblk, fblk = raw.shape
+    codes = raw.astype(jnp.int32)                           # (RBLK, FBLK)
     sn = _stats_node(node_ref, g_ref, h_ref, n_nodes)       # (RBLK, NN*2)
-    for f in range(fblk):  # static unroll — each field owns its bin tile
-        oh_bin = (codes[:, f][:, None] == _iota((rblk, n_bins), 1)
-                  ).astype(jnp.float32)                     # (RBLK, NB)
-        contrib = lax.dot_general(
-            oh_bin, sn, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)             # (NB, NN*2)
-        hist_ref[f, :, :] += contrib
+    oh_bin = (codes[:, :, None] == _iota((rblk, fblk, n_bins), 2)
+              ).astype(jnp.float32)                         # (RBLK, FBLK, NB)
+    # contract the record axis once for all FBLK fields: (FBLK, NB, NN*2)
+    contrib = lax.dot_general(oh_bin, sn, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    hist_ref[...] += contrib
 
 
 def _hist_kernel_packed(codes_ref, node_ref, g_ref, h_ref, hist_ref, *,
@@ -111,15 +130,24 @@ def histogram_pallas(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
                      packed: bool = False, interpret: bool = True):
     """Histogram binning via the one-hot MXU kernel.
 
-    codes: (n, F) uint8; g, h: (n,) float; node_ids: (n,) int32.
-    Returns (n_nodes, F, n_bins, 2) float32.  Inputs are padded to block
-    multiples here (padded records carry g = h = 0 → no contribution).
+    codes: (n, F) uint8, or a :class:`PackedCodes` carrying the same
+    logical (n, F) as 4-bit nibbles (grouped kernel only — the packed
+    bytes are streamed through the BlockSpec pipeline and unpacked in
+    VMEM, halving the HBM code traffic); g, h: (n,) float; node_ids:
+    (n,) int32.  Returns (n_nodes, F, n_bins, 2) float32.  Inputs are
+    padded to block multiples here (padded records carry g = h = 0 → no
+    contribution).
 
     Class-batched form: g, h, node_ids may carry a leading class axis
     (K, n) — one launch then reads codes once and accumulates all K
     classes' statistics through a K*NN*2-wide stats operand, returning
     (K, n_nodes, F, n_bins, 2).
     """
+    nibble = isinstance(codes, PackedCodes)
+    if nibble and packed:
+        # the Fig-9 naive-packing ablation keeps its historical uint8 feed
+        codes, nibble = codes.unpack(), False
+
     batched = g.ndim == 2
     K = g.shape[0] if batched else 1
     # kernel-facing layout: records major, classes minor — (n, K) columns
@@ -130,21 +158,38 @@ def histogram_pallas(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
     n, F = codes.shape
     rblk = min(records_per_block, max(8, n))
     fblk = min(fields_per_block, F)
+    if nibble and fblk % 2:
+        fblk += 1          # nibble blocks cover whole packed bytes
     n_pad = -n % rblk
     f_pad = -F % fblk
-    codes = jnp.pad(codes, ((0, n_pad), (0, f_pad)))
     g2 = jnp.pad(g2, ((0, n_pad), (0, 0)))
     h2 = jnp.pad(h2, ((0, n_pad), (0, 0)))
     node2 = jnp.pad(node2, ((0, n_pad), (0, 0)))
-    np_, Fp = codes.shape
+    Fp = F + f_pad
+    np_ = n + n_pad
     grid = (Fp // fblk, np_ // rblk)  # fields outer, record stream inner
 
-    kernel = _hist_kernel_packed if packed else _hist_kernel_grouped
+    if nibble:
+        # pad the packed BYTES; pad fields unpack to code 0 and only feed
+        # the sliced-off hist rows >= F, pad records carry zero stats
+        data = codes.data
+        code_op = jnp.pad(data, ((0, n_pad), (0, Fp // 2 - data.shape[1])))
+        code_spec = pl.BlockSpec((rblk, fblk // 2), lambda fi, ri: (ri, fi))
+    else:
+        code_op = jnp.pad(codes, ((0, n_pad), (0, f_pad)))
+        code_spec = pl.BlockSpec((rblk, fblk), lambda fi, ri: (ri, fi))
+
+    if packed:
+        kernel = functools.partial(_hist_kernel_packed, n_bins=n_bins,
+                                   n_nodes=n_nodes)
+    else:
+        kernel = functools.partial(_hist_kernel_grouped, n_bins=n_bins,
+                                   n_nodes=n_nodes, nibble_packed=nibble)
     out = pl.pallas_call(
-        functools.partial(kernel, n_bins=n_bins, n_nodes=n_nodes),
+        kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((rblk, fblk), lambda fi, ri: (ri, fi)),
+            code_spec,
             pl.BlockSpec((rblk, K), lambda fi, ri: (ri, 0)),
             pl.BlockSpec((rblk, K), lambda fi, ri: (ri, 0)),
             pl.BlockSpec((rblk, K), lambda fi, ri: (ri, 0)),
@@ -154,7 +199,7 @@ def histogram_pallas(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
         out_shape=jax.ShapeDtypeStruct((Fp, n_bins, K * n_nodes * 2),
                                        jnp.float32),
         interpret=interpret,
-    )(codes, node2, g2, h2)
+    )(code_op, node2, g2, h2)
 
     hist = out[:F].reshape(F, n_bins, K, n_nodes, 2)
     hist = hist.transpose(2, 3, 0, 1, 4)            # (K, NN, F, NB, 2)

@@ -35,23 +35,44 @@ import jax
 import jax.numpy as jnp
 
 from repro.api.plan import ExecutionPlan, HIST_STRATEGIES, resolve_plan
+# safe either import order: binning only depends on jax/numpy, and the
+# core package binds this module lazily (runtime attribute access only)
+from repro.core.binning import PackedCodes
 from repro.kernels import histogram as _hist_k
 from repro.kernels import partition as _part_k
 from repro.kernels import traversal as _trav_k
 from repro.kernels import ref as _ref
 from repro.kernels.ref import TreeArrays
 
-__all__ = ["HIST_STRATEGIES", "onehot_matmul", "build_histogram",
-           "accumulate_histogram", "partition_level", "traverse_tree",
-           "predict_ensemble", "default_hist_strategy"]
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+__all__ = ["HIST_STRATEGIES", "onehot_matmul", "pack_codes", "unpack_codes",
+           "build_histogram", "accumulate_histogram", "partition_level",
+           "traverse_tree", "predict_ensemble", "default_hist_strategy"]
 
 
 def default_hist_strategy() -> str:
     return ExecutionPlan().resolved().hist_strategy
+
+
+# --------------------------------------------------------------------------
+# device-side pack/unpack primitives (paper §III-B compressed codes)
+# --------------------------------------------------------------------------
+@jax.jit
+def pack_codes(codes) -> PackedCodes:
+    """4-bit pack on device: (..., n) integer codes -> :class:`PackedCodes`
+    (two codes per byte along the last axis).  Codes must be <= 15 —
+    i.e. ``n_bins <= 16`` — or information is lost; callers gate on the
+    bin count."""
+    return PackedCodes.pack(codes)
+
+
+@jax.jit
+def unpack_codes(packed) -> jax.Array:
+    """Inverse of :func:`pack_codes` on device: -> (..., n) uint8.
+    Plain arrays pass through unchanged, so dispatch layers can call this
+    unconditionally."""
+    if isinstance(packed, PackedCodes):
+        return packed.unpack()
+    return jnp.asarray(packed)
 
 
 # --------------------------------------------------------------------------
@@ -158,6 +179,11 @@ def build_histogram(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
     """
     plan = resolve_plan(plan)
     strategy = plan.hist_strategy
+    if isinstance(codes, PackedCodes) and strategy != "pallas_grouped":
+        # the grouped Pallas kernel consumes packed blocks natively (half
+        # the HBM code traffic); every other strategy gets the bit-equal
+        # unpacked view, fused into its own jit
+        codes = codes.unpack()
     batched = g.ndim == 2
 
     def per_class(fn):
@@ -236,6 +262,8 @@ def partition_level(node_ids, codes_lvl, split_feature, split_threshold,
                     split_is_cat, split_default_left, *, missing_bin: int,
                     plan: Optional[ExecutionPlan] = None):
     plan = resolve_plan(plan)
+    if isinstance(codes_lvl, PackedCodes):
+        codes_lvl = codes_lvl.unpack()
     if plan.partition_strategy == "reference":
         return _ref.partition_ref(node_ids, codes_lvl, split_feature,
                                   split_threshold, split_is_cat,
@@ -252,6 +280,8 @@ def partition_level(node_ids, codes_lvl, split_feature, split_threshold,
 def traverse_tree(tree: TreeArrays, codes, *, missing_bin: int,
                   plan: Optional[ExecutionPlan] = None):
     plan = resolve_plan(plan)
+    if isinstance(codes, PackedCodes):
+        codes = codes.unpack()
     # "scan" only changes multi-tree inference; a single walk is a walk
     if plan.traversal_strategy in ("reference", "scan"):
         return _ref.traverse_ref(tree, codes, missing_bin)
@@ -331,6 +361,8 @@ def predict_ensemble(trees: TreeArrays, codes, *, missing_bin: int,
     tables resident per grid step).
     """
     plan = resolve_plan(plan)
+    if isinstance(codes, PackedCodes):
+        codes = codes.unpack()
     if plan.traversal_strategy == "scan":
         return _ref.predict_ensemble_ref(trees, codes, missing_bin,
                                          n_classes=n_classes)

@@ -1,27 +1,33 @@
 """Pallas TPU kernels for step ⑤ (one-tree traversal) and batch inference.
 
 Paper §III-B maps the grown tree to a table replicated in every BU's SRAM;
-each record walks the table with data-dependent reads.  A TPU lane cannot do
-independent VMEM gathers, so the walk is re-expressed gather-free:
+each record walks the table with data-dependent reads.  The walk here is
+expressed over a *packed* node table:
 
-  * the whole node table (≤ 2 KB — the paper's own SRAM-residency argument)
-    lives in VMEM and is *replicated across grid steps* via a constant
-    index_map, exactly like the paper replicates the tree per BU;
-  * per hop, the record's node parameters are fetched with a one-hot MXU
-    contraction ``one_hot(node) @ table`` and the record's field value with a
-    one-hot row-reduction — the same renumbered-field trick as §III-B (the
-    table stores *compacted* field indices into the fetched columns);
-  * child pointers are implicit (node <- 2*node + 1 + go_right), so a D-hop
-    walk is D dense vector steps, zero irregular accesses.
+  * the four per-node parameters are packed into ONE int32 word
+    ``((feat+1) << 16) | (thr << 8) | (cat << 1) | dl`` (bin codes are
+    uint8 and field counts < 2**15 — the repo's binning invariants — so
+    the pack is lossless), and the whole packed table (≤ a few hundred
+    bytes — the paper's own SRAM-residency argument) lives in VMEM,
+    *replicated across grid steps* via a constant index_map, exactly like
+    the paper replicates the tree per BU;
+  * per hop, every record fetches its node word with one table gather and
+    its field value with one code gather — two VMEM reads per level for a
+    whole (RBLK, TBLK) node matrix, instead of the per-record one-hot MXU
+    contractions the first kernel generation used (those serialized the
+    walk into TBLK dependent matmul chains and lost to the jitted
+    reference walk by an order of magnitude);
+  * child pointers are implicit (node <- 2*node + 2 - go_left), so a D-hop
+    walk is D dense vector steps, zero irregular HBM accesses.
 
 Batch inference (§III-D) adds a tree grid dimension: record blocks stream
-while each grid step holds a *block* of ``trees_per_block`` tree tables
-resident, accumulating the ensemble sum in the revisited output block —
+while each grid step holds a *block* of ``trees_per_block`` packed tables
+resident, walking all of them simultaneously over one (RBLK, TBLK) node
+matrix and accumulating the ensemble sum in the revisited output block —
 the analog of Booster pinning one tree per BU and averaging load across
 records.  Tree-blocking amortizes each record block fetched into VMEM
-across ``trees_per_block`` walks (the same trick the histogram kernel
-uses to class-batch stats), cutting the code-stream traffic from T reads
-per record to ``T / trees_per_block``.
+across ``trees_per_block`` walks, cutting the code-stream traffic from T
+reads per record to ``T / trees_per_block``.
 """
 from __future__ import annotations
 
@@ -39,55 +45,49 @@ def _iota(shape, dim):
     return lax.broadcasted_iota(jnp.int32, shape, dim)
 
 
-def _iota_f(shape, dim):
-    return lax.broadcasted_iota(jnp.float32, shape, dim)
-
-
 def pack_node_table(tree: TreeArrays) -> jax.Array:
-    """(N_int, 4) float32 [feature, threshold, is_cat, default_left].
+    """(N_int,) int32 packed node words.
 
-    All entries are small integers — exact in f32, which lets a single MXU
-    matmul fetch all four per-record node parameters at once.
+    ``((feature+1) << 16) | (threshold << 8) | (is_cat << 1) |
+    default_left`` — one word per internal node, so each walk hop costs a
+    single table gather instead of four.
     """
-    return jnp.stack(
-        [tree.feature, tree.threshold, tree.is_cat, tree.default_left],
-        axis=1).astype(jnp.float32)
+    return (((tree.feature.astype(jnp.int32) + 1) << 16)
+            | (tree.threshold.astype(jnp.int32) << 8)
+            | (tree.is_cat.astype(jnp.int32) << 1)
+            | tree.default_left.astype(jnp.int32))
 
 
-def _walk_step(node, codes_f32, table, missing_bin: float):
-    """One tree hop for a (RBLK, 1) vector of node indices (gather-free)."""
-    rblk = node.shape[0]
-    n_int = table.shape[0]
-    n_cols = codes_f32.shape[1]
-    oh_node = (node == _iota((rblk, n_int), 1)).astype(jnp.float32)
-    params = lax.dot_general(oh_node, table, (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)  # (RBLK, 4)
-    f = params[:, 0:1]
-    thr = params[:, 1:2]
-    cat = params[:, 2:3]
-    dl = params[:, 3:4]
-    oh_f = (f == _iota_f((rblk, n_cols), 1)).astype(jnp.float32)
-    code = jnp.sum(oh_f * codes_f32, axis=1, keepdims=True)     # (RBLK, 1)
-    go_left = jnp.where(cat == 1.0, code == thr, code <= thr)
-    go_left = jnp.where(code == missing_bin, dl == 1.0, go_left)
-    go_left = jnp.where(f < 0.0, True, go_left)
-    return 2 * node + 2 - go_left.astype(jnp.int32)
+def _walk_levels(codes, table_t, depth: int, missing_bin: int):
+    """Walk a (RBLK, TBLK) node matrix ``depth`` levels down.
+
+    ``codes``: (RBLK, n_cols) int32; ``table_t``: (N_int, TBLK) packed
+    node words, one column per resident tree.  Returns the final node
+    matrix (values in [N_int, N_int + N_leaf)).  Decisions are
+    integer-exact, so the walk agrees bit-for-bit with the reference.
+    """
+    rblk = codes.shape[0]
+    tblk = table_t.shape[1]
+    node = jnp.zeros((rblk, tblk), jnp.int32)
+    for _ in range(depth):  # static: fixed-depth walk, paper §III-B
+        p = jnp.take_along_axis(table_t, node, axis=0)        # (RBLK, TBLK)
+        f = (p >> 16) - 1
+        code = jnp.take_along_axis(codes, jnp.maximum(f, 0), axis=1)
+        thr = (p >> 8) & 255
+        go_left = jnp.where((p & 2) != 0, code == thr, code <= thr)
+        go_left = jnp.where(code == missing_bin, (p & 1) == 1, go_left)
+        go_left = jnp.where(f < 0, True, go_left)             # pass-through
+        node = 2 * node + 2 - go_left.astype(jnp.int32)
+    return node
 
 
 def _traverse_kernel(codes_ref, table_ref, leaf_ref, out_ref, *,
                      depth: int, missing_bin: int):
-    rblk = codes_ref.shape[0]
-    codes = codes_ref[...].astype(jnp.float32)
-    table = table_ref[...]
-    node = jnp.zeros((rblk, 1), jnp.int32)
-    for _ in range(depth):  # static: fixed-depth walk, paper §III-B
-        node = _walk_step(node, codes, table, float(missing_bin))
-    leaf = node - table.shape[0]
-    n_leaf = leaf_ref.shape[0]
-    oh_leaf = (leaf == _iota((rblk, n_leaf), 1)).astype(jnp.float32)
-    out_ref[...] = lax.dot_general(oh_leaf, leaf_ref[...],
-                                   (((1,), (0,)), ((), ())),
-                                   preferred_element_type=jnp.float32)
+    codes = codes_ref[...].astype(jnp.int32)
+    table_t = table_ref[...]                                  # (N_int, 1)
+    node = _walk_levels(codes, table_t, depth, missing_bin)
+    leaf = node - table_t.shape[0]
+    out_ref[...] = jnp.take_along_axis(leaf_ref[...], leaf, axis=0)
 
 
 @functools.partial(jax.jit, static_argnames=("missing_bin",
@@ -111,13 +111,14 @@ def traverse_pallas(tree: TreeArrays, codes, *, missing_bin: int,
         grid=(np_ // rblk,),
         in_specs=[
             pl.BlockSpec((rblk, n_cols), lambda ri: (ri, 0)),
-            pl.BlockSpec((n_int, 4), lambda ri: (0, 0)),      # replicated
+            pl.BlockSpec((n_int, 1), lambda ri: (0, 0)),      # replicated
             pl.BlockSpec((n_leaf, 1), lambda ri: (0, 0)),     # replicated
         ],
         out_specs=pl.BlockSpec((rblk, 1), lambda ri: (ri, 0)),
         out_shape=jax.ShapeDtypeStruct((np_, 1), jnp.float32),
         interpret=interpret,
-    )(codes, pack_node_table(tree), tree.leaf_value[:, None])
+    )(codes, pack_node_table(tree)[:, None],
+      tree.leaf_value.astype(jnp.float32)[:, None])
     return out[:n, 0]
 
 
@@ -128,30 +129,26 @@ def _ensemble_kernel(codes_ref, table_ref, leaf_ref, out_ref, *,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    rblk = codes_ref.shape[0]
-    codes = codes_ref[...].astype(jnp.float32)
-    n_leaf = leaf_ref.shape[1]
-    acc = jnp.zeros((rblk, n_classes), jnp.float32)
-    # the codes block is fetched ONCE and walked by every resident tree
-    # table (paper: one record stream shared by all BUs); the tree loop is
-    # static, so each walk is the same D dense vector steps as before
-    for tb in range(trees_per_block):
-        table = table_ref[tb]                                 # (N_int, 4)
-        node = jnp.zeros((rblk, 1), jnp.int32)
-        for _ in range(depth):
-            node = _walk_step(node, codes, table, float(missing_bin))
-        leaf = node - table.shape[0]
-        oh_leaf = (leaf == _iota((rblk, n_leaf), 1)).astype(jnp.float32)
-        vals = lax.dot_general(oh_leaf, leaf_ref[tb],
-                               (((1,), (0,)), ((), ())),
-                               preferred_element_type=jnp.float32)  # (RBLK, 1)
-        # multi-class: round-major tree order, tree t owns margin column
-        # t % K; a one-hot class row routes the accumulation (K == 1:
-        # plain add).  Zero-leaf padding trees contribute exactly 0.
-        cls = (pl.program_id(1) * trees_per_block + tb) % n_classes
-        oh_cls = (cls == _iota((1, n_classes), 1)).astype(jnp.float32)
-        acc += vals * oh_cls
-    out_ref[...] += acc
+    codes = codes_ref[...].astype(jnp.int32)
+    # the codes block is fetched ONCE and walked by the whole resident
+    # tree block at once (paper: one record stream shared by all BUs):
+    # a (RBLK, TBLK) node matrix advances one level per hop, two gathers
+    # per hop for every resident tree together
+    table_t = table_ref[...].T                                # (N_int, TBLK)
+    node = _walk_levels(codes, table_t, depth, missing_bin)
+    leaf_t = leaf_ref[...].T                                  # (N_leaf, TBLK)
+    vals = jnp.take_along_axis(leaf_t, node - table_t.shape[0],
+                               axis=0)                        # (RBLK, TBLK)
+    # multi-class: round-major tree order, tree t owns margin column
+    # t % K; a one-hot class route folds the tree block into class
+    # columns (K == 1: a plain row-sum).  Zero-leaf padding trees
+    # contribute exactly 0.
+    tblk = table_t.shape[1]
+    t0 = pl.program_id(1) * trees_per_block
+    cls = (t0 + _iota((tblk, n_classes), 0)) % n_classes
+    oh_cls = (cls == _iota((tblk, n_classes), 1)).astype(jnp.float32)
+    out_ref[...] += lax.dot_general(vals, oh_cls, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("missing_bin", "depth",
@@ -164,15 +161,20 @@ def predict_ensemble_pallas(trees: TreeArrays, codes, *, missing_bin: int,
     """Batch inference: trees hold stacked (T, ...) arrays; codes (n, F).
 
     Grid = (record blocks, T / trees_per_block): each step holds a block
-    of ``trees_per_block`` tree tables resident in VMEM (paper: one tree
-    per BU, here a BU block per grid step) and accumulates into the
-    revisited output block — each record block read is amortized across
-    the whole tree block.  The ensemble is zero-padded (pass-through
-    trees with all-zero leaves) up to a multiple of ``trees_per_block``;
-    padding contributes exactly +0.0.  Returns (n,) float32 ensemble sums
-    — or (n, K) per-class margins when ``n_classes > 1`` (trees
-    round-major; tree t feeds class t % K via a one-hot column route, so
-    the walk itself is unchanged).
+    of ``trees_per_block`` packed int32 node tables resident in VMEM
+    (paper: one tree per BU, here a BU block per grid step) and
+    accumulates into the revisited output block — each record block read
+    is amortized across the whole tree block, and the block walks as ONE
+    (RBLK, TBLK) node matrix (two gathers per level) rather than
+    ``trees_per_block`` serial per-tree chains.  The ensemble is
+    zero-padded (pass-through trees with all-zero leaves) up to a
+    multiple of ``trees_per_block``; padding contributes exactly +0.0.
+    Requires fewer than 2**15 code columns (the int32 table pack — the
+    repo's binning invariant; ``gbdt`` renumbers wider matrices before
+    dispatching here).  Returns (n,) float32 ensemble sums — or (n, K)
+    per-class margins when ``n_classes > 1`` (trees round-major; tree t
+    feeds class t % K via a one-hot column route, so the walk itself is
+    unchanged).
     """
     n, n_cols = codes.shape
     T = trees.feature.shape[0]
@@ -192,9 +194,7 @@ def predict_ensemble_pallas(trees: TreeArrays, codes, *, missing_bin: int,
     np_ = codes.shape[0]
     n_int = trees.feature.shape[1]
     n_leaf = trees.leaf_value.shape[1]
-    tables = jax.vmap(lambda f, t, c, d: pack_node_table(
-        TreeArrays(f, t, c, d, jnp.zeros((n_leaf,)))))(
-            trees.feature, trees.threshold, trees.is_cat, trees.default_left)
+    tables = pack_node_table(trees)                           # (T', N_int)
     out = pl.pallas_call(
         functools.partial(_ensemble_kernel, depth=depth,
                           missing_bin=missing_bin, n_classes=n_classes,
@@ -202,11 +202,11 @@ def predict_ensemble_pallas(trees: TreeArrays, codes, *, missing_bin: int,
         grid=(np_ // rblk, (T + t_pad) // tblk),
         in_specs=[
             pl.BlockSpec((rblk, n_cols), lambda ri, ti: (ri, 0)),
-            pl.BlockSpec((tblk, n_int, 4), lambda ri, ti: (ti, 0, 0)),
-            pl.BlockSpec((tblk, n_leaf, 1), lambda ri, ti: (ti, 0, 0)),
+            pl.BlockSpec((tblk, n_int), lambda ri, ti: (ti, 0)),
+            pl.BlockSpec((tblk, n_leaf), lambda ri, ti: (ti, 0)),
         ],
         out_specs=pl.BlockSpec((rblk, n_classes), lambda ri, ti: (ri, 0)),
         out_shape=jax.ShapeDtypeStruct((np_, n_classes), jnp.float32),
         interpret=interpret,
-    )(codes, tables, trees.leaf_value[:, :, None])
+    )(codes, tables, trees.leaf_value.astype(jnp.float32))
     return out[:n, 0] if n_classes == 1 else out[:n]

@@ -1,0 +1,260 @@
+"""The packed field-group layout (paper §II/§III-B): 4-bit nibble packing
+round-trips losslessly, halves the resident binned matrix, and every
+training/inference consumer — all six histogram strategies, K in {1, 3},
+monolithic, chunked and distributed growers — stays bit-equal to the
+plain uint8 path."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api.plan import ExecutionPlan, HIST_STRATEGIES
+from repro.core.binning import (PACK_MAX_BINS, Binner, PackedCodes,
+                                bin_dataset, pack_nibbles, pack_nibbles_np,
+                                unpack_nibbles)
+from repro.core.gbdt import GBDTConfig, train, train_streaming
+from repro.data.pipeline import (ArraySource, BinnedShardSource,
+                                 write_binned_shards)
+from repro.kernels import ops
+
+
+# --------------------------------------------------------------------------
+# pack/unpack round-trip properties
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(1, 1), (7, 3), (16, 8), (33, 15),
+                                   (5, 1), (2, 17), (128, 28)])
+def test_pack_roundtrip_all_widths(shape):
+    """Every field width (even and ragged-odd) round-trips exactly,
+    including the missing code (the top bin, 15)."""
+    rng = np.random.default_rng(hash(shape) % 2**32)
+    codes = rng.integers(0, 16, size=shape, dtype=np.uint8)
+    codes.flat[0] = 15                                # the missing bin
+    n = shape[-1]
+    packed = pack_nibbles(jnp.asarray(codes))
+    assert packed.shape[-1] == (n + 1) // 2
+    np.testing.assert_array_equal(
+        np.asarray(unpack_nibbles(packed, n)), codes)
+    # numpy twin agrees with the jnp primitive bit for bit
+    np.testing.assert_array_equal(pack_nibbles_np(codes),
+                                  np.asarray(packed))
+
+
+def test_packed_codes_container():
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 16, size=(41, 9), dtype=np.uint8)
+    pc = PackedCodes.pack_np(codes)
+    assert pc.shape == (41, 9)
+    assert pc.nbytes == 41 * 5                        # ceil(9 / 2) bytes/row
+    np.testing.assert_array_equal(np.asarray(pc.unpack()), codes)
+    # leading-axis gather preserves the packed form
+    idx = np.array([3, 3, 40, 0])
+    np.testing.assert_array_equal(np.asarray(pc[idx].unpack()), codes[idx])
+    # pytree: flows through jit with the logical width as static aux
+    out = jax.jit(lambda p: p.unpack())(pc)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+def test_pack_rejects_wide_bins():
+    with pytest.raises(ValueError):
+        bin_dataset(np.random.default_rng(1).normal(size=(32, 3)),
+                    max_bins=64, packed=True)
+
+
+# --------------------------------------------------------------------------
+# resident-layout accounting
+# --------------------------------------------------------------------------
+def test_resident_bytes_halve():
+    """n_bins <= 16 auto-packs BOTH layouts: combined residency ~n*F
+    bytes instead of 2*n*F (paper Table II's compressed representation)."""
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(512, 10)).astype(np.float32)
+    dp = bin_dataset(X, max_bins=PACK_MAX_BINS)
+    du = bin_dataset(X, max_bins=PACK_MAX_BINS, packed=False)
+    assert isinstance(dp.codes, PackedCodes)
+    assert isinstance(dp.codes_cm, PackedCodes)
+    packed_bytes = dp.codes.nbytes + dp.codes_cm.nbytes
+    plain_bytes = du.codes.nbytes + du.codes_cm.nbytes
+    assert plain_bytes == 2 * 512 * 10
+    assert packed_bytes <= plain_bytes // 2 + 512 + 10   # ceil slack only
+    # wider binnings never pack implicitly
+    d64 = bin_dataset(X, max_bins=64)
+    assert not isinstance(d64.codes, PackedCodes)
+
+
+def test_chunk_rows_reflects_packing():
+    """The out-of-core budget model charges 1 byte/field when packed,
+    2 bytes (codes + chunk-local transpose) when not."""
+    F, K = 20, 3
+    packed = ExecutionPlan(packed_codes=True).chunk_rows(F, K)
+    plain = ExecutionPlan(packed_codes=False).chunk_rows(F, K)
+    budget = ExecutionPlan.DEFAULT_CHUNK_BYTES
+    assert plain == max(256, budget // (2 * F + 12 * K))
+    assert packed == max(256, budget // (F + 12 * K))
+    assert packed > plain
+
+
+# --------------------------------------------------------------------------
+# bit-equality: histograms across every strategy x K
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", HIST_STRATEGIES)
+@pytest.mark.parametrize("K", [1, 3])
+def test_histogram_bit_equal_packed(strategy, K):
+    rng = np.random.default_rng(7)
+    n, F, n_bins, nn = 257, 9, 16, 4
+    codes = rng.integers(0, n_bins, size=(n, F), dtype=np.uint8)
+    g = rng.normal(size=(K, n)).astype(np.float32)
+    h = rng.uniform(0.5, 2.0, size=(K, n)).astype(np.float32)
+    node = rng.integers(0, nn, size=(K, n)).astype(np.int32)
+    if K == 1:
+        g, h, node = g[0], h[0], node[0]
+    plan = ExecutionPlan(hist_strategy=strategy).resolved()
+    ref = ops.build_histogram(jnp.asarray(codes), jnp.asarray(g),
+                              jnp.asarray(h), jnp.asarray(node),
+                              n_nodes=nn, n_bins=n_bins, plan=plan)
+    got = ops.build_histogram(PackedCodes.pack_np(codes), jnp.asarray(g),
+                              jnp.asarray(h), jnp.asarray(node),
+                              n_nodes=nn, n_bins=n_bins, plan=plan)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+# --------------------------------------------------------------------------
+# bit-equality: end-to-end training, monolithic + chunked
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("objective,K", [("binary:logistic", None),
+                                         ("multi:softmax", 3)])
+def test_train_bit_equal_packed(objective, K):
+    rng = np.random.default_rng(11)
+    X = rng.normal(size=(500, 8)).astype(np.float32)
+    X[rng.random(X.shape) < 0.04] = np.nan
+    if K is None:
+        y = (X[:, 0] > 0).astype(np.float32)
+    else:
+        y = rng.integers(0, K, size=500).astype(np.float32)
+    dp = bin_dataset(X, max_bins=16)
+    du = bin_dataset(X, max_bins=16, packed=False)
+    cfg = GBDTConfig(n_trees=4, max_depth=4, objective=objective,
+                     n_classes=K)
+    rp, ru = train(cfg, dp, y), train(cfg, du, y)
+    assert rp.history["train_loss"] == ru.history["train_loss"]
+    for f in rp.model.trees._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rp.model.trees, f)),
+            np.asarray(getattr(ru.model.trees, f)))
+    # predictions agree regardless of which layout feeds inference
+    np.testing.assert_array_equal(
+        np.asarray(rp.model.predict_margin(dp.codes)),
+        np.asarray(ru.model.predict_margin(du.codes)))
+
+
+def test_train_streaming_bit_equal_packed():
+    """The chunked grower consumes PackedCodes chunks (half the host ->
+    device bytes) and reproduces the uint8 stream bit for bit — and both
+    match the monolithic grower."""
+    rng = np.random.default_rng(13)
+    X = rng.normal(size=(600, 7)).astype(np.float32)
+    y = (X[:, 0] - X[:, 3] > 0).astype(np.float32)
+    src = ArraySource(X, y)
+    binner = Binner(max_bins=16).fit(X)
+    cfg = GBDTConfig(n_trees=3, max_depth=3, objective="binary:logistic")
+    rp = train_streaming(cfg, src, binner, y, chunk_rows=144)
+    ru = train_streaming(cfg, src, binner, y, chunk_rows=144,
+                         plan=ExecutionPlan(packed_codes=False))
+    rm = train(cfg, binner.transform(X), y)
+    assert rp.history["train_loss"] == ru.history["train_loss"]
+    assert rp.history["train_loss"] == rm.history["train_loss"]
+
+
+def test_train_streaming_rejects_packed_wide_bins():
+    rng = np.random.default_rng(17)
+    X = rng.normal(size=(300, 5)).astype(np.float32)
+    y = (X[:, 0] > 0).astype(np.float32)
+    binner = Binner(max_bins=64).fit(X)
+    cfg = GBDTConfig(n_trees=1, max_depth=2, objective="binary:logistic")
+    with pytest.raises(ValueError, match="packed"):
+        train_streaming(cfg, ArraySource(X, y), binner, y,
+                        plan=ExecutionPlan(packed_codes=True))
+
+
+# --------------------------------------------------------------------------
+# bit-equality: distributed grower
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [403, 408])   # odd/even per-shard parity
+def test_train_distributed_bit_equal_packed(n):
+    from repro.distributed.trainer import (data_parallel_mesh,
+                                           train_distributed)
+    rng = np.random.default_rng(19)
+    X = rng.normal(size=(n, 6)).astype(np.float32)
+    y = (X[:, 0] + X[:, 1] > 0).astype(np.float32)
+    dp = bin_dataset(X, max_bins=16)
+    du = bin_dataset(X, max_bins=16, packed=False)
+    cfg = GBDTConfig(n_trees=3, max_depth=3, objective="binary:logistic")
+    mesh = data_parallel_mesh(jax.devices())
+    rp = train_distributed(cfg, dp, y, mesh=mesh)
+    ru = train_distributed(cfg, du, y, mesh=mesh)
+    assert rp.history["train_loss"] == ru.history["train_loss"]
+    for f in rp.model.trees._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rp.model.trees, f)),
+            np.asarray(getattr(ru.model.trees, f)))
+
+
+def test_distributed_histogram_accepts_packed():
+    from repro.distributed.sharding import distributed_histogram
+    from repro.launch.mesh import make_mesh
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        pytest.skip("needs >= 2 devices")
+    mesh = make_mesh((n_dev, 1), ("data", "model"))
+    rng = np.random.default_rng(23)
+    n, F, n_bins, nn = 8 * n_dev, 4, 16, 2
+    codes = rng.integers(0, n_bins, size=(n, F), dtype=np.uint8)
+    g = rng.normal(size=(n,)).astype(np.float32)
+    h = np.ones((n,), np.float32)
+    node = rng.integers(0, nn, size=(n,)).astype(np.int32)
+    ref = distributed_histogram(mesh, jnp.asarray(codes), jnp.asarray(g),
+                                jnp.asarray(h), jnp.asarray(node),
+                                n_nodes=nn, n_bins=n_bins)
+    got = distributed_histogram(mesh, PackedCodes.pack_np(codes),
+                                jnp.asarray(g), jnp.asarray(h),
+                                jnp.asarray(node), n_nodes=nn,
+                                n_bins=n_bins)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+# --------------------------------------------------------------------------
+# packed binned npz shards
+# --------------------------------------------------------------------------
+def test_binned_shards_roundtrip_packed(tmp_path):
+    rng = np.random.default_rng(29)
+    X = rng.normal(size=(330, 6)).astype(np.float32)
+    y = (X[:, 0] > 0).astype(np.float32)
+    binner = Binner(max_bins=16).fit(X)
+    paths = write_binned_shards(str(tmp_path), ArraySource(X, y), binner,
+                                rows_per_shard=128)
+    assert len(paths) == 3
+    src = BinnedShardSource(str(tmp_path))
+    assert src.packed and src.n_fields == 6
+    expect = binner.transform_codes(X)
+    got, got_y = [], []
+    for chunk, yc in src.chunks(100):
+        assert isinstance(chunk, PackedCodes)
+        got.append(np.asarray(chunk.unpack()))
+        got_y.append(yc)
+    np.testing.assert_array_equal(np.concatenate(got), expect)
+    np.testing.assert_array_equal(np.concatenate(got_y), y)
+    # shard files hold half the code bytes of the uint8 encoding
+    code_bytes = sum(np.load(p)["codes"].nbytes for p in paths)
+    assert code_bytes == 330 * 3                      # ceil(6/2) per row
+
+
+def test_binned_shards_plain_when_wide(tmp_path):
+    rng = np.random.default_rng(31)
+    X = rng.normal(size=(100, 4)).astype(np.float32)
+    binner = Binner(max_bins=64).fit(X)
+    write_binned_shards(str(tmp_path), ArraySource(X), binner,
+                        rows_per_shard=64)
+    src = BinnedShardSource(str(tmp_path))
+    assert not src.packed
+    chunks = [c for c, _ in src.chunks(64)]
+    np.testing.assert_array_equal(np.concatenate(chunks),
+                                  binner.transform_codes(X))

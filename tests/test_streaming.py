@@ -309,3 +309,40 @@ def test_train_streaming_direct_api():
     in_mem = train(cfg, data, y)
     np.testing.assert_allclose(res.history["train_loss"],
                                in_mem.history["train_loss"], rtol=1e-5)
+
+
+def test_npz_shard_source_rejects_mixed_widths(tmp_path):
+    """chunks() validates every shard's X width and names the offender
+    (a silent width change would bin garbage mid-pass)."""
+    np.savez(tmp_path / "a.npz", X=np.zeros((4, 3), np.float32))
+    np.savez(tmp_path / "b.npz", X=np.zeros((4, 5), np.float32))
+    src = NpzShardSource(str(tmp_path))
+    with pytest.raises(ValueError, match="b.npz"):
+        list(src.chunks(10))
+
+
+def test_npz_shard_source_rejects_misaligned_labels(tmp_path):
+    np.savez(tmp_path / "a.npz", X=np.zeros((4, 3), np.float32),
+             y=np.zeros((3,), np.float32))
+    with pytest.raises(ValueError, match="a.npz"):
+        list(NpzShardSource(str(tmp_path)).chunks(10))
+
+
+def test_prefetch_iterator_close_releases_worker():
+    """Abandoning the stream early (break/exception) must not leave the
+    put-blocked worker thread parked holding batches."""
+    from repro.data.pipeline import PrefetchIterator
+    cleaned = []
+
+    def gen():
+        try:
+            for i in range(1000):
+                yield {"i": np.int32(i)}
+        finally:
+            cleaned.append(True)
+
+    with PrefetchIterator(gen(), depth=2) as it:
+        next(it)
+    assert cleaned == [True]                 # generator finally ran
+    assert not it._thread.is_alive()
+    it.close()                               # idempotent

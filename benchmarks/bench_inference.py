@@ -14,6 +14,13 @@ resident trees vs T re-reads of the stream):
                                  request sizes through the compile-once
                                  predict cache; derived reports p50/p99
                                  latency and sustained rows/sec
+  * ``serve_qps_mixed``        — the serving daemon end-to-end: two
+                                 tenants in one ``ModelRegistry``, ragged
+                                 requests coalescing under deadline slack;
+                                 sustained rows/sec + worst-tenant p99
+  * ``serve_hotswap_p99``      — the daemon with a mid-run ``publish()``
+                                 hot-swap; p99 must stay bounded and the
+                                 swap must cost zero drops / zero retraces
 
 plus the paper's depth-effect lanes (shallow IoT-like vs deep typical)
 and its modeled Booster speedup.
@@ -127,6 +134,91 @@ def _serve_lane(rng, n_cols, n_bins, T, depth, base_batch, rows):
     return rows
 
 
+def _daemon_pipeline(seed, T, depth, n_cols, n_bins):
+    """Synthetic binner+ensemble bundle for the daemon lanes (raw-matrix
+    requests need a binner in front of the forest)."""
+    from repro.core.binning import Binner
+    from repro.core.gbdt import GBDTModel
+    from repro.core.inference import GBDTPipeline
+
+    rng = np.random.default_rng(seed)
+    binner = Binner(n_bins).fit(
+        rng.normal(size=(512, n_cols)).astype(np.float32))
+    model = GBDTModel(trees=_ensemble(rng, T, depth, n_cols, n_bins),
+                      base_margin=0.0, objective="reg:squarederror",
+                      missing_bin=n_bins - 1, n_fields=n_cols,
+                      max_depth=depth)
+    return GBDTPipeline(binner=binner, model=model)
+
+
+def _daemon_lanes(rng, n_cols, n_bins, T, depth, base_batch, rows,
+                  n_requests: int = 12):
+    """The serving daemon end-to-end (Server + ModelRegistry over the
+    predict cache): mixed two-tenant QPS, and hot-swap tail latency."""
+    from repro.api import ModelRegistry, Server
+
+    plan = ExecutionPlan.auto()
+    sizes = [max(1, s) for s in (base_batch, base_batch // 2,
+                                 (3 * base_batch) // 4, base_batch // 3)]
+    mb = max(sizes)
+
+    def request(i):
+        X = rng.normal(size=(sizes[i % len(sizes)], n_cols)) \
+               .astype(np.float32)
+        X[rng.random(X.shape) < 0.02] = np.nan
+        return X
+
+    # -- serve_qps_mixed: two tenants, ragged coalescing traffic ----------
+    reg = ModelRegistry(plan)
+    names = ("a", "b")
+    for i, name in enumerate(names):
+        reg.publish(name, _daemon_pipeline(10 + i, T, depth, n_cols,
+                                           n_bins))
+    with Server(reg, max_batch=mb, default_slack_ms=2.0) as srv:
+        for name in names:
+            srv.warmup(name)
+        warm = {name: srv.stats()[name]["traces"] for name in names}
+        t0 = time.perf_counter()
+        pending = [srv.submit(names[i % 2], request(i))
+                   for i in range(n_requests)]
+        for req in pending:
+            req.result(timeout=600)
+        wall = time.perf_counter() - t0
+        stats = srv.stats()
+    total = sum(r.n_rows for r in pending)
+    p99 = max(stats[name]["p99_ms"] for name in names)
+    retraces = sum(stats[name]["traces"] - warm[name] for name in names)
+    rows.append(csv_row(
+        "serve_qps_mixed", wall / n_requests * 1e6,
+        f"rows_per_sec={total/wall:.0f};p99_ms={p99:.2f};models=2;"
+        f"requests={n_requests};retraces_warm={retraces};trees={T}"))
+
+    # -- serve_hotswap_p99: publish a new version mid-load ----------------
+    reg = ModelRegistry(plan)
+    reg.publish("m", _daemon_pipeline(20, T, depth, n_cols, n_bins))
+    with Server(reg, max_batch=mb, default_slack_ms=2.0) as srv:
+        srv.warmup("m")
+        warm_m = srv.stats()["m"]["traces"]
+        t0 = time.perf_counter()
+        pending = []
+        for i in range(n_requests):
+            if i == n_requests // 2:   # same T/depth -> same shape buckets
+                reg.publish("m", _daemon_pipeline(21, T, depth, n_cols,
+                                                  n_bins))
+            pending.append(srv.submit("m", request(i)))
+        for req in pending:
+            req.result(timeout=600)
+        wall = time.perf_counter() - t0
+        stats = srv.stats()["m"]
+    total = sum(r.n_rows for r in pending)
+    rows.append(csv_row(
+        "serve_hotswap_p99", stats["p99_ms"] * 1e3,
+        f"rows_per_sec={total/wall:.0f};p99_ms={stats['p99_ms']:.2f};"
+        f"dropped={stats['dropped']};"
+        f"retraces_warm={stats['traces'] - warm_m};version=2;trees={T}"))
+    return rows
+
+
 def run(n: int = 20_000, T: int = 200, n_cols: int = 28, n_bins: int = 64,
         depth: int = 6):
     rows = []
@@ -137,6 +229,8 @@ def run(n: int = 20_000, T: int = 200, n_cols: int = 28, n_bins: int = 64,
     _engine_lanes(rng, codes, n, n_cols, n_bins, T, depth, rows)
     _serve_lane(rng, n_cols, n_bins, T, depth, base_batch=max(256, n // 8),
                 rows=rows)
+    _daemon_lanes(rng, n_cols, n_bins, T, depth,
+                  base_batch=max(256, n // 8), rows=rows)
 
     # the paper's depth effect, now on the batched engine
     for avg_depth, tag in ((3, "shallow_iot_like"), (6, "deep_typical")):

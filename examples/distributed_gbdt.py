@@ -19,6 +19,7 @@ import tempfile          # noqa: E402
 import jax               # noqa: E402
 import numpy as np       # noqa: E402
 
+from repro.api import ExecutionPlan                    # noqa: E402
 from repro.core import GBDTConfig, bin_dataset, train  # noqa: E402
 from repro.data import make_tabular                    # noqa: E402
 from repro.distributed.fault import FaultInjector      # noqa: E402
@@ -31,17 +32,17 @@ def main():
     print(f"devices: {len(jax.devices())}")
     X, y, _ = make_tabular(8192, 8, 0, task="regression", seed=0)
     data = bin_dataset(X, max_bins=32)
-    cfg = GBDTConfig(n_trees=12, max_depth=5, subsample=0.8, seed=7,
-                     hist_strategy="scatter")
+    cfg = GBDTConfig(n_trees=12, max_depth=5, subsample=0.8, seed=7)
+    plan = ExecutionPlan(hist_strategy="scatter").resolved()
 
     # single-device reference fit (per-op trainer)
-    ref = train(cfg, data, y)
+    ref = train(cfg, data, y, plan=plan)
     pref = np.asarray(ref.model.predict(data))
 
     # ① data-parallel fit on all 8 shards: per-shard histograms, one
     #   psum per level, whole round = one jitted dispatch per shard
     mesh = data_parallel_mesh(jax.devices())
-    res = train_distributed(cfg, data, y, mesh=mesh)
+    res = train_distributed(cfg, data, y, mesh=mesh, plan=plan)
     p8 = np.asarray(res.model.predict(data))
     print(f"8-shard fit: {res.model.n_trees} trees, "
           f"final loss {res.history['train_loss'][-1]:.5f}")
@@ -62,7 +63,8 @@ def main():
             checkpoint_dir=d, checkpoint_every=2,
             fault_injector=FaultInjector(fail_at_steps=(5,)),
             survivors=lambda devs: devs[:-2])
-        hurt = train_distributed(cfg, data, y, mesh=mesh, dist=dist)
+        hurt = train_distributed(cfg, data, y, mesh=mesh, dist=dist,
+                                 plan=plan)
     print(f"injected fault: restarts={hurt.stats['restarts']}, "
           f"remesh_events={hurt.stats['remesh_events']}, "
           f"finished on {hurt.stats['n_shards']} shards")

@@ -10,6 +10,9 @@ Public surface:
   * :func:`save` / :func:`load` (+ ``save_checkpoint`` / ``load_checkpoint``)
     — the one serialization story: npz + json meta, shared by estimators,
     pipelines and training checkpoints.
+  * :class:`Server` / :class:`ModelRegistry` / :class:`Request` — the
+    serving daemon: deadline-aware request batching over the compile-once
+    inference engine, multi-model tenancy, zero-retrace hot-swap.
 
 Only :mod:`repro.api.plan` is imported eagerly — the kernels layer depends
 on it, so the estimator/serialize modules (which depend on the kernels
@@ -40,6 +43,11 @@ _LAZY = {
     "train_distributed": ("repro.distributed.trainer", "train_distributed"),
     "data_parallel_mesh": ("repro.distributed.trainer",
                            "data_parallel_mesh"),
+    # the serving daemon (deadline batching + hot-swap model registry)
+    "Server": ("repro.serving", "Server"),
+    "ModelRegistry": ("repro.serving", "ModelRegistry"),
+    "Request": ("repro.serving", "Request"),
+    "warmup_buckets": ("repro.serving", "warmup_buckets"),
 }
 
 __all__ = ["ExecutionPlan", "resolve_plan"] + sorted(_LAZY)

@@ -151,14 +151,46 @@ class ExecutionPlan:
         return cls(mesh=mesh, **overrides).resolved()
 
     @classmethod
-    def from_config(cls, config, mesh: Optional[jax.sharding.Mesh] = None
+    def from_config(cls, config=None,
+                    mesh: Optional[jax.sharding.Mesh] = None, *,
+                    base: Optional["ExecutionPlan"] = None,
+                    distributed: bool = False,
+                    hist_strategy: Optional[str] = None
                     ) -> "ExecutionPlan":
-        """Lift the legacy per-step strategy strings off a ``GBDTConfig``."""
-        return cls(hist_strategy=config.hist_strategy,
-                   partition_strategy=config.partition_strategy,
-                   traversal_strategy=config.traversal_strategy,
-                   host_offload_split=config.host_offload_split,
-                   mesh=mesh).resolved()
+        """Lift legacy config-level strategy selections into one plan.
+
+        Two spellings fold here (both deprecated at their call sites,
+        kept for one release):
+
+        * ``from_config(config)`` — lift the per-step strategy strings
+          off a ``GBDTConfig``.
+        * ``from_config(base=plan, hist_strategy=..., distributed=True)``
+          — the distributed growers' historical defaults (previously
+          ``distributed/sharding._legacy_distributed_plan``): no plan
+          means scatter histograms regardless of backend; an explicit
+          loose ``hist_strategy`` overrides the plan's field; and
+          ``distributed=True`` pins the partition step to the reference
+          kernel — it runs inside shard_map'd local functions where the
+          Pallas path is untested, and the pre-plan code hardcoded it.
+
+        The result is always :meth:`resolved`.
+        """
+        if config is not None:
+            if base is not None or hist_strategy is not None:
+                raise ValueError("pass either config or base/hist_strategy,"
+                                 " not both")
+            base = cls(hist_strategy=config.hist_strategy,
+                       partition_strategy=config.partition_strategy,
+                       traversal_strategy=config.traversal_strategy,
+                       host_offload_split=config.host_offload_split,
+                       mesh=mesh)
+        elif base is None:
+            base = (cls(hist_strategy=hist_strategy or "scatter", mesh=mesh)
+                    if distributed else cls(mesh=mesh))
+        plan = resolve_plan(base, hist_strategy=hist_strategy)
+        if distributed:
+            plan = plan.replace(partition_strategy="reference")
+        return plan
 
     def resolved(self) -> "ExecutionPlan":
         """Replace every ``"auto"`` / ``None`` with the backend default."""

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -49,7 +50,9 @@ class GBDTConfig:
     #                                  loss accumulate, margins donated,
     #                                  history fetched every log_every rounds
     log_every: int = 10              # host-fetch / verbose cadence (rounds)
-    hist_strategy: str = "auto"      # see repro.kernels.ops
+    # deprecated per-step strategy strings — one release path; set an
+    # ExecutionPlan (train(plan=...) / fit(plan=...)) instead
+    hist_strategy: str = "auto"      # see repro.api.plan.HIST_STRATEGIES
     partition_strategy: str = "auto"
     traversal_strategy: str = "auto"
     host_offload_split: bool = False  # the paper's step-② offload
@@ -58,6 +61,16 @@ class GBDTConfig:
     seed: int = 0
 
     def __post_init__(self):
+        if (self.hist_strategy != "auto"
+                or self.partition_strategy != "auto"
+                or self.traversal_strategy != "auto"
+                or self.host_offload_split):
+            warnings.warn(
+                "legacy strategy-string kwargs are deprecated; "
+                "GBDTConfig's hist_strategy / partition_strategy / "
+                "traversal_strategy / host_offload_split fields move to "
+                "ExecutionPlan — pass plan=ExecutionPlan(...) to "
+                "train()/fit() instead", DeprecationWarning, stacklevel=3)
         if self.max_depth < 1 or self.max_depth > 10:
             raise ValueError("max_depth must be in [1, 10]")
         if self.grow_policy not in ("depthwise", "lossguide"):
@@ -122,21 +135,34 @@ class GBDTModel:
 
     def predict_margin(self, codes, strategy: Optional[str] = None, *,
                        plan: Optional[ExecutionPlan] = None,
-                       cached: bool = False) -> jax.Array:
+                       cached: Optional[bool] = None,
+                       mode: Optional[str] = None,
+                       cache=None) -> jax.Array:
         """Raw ensemble margins for binned ``codes``.
 
-        ``cached=True`` routes through the compile-once predict engine
-        (:func:`repro.core.inference.predict_margin_cached`): rows and
-        tree count are padded to power-of-two buckets so repeated calls
-        with varying batch sizes reuse one compiled step per bucket —
-        the serving path.  ``cached=False`` dispatches directly (exact
-        request shapes; what training-internal callers want).
+        ``mode`` is the ONE dispatch knob for the predict surface:
+
+        * ``"direct"`` (default) — dispatch on the exact request shape;
+          what training-internal callers want.
+        * ``"cached"`` — route through the compile-once predict engine
+          (:func:`repro.core.inference.predict_margin_cached`): rows and
+          tree count are padded to power-of-two buckets so repeated calls
+          with varying batch sizes reuse one compiled step per bucket —
+          the serving path.  ``cache`` (a
+          :class:`~repro.core.inference.PredictCache`) selects the step
+          namespace; ``None`` uses the process-wide default.
+
+        The boolean ``cached=`` flag and the positional ``strategy``
+        string are deprecated spellings of the same choices (see
+        ``docs/api.md`` for the migration table).
         """
         codes = codes.codes if isinstance(codes, BinnedDataset) else codes
         plan = self._resolve_plan(plan, strategy)
-        if cached and plan.mesh is None:
+        mode = self._resolve_mode(mode, cached)
+        if mode == "cached" and plan.mesh is None:
             from repro.core.inference import predict_margin_cached
-            return predict_margin_cached(self, codes, plan=plan)
+            return predict_margin_cached(self, codes, plan=plan,
+                                         cache=cache)
         out = ops.predict_ensemble(self.trees, codes,
                                    missing_bin=self.missing_bin,
                                    depth=self.max_depth, plan=plan,
@@ -147,17 +173,39 @@ class GBDTModel:
 
     def predict(self, codes, strategy: Optional[str] = None, *,
                 plan: Optional[ExecutionPlan] = None,
-                cached: bool = False) -> jax.Array:
+                cached: Optional[bool] = None,
+                mode: Optional[str] = None, cache=None) -> jax.Array:
+        """Transformed predictions — same surface as :meth:`predict_margin`."""
         return self.loss.transform(
-            self.predict_margin(codes, strategy, plan=plan, cached=cached))
+            self.predict_margin(codes, strategy, plan=plan, cached=cached,
+                                mode=mode, cache=cache))
+
+    @staticmethod
+    def _resolve_mode(mode: Optional[str],
+                      cached: Optional[bool]) -> str:
+        if cached is not None:
+            warnings.warn(
+                'cached= is deprecated; use mode="cached" or '
+                'mode="direct" instead', DeprecationWarning, stacklevel=3)
+            if mode is None:
+                mode = "cached" if cached else "direct"
+        mode = mode if mode is not None else "direct"
+        if mode not in ("cached", "direct"):
+            raise ValueError(f"unknown predict mode {mode!r}; choose "
+                             "'cached' or 'direct'")
+        return mode
 
     @staticmethod
     def _resolve_plan(plan: Optional[ExecutionPlan],
                       strategy: Optional[str]) -> ExecutionPlan:
-        """Model-level shim: the positional ``strategy`` string predates
-        plans and stays supported (silently) at this layer."""
+        """Model-level lifting of the pre-plan positional ``strategy``
+        string (deprecated — one release path, then plans only)."""
         base = plan if plan is not None else ExecutionPlan()
         if strategy is not None and strategy != "auto":
+            warnings.warn(
+                "legacy strategy-string kwargs are deprecated; pass "
+                "plan=ExecutionPlan(traversal_strategy=...) instead",
+                DeprecationWarning, stacklevel=4)
             base = base.replace(traversal_strategy=strategy)
         return base.resolved()
 

@@ -24,7 +24,8 @@
 from __future__ import annotations
 
 import dataclasses
-import functools
+import threading
+import warnings
 from typing import Dict, Optional
 
 import jax
@@ -45,8 +46,6 @@ from repro.launch.mesh import data_axes
 # the compile-once predict engine (shape-bucketed jit cache)
 # --------------------------------------------------------------------------
 ROW_BUCKET_FLOOR = 128      # smallest row-padding bucket (pow2 above this)
-
-_TRACE_COUNT = [0]          # incremented at TRACE time inside the jit
 
 
 def bucket_pow2(x: int, floor: int = 1) -> int:
@@ -75,20 +74,19 @@ def _inference_plan_key(plan: ExecutionPlan) -> ExecutionPlan:
                          trees_per_block=plan.trees_per_block).resolved()
 
 
-@functools.lru_cache(maxsize=None)
-def _predict_step(plan: ExecutionPlan, depth: int, n_classes: int,
-                  missing_bin: int):
+def _build_predict_step(plan: ExecutionPlan, depth: int, n_classes: int,
+                        missing_bin: int, trace_count):
     """One jitted predict step per (plan, depth, K, missing-bin) key.
 
     The jit's own shape cache then holds one executable per (row bucket,
-    tree bucket, field count) — the trace counter below counts exactly
-    those compilations, which is what the serving loop asserts on.  The
-    output accumulator arrives pre-filled with the base margin and is
-    donated where the backend supports aliasing (TPU/GPU), so the margin
-    add updates it in place.
+    tree bucket, field count) — ``trace_count[0]`` counts exactly those
+    compilations, which is what the serving loop asserts on.  The output
+    accumulator arrives pre-filled with the base margin and is donated
+    where the backend supports aliasing (TPU/GPU), so the margin add
+    updates it in place.
     """
     def impl(out, codes, trees):
-        _TRACE_COUNT[0] += 1               # trace-time side effect only
+        trace_count[0] += 1                # trace-time side effect only
         m = ops.predict_ensemble(trees, codes, missing_bin=missing_bin,
                                  depth=depth, plan=plan,
                                  n_classes=n_classes)
@@ -96,6 +94,64 @@ def _predict_step(plan: ExecutionPlan, depth: int, n_classes: int,
 
     donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
     return jax.jit(impl, donate_argnums=donate)
+
+
+class PredictCache:
+    """A namespace of compiled predict steps (the serving jit cache).
+
+    Each instance holds its own ``(plan, depth, K, missing-bin) -> jitted
+    step`` table plus hit/miss/trace counters, so multi-tenant serving can
+    key compiled executables *per model name*: two resident models never
+    evict each other's steps, a hot-swapped model version inherits its
+    predecessor's executables (zero retraces when the shape buckets
+    match — trees are traced arguments, not compile-time constants), and
+    ``ModelRegistry.unpublish`` drops exactly one model's compilations.
+
+    The module-level default instance backs :func:`predict_margin_cached`
+    when no ``cache=`` is passed (the single-model path), with
+    :func:`predict_cache_stats` / :func:`predict_cache_clear` as its
+    process-wide observability handles.  Thread-safe: serving worker
+    threads and off-hot-path warmup may use one instance concurrently.
+    """
+
+    def __init__(self):
+        self._steps = {}
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
+        self._traces = [0]          # shared with the jit closures
+
+    def step(self, plan: ExecutionPlan, depth: int, n_classes: int,
+             missing_bin: int):
+        key = (plan, depth, n_classes, missing_bin)
+        with self._lock:
+            fn = self._steps.get(key)
+            if fn is not None:
+                self._hits += 1
+                return fn
+            self._misses += 1
+        fn = _build_predict_step(plan, depth, n_classes, missing_bin,
+                                 self._traces)
+        with self._lock:
+            # two threads may race to build the same key; keep the first
+            return self._steps.setdefault(key, fn)
+
+    def stats(self) -> Dict[str, int]:
+        """``entries`` distinct (plan, depth, K) steps, ``traces`` total
+        XLA compilations across all shape buckets (the serving loop's
+        retrace counter)."""
+        with self._lock:
+            return {"entries": len(self._steps), "hits": self._hits,
+                    "misses": self._misses, "traces": self._traces[0]}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._steps.clear()
+            self._hits = self._misses = 0
+            self._traces[0] = 0
+
+
+_DEFAULT_CACHE = PredictCache()
 
 
 def _padded_trees(model: GBDTModel, n_total: int) -> TreeArrays:
@@ -110,7 +166,8 @@ def _padded_trees(model: GBDTModel, n_total: int) -> TreeArrays:
 
 def predict_margin_cached(model: GBDTModel, codes, *,
                           plan: Optional[ExecutionPlan] = None,
-                          n_rows: Optional[int] = None) -> jax.Array:
+                          n_rows: Optional[int] = None,
+                          cache: Optional[PredictCache] = None) -> jax.Array:
     """Ensemble margins through the compile-once engine.
 
     ``codes`` (or a :class:`BinnedDataset`) is padded up to a power-of-two
@@ -120,8 +177,11 @@ def predict_margin_cached(model: GBDTModel, codes, *,
     once per bucket and never again.  Bucketing is invisible in the
     results: padded rows are sliced off before returning and padded
     trees output exactly 0.  ``n_rows`` marks the real row count when
-    the caller already padded.
+    the caller already padded.  ``cache`` selects the step namespace
+    (multi-tenant serving keys one :class:`PredictCache` per model name);
+    ``None`` uses the process-wide default.
     """
+    cache = cache if cache is not None else _DEFAULT_CACHE
     plan = _inference_plan_key(
         (plan if plan is not None else ExecutionPlan()).resolved())
     codes = codes.codes if isinstance(codes, BinnedDataset) else codes
@@ -134,25 +194,22 @@ def predict_margin_cached(model: GBDTModel, codes, *,
         codes = jnp.pad(codes, ((0, row_bucket - codes.shape[0]), (0, 0)))
     K = model.n_classes
     trees = _padded_trees(model, bucket_trees(model.n_trees))
-    step = _predict_step(plan, model.max_depth, K, model.missing_bin)
+    step = cache.step(plan, model.max_depth, K, model.missing_bin)
     base = jnp.asarray(model.base_margin, jnp.float32)
     out0 = (jnp.full((row_bucket,), base, jnp.float32) if K == 1
             else jnp.zeros((row_bucket, K), jnp.float32) + base)
     return step(out0, codes, trees)[:n]
 
 
-def predict_cache_stats() -> Dict[str, int]:
-    """Observability for the predict cache: ``entries`` distinct
-    (plan, depth, K) steps, ``traces`` total XLA compilations across all
-    shape buckets (the serving loop's retrace counter)."""
-    info = _predict_step.cache_info()
-    return {"entries": info.currsize, "hits": info.hits,
-            "misses": info.misses, "traces": _TRACE_COUNT[0]}
+def predict_cache_stats(cache: Optional[PredictCache] = None
+                        ) -> Dict[str, int]:
+    """Observability for a predict cache (the process-wide default when
+    ``cache`` is None) — see :meth:`PredictCache.stats`."""
+    return (cache if cache is not None else _DEFAULT_CACHE).stats()
 
 
-def predict_cache_clear() -> None:
-    _predict_step.cache_clear()
-    _TRACE_COUNT[0] = 0
+def predict_cache_clear(cache: Optional[PredictCache] = None) -> None:
+    (cache if cache is not None else _DEFAULT_CACHE).clear()
 
 
 def sharded_predict(mesh: Mesh, model: GBDTModel, codes, *,
@@ -276,8 +333,24 @@ class GBDTPipeline:
     model: GBDTModel
 
     def predict_margin(self, X: np.ndarray, *,
-                       plan: Optional[ExecutionPlan] = None) -> jax.Array:
+                       plan: Optional[ExecutionPlan] = None,
+                       mode: str = "cached",
+                       cache: Optional[PredictCache] = None) -> jax.Array:
+        """Raw margins for a raw feature matrix.
+
+        ``mode="cached"`` (the serving default) row-pads to the
+        power-of-two bucket and dispatches through the compile-once
+        engine; ``mode="direct"`` bins and walks the exact request shape
+        (one-off calls that should not populate a jit cache).  ``cache``
+        selects the step namespace for the cached mode.
+        """
+        if mode not in ("cached", "direct"):
+            raise ValueError(f"unknown predict mode {mode!r}; choose "
+                             "'cached' or 'direct'")
         X = np.asarray(X, dtype=np.float32)
+        if mode == "direct":
+            codes = self.binner.transform_codes_device(X)
+            return self.model.predict_margin(codes, plan=plan)
         n = X.shape[0]
         row_bucket = bucket_pow2(n, ROW_BUCKET_FLOOR)
         if row_bucket != n:
@@ -286,15 +359,21 @@ class GBDTPipeline:
             X = np.pad(X, ((0, row_bucket - n), (0, 0)))
         codes = self.binner.transform_codes_device(X)
         return predict_margin_cached(self.model, codes, plan=plan,
-                                     n_rows=n)
+                                     n_rows=n, cache=cache)
 
     def predict(self, X: np.ndarray, strategy: Optional[str] = None, *,
-                plan: Optional[ExecutionPlan] = None) -> jax.Array:
+                plan: Optional[ExecutionPlan] = None,
+                mode: str = "cached",
+                cache: Optional[PredictCache] = None) -> jax.Array:
         base = plan if plan is not None else ExecutionPlan()
         if strategy is not None and strategy != "auto":
+            warnings.warn(
+                "legacy strategy-string kwargs are deprecated; pass "
+                "plan=ExecutionPlan(traversal_strategy=...) instead",
+                DeprecationWarning, stacklevel=2)
             base = base.replace(traversal_strategy=strategy)
         return self.model.loss.transform(
-            self.predict_margin(X, plan=base))
+            self.predict_margin(X, plan=base, mode=mode, cache=cache))
 
     def to_state(self) -> Dict:
         return {

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import functools
 import heapq
+import warnings
 from typing import Optional
 
 import jax
@@ -39,6 +40,21 @@ from repro.core import splits as splits_mod
 from repro.core.binning import PackedCodes
 from repro.kernels import ops
 from repro.kernels.ref import TreeArrays
+
+
+def _lift_loose_kwargs(plan: Optional[ExecutionPlan],
+                       **loose) -> ExecutionPlan:
+    """Resolve the growers' plan, lifting any legacy per-step loose kwargs
+    (``hist_strategy=`` etc.) into it with a deprecation warning — one
+    release path before the growers take ``plan=`` only."""
+    passed = sorted(k for k, v in loose.items()
+                    if v is not None and v != "auto" and v is not False)
+    if passed:
+        warnings.warn(
+            "legacy strategy-string kwargs are deprecated; pass "
+            f"plan=ExecutionPlan({', '.join(f'{k}=...' for k in passed)}) "
+            "instead", DeprecationWarning, stacklevel=3)
+    return resolve_plan(plan, **loose)
 
 
 def _gather_fields(codes_cm, idx):
@@ -64,32 +80,29 @@ def fit_tree(codes, codes_cm, g, h, *, depth: int, n_bins: int,
     codes: (n, F) uint8 row-major (step-① input);
     codes_cm: (F, n) uint8 column-major redundant copy (step-③ input);
     g, h: (n,) float32 gradient statistics.  ``plan`` selects the kernel
-    strategies (the legacy per-step string kwargs still work and override
-    the plan's fields).
+    strategies (the legacy per-step string kwargs are deprecated — they
+    still lift into the plan, with a ``DeprecationWarning``, for one
+    release).
 
     The scalar grower IS the K=1 slice of ``fit_forest`` — one body to
     maintain; the class axis costs nothing at K=1 (same kernels, same
     matmul shapes, bit-identical results).
     """
-    forest = fit_forest(codes, codes_cm, g[None], h[None], depth=depth,
-                        n_bins=n_bins, missing_bin=missing_bin,
-                        is_cat_field=is_cat_field, field_mask=field_mask,
-                        lambda_=lambda_, gamma=gamma,
-                        min_child_weight=min_child_weight, plan=plan,
-                        hist_strategy=hist_strategy,
-                        partition_strategy=partition_strategy,
-                        host_offload_split=host_offload_split)
+    plan = _lift_loose_kwargs(plan, hist_strategy=hist_strategy,
+                              partition_strategy=partition_strategy,
+                              host_offload_split=host_offload_split)
+    forest = _fit_forest_jit(codes, codes_cm, g[None], h[None], depth=depth,
+                             n_bins=n_bins, missing_bin=missing_bin,
+                             is_cat_field=is_cat_field,
+                             field_mask=field_mask, lambda_=lambda_,
+                             gamma=gamma,
+                             min_child_weight=min_child_weight, plan=plan)
     return TreeArrays(*[a[0] for a in forest])
 
 
 # --------------------------------------------------------------------------
 # class-batched grower: K per-class trees per round (multi-class boosting)
 # --------------------------------------------------------------------------
-@functools.partial(
-    jax.jit,
-    static_argnames=("depth", "n_bins", "missing_bin", "plan",
-                     "hist_strategy", "partition_strategy",
-                     "host_offload_split"))
 def fit_forest(codes, codes_cm, g, h, *, depth: int, n_bins: int,
                missing_bin: int, is_cat_field, field_mask,
                lambda_: float, gamma: float, min_child_weight: float,
@@ -104,10 +117,29 @@ def fit_forest(codes, codes_cm, g, h, *, depth: int, n_bins: int,
     ONCE per level for all classes (the class-batched ``build_histogram``),
     so the record/code stream is read once per level regardless of K.
     Returns TreeArrays with leading (K, ...) axes.
+
+    The loose ``hist_strategy=`` / ``partition_strategy=`` /
+    ``host_offload_split=`` kwargs are deprecated (lifted into the plan
+    with a warning, OUTSIDE the jit so the warning actually fires on
+    every call rather than only at trace time).
     """
-    plan = resolve_plan(plan, hist_strategy=hist_strategy,
-                        partition_strategy=partition_strategy,
-                        host_offload_split=host_offload_split)
+    plan = _lift_loose_kwargs(plan, hist_strategy=hist_strategy,
+                              partition_strategy=partition_strategy,
+                              host_offload_split=host_offload_split)
+    return _fit_forest_jit(codes, codes_cm, g, h, depth=depth,
+                           n_bins=n_bins, missing_bin=missing_bin,
+                           is_cat_field=is_cat_field, field_mask=field_mask,
+                           lambda_=lambda_, gamma=gamma,
+                           min_child_weight=min_child_weight, plan=plan)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "n_bins", "missing_bin", "plan"))
+def _fit_forest_jit(codes, codes_cm, g, h, *, depth: int, n_bins: int,
+                    missing_bin: int, is_cat_field, field_mask,
+                    lambda_: float, gamma: float, min_child_weight: float,
+                    plan: ExecutionPlan) -> TreeArrays:
     n, F = codes.shape
     K = g.shape[0]
     n_int = 2 ** depth - 1
@@ -461,7 +493,7 @@ def fit_tree_lossguide(codes, codes_cm, g, h, *, depth: int, n_bins: int,
     coordination is cheap relative to the record scans; the scans themselves
     (histogram of the smaller child, predicate masks) run on device.
     """
-    plan = resolve_plan(plan, hist_strategy=hist_strategy)
+    plan = _lift_loose_kwargs(plan, hist_strategy=hist_strategy)
     n, F = codes.shape
     n_int = 2 ** depth - 1
     n_leaf_slots = 2 ** depth

@@ -19,6 +19,7 @@ collectives (the two paths are tested equal).
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -27,7 +28,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.api.plan import ExecutionPlan, resolve_plan
+from repro.api.plan import ExecutionPlan
 from repro.core import splits as splits_mod
 from repro.core import tree as tree_mod
 from repro.core.binning import PackedCodes, as_unpacked
@@ -36,15 +37,14 @@ from repro.kernels.ref import TreeArrays
 from repro.launch.mesh import data_axes
 
 
-def _legacy_distributed_plan(plan: Optional[ExecutionPlan],
-                             hist_strategy: Optional[str]) -> ExecutionPlan:
-    """Resolve the growers' plan.  The partition step is pinned to the
-    reference kernel: it runs inside shard_map'd local functions where the
-    Pallas path is untested, and the pre-plan code hardcoded it."""
-    if plan is None:      # historical default: scatter histograms
-        plan = ExecutionPlan(hist_strategy=hist_strategy or "scatter")
-    plan = resolve_plan(plan, hist_strategy=hist_strategy)
-    return plan.replace(partition_strategy="reference")
+def _warn_loose_strategy(hist_strategy: Optional[str]) -> None:
+    """One release path for the distributed growers' loose hist kwarg —
+    the defaulting itself now lives in ``ExecutionPlan.from_config``."""
+    if hist_strategy is not None and hist_strategy != "auto":
+        warnings.warn(
+            "legacy strategy-string kwargs are deprecated; pass "
+            "plan=ExecutionPlan(hist_strategy=...) instead",
+            DeprecationWarning, stacklevel=3)
 
 
 def gbdt_shardings(mesh: Mesh):
@@ -105,7 +105,8 @@ def distributed_histogram(mesh: Mesh, codes, g, h, node_ids, *,
     (group-by-field at chip granularity): (n_nodes, F, n_bins, 2).
     """
     da = data_axes(mesh)
-    plan = resolve_plan(plan, hist_strategy=strategy)
+    _warn_loose_strategy(strategy)
+    plan = ExecutionPlan.from_config(base=plan, hist_strategy=strategy)
     if isinstance(codes, PackedCodes):
         codes = codes.unpack()     # the field axis is sharded mid-byte
 
@@ -222,7 +223,9 @@ def distributed_fit_tree(mesh: Mesh, codes, codes_cm, g, h, *, depth: int,
     from repro.kernels.ref import TreeArrays
     from repro.core.splits import leaf_weight
 
-    plan = _legacy_distributed_plan(plan, hist_strategy)
+    _warn_loose_strategy(hist_strategy)
+    plan = ExecutionPlan.from_config(base=plan, hist_strategy=hist_strategy,
+                                     distributed=True)
     da = data_axes(mesh)
     codes = as_unpacked(codes)         # both shard grids split mid-byte
     codes_cm = as_unpacked(codes_cm)
@@ -308,7 +311,9 @@ def pjit_fit_tree(mesh: Mesh, *, depth: int, n_bins: int, missing_bin: int,
     path spells out.
     """
     sh = gbdt_shardings(mesh)
-    plan = _legacy_distributed_plan(plan, hist_strategy)
+    _warn_loose_strategy(hist_strategy)
+    plan = ExecutionPlan.from_config(base=plan, hist_strategy=hist_strategy,
+                                     distributed=True)
 
     fn = functools.partial(
         tree_mod.fit_tree, depth=depth, n_bins=n_bins,

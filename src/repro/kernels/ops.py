@@ -22,9 +22,11 @@ On non-TPU backends the Pallas kernels run in interpret mode (Python
 execution of the kernel body) — numerically identical, used for validation.
 
 Calling convention: ``build_histogram(..., plan=plan)`` with a resolved
-plan.  The PR-1 loose ``strategy=`` / ``interpret=`` kwargs are gone from
-these entry points; config-level strategy strings are lifted into a plan
-once, at the boundary (``repro.api.plan.resolve_plan``), not per call.
+plan.  The PR-1 loose ``strategy=`` / ``interpret=`` kwargs (and their
+``default_hist_strategy`` shim) are gone from these entry points;
+config-level strategy strings are lifted into a plan once, at the boundary
+(``ExecutionPlan.from_config`` / the deprecated grower kwargs), not per
+call.
 """
 from __future__ import annotations
 
@@ -46,11 +48,7 @@ from repro.kernels.ref import TreeArrays
 
 __all__ = ["HIST_STRATEGIES", "onehot_matmul", "pack_codes", "unpack_codes",
            "build_histogram", "accumulate_histogram", "partition_level",
-           "traverse_tree", "predict_ensemble", "default_hist_strategy"]
-
-
-def default_hist_strategy() -> str:
-    return ExecutionPlan().resolved().hist_strategy
+           "traverse_tree", "predict_ensemble"]
 
 
 # --------------------------------------------------------------------------

@@ -1,17 +1,18 @@
 """Batched serving drivers.
 
 Two entry modes:
-  * ``--mode gbdt`` (default) — the paper's workload: load a trained GBDT
-    bundle through the unified ``repro.api`` serialization and stream
-    record batches through the compile-once inference engine (§III-D).
-    Request sizes VARY across the loop (real traffic is ragged) to
-    exercise the engine's power-of-two shape buckets; requests larger
-    than ``--microbatch`` are chopped into micro-batches so tail latency
-    stays bounded.  The driver reports p50/p99 request latency alongside
-    sustained rows/sec, plus the predict-cache retrace count — a warm
-    server must show ZERO retraces after the first request per bucket.
-    When no bundle exists at ``--model-dir`` a small demo model is
-    trained and saved first, so the driver is self-contained.
+  * ``--mode gbdt`` (default) — a thin CLI over the serving daemon
+    (``repro.serving``): it publishes ``--models`` demo tenants into a
+    :class:`ModelRegistry`, warms every reachable power-of-two flush
+    bucket, then drives a mixed multi-model load of ragged request sizes
+    through :class:`Server.submit` — with a mid-run hot-swap republishing
+    tenant 0 at a new version.  All queueing, deadline batching, metric
+    and retrace accounting lives in the daemon; the driver only
+    generates traffic and prints the final ``stats()`` snapshot.  A warm
+    server must show ZERO predict-cache retraces and ZERO dropped
+    requests across the swap.  When no bundles exist under
+    ``--model-dir`` small demo models are trained and saved first, so
+    the driver is self-contained.
   * ``--mode lm --arch <id>`` — the assigned-architecture LM stack at
     smoke scale: one prefill, then jit'd single-token decode steps against
     the (ring-buffered where SWA) KV/SSM caches.  ``--no-greedy`` samples
@@ -33,65 +34,113 @@ import jax
 import jax.numpy as jnp
 
 
+def request_sizes(batch: int):
+    """The ragged request-size mix (real traffic) — ONE definition shared
+    by the measured loop and the warmup-coverage check below, so the two
+    can never drift apart (the pre-daemon driver derived them separately
+    and the zero-retrace check could pass vacuously)."""
+    return [max(1, batch), max(1, batch // 2), max(1, (3 * batch) // 4),
+            max(1, batch // 3)]
+
+
+def _demo_bundle(path: str, plan, task: str, seed: int, n_trees: int = 100,
+                 learning_rate: float = 0.2) -> str:
+    """Train + save a small demo tenant at ``path`` unless one exists."""
+    from repro.api import BoosterClassifier, BoosterRegressor, make_tabular
+
+    if os.path.isdir(path):
+        return path
+    print(f"[serve] no bundle at {path}; training demo model ({task})")
+    X, y, cats = make_tabular(20_000, 20, 8, n_cats=12, task=task,
+                              seed=seed)
+    cls = BoosterClassifier if task == "binary" else BoosterRegressor
+    est = cls(n_trees=n_trees, max_depth=6, learning_rate=learning_rate,
+              max_bins=64, categorical_fields=cats, seed=seed)
+    est.fit(X, y, plan=plan)
+    est.save(path)
+    return path
+
+
 def run_gbdt(args):
-    from repro.api import (BoosterClassifier, ExecutionPlan, load,
-                           make_tabular)
-    from repro.core.inference import predict_cache_stats
+    from repro.api import (ExecutionPlan, ModelRegistry, Server, load,
+                           warmup_buckets)
+    from repro.core.inference import ROW_BUCKET_FLOOR, bucket_pow2
 
     plan = ExecutionPlan.auto()
-    if not os.path.isdir(args.model_dir):
-        print(f"[serve] no bundle at {args.model_dir}; training demo model")
-        X, y, cats = make_tabular(20_000, 20, 8, n_cats=12, task="binary",
-                                  seed=0)
-        est = BoosterClassifier(n_trees=100, max_depth=6, learning_rate=0.2,
-                                max_bins=64, categorical_fields=cats)
-        est.fit(X, y, plan=plan)
-        est.save(args.model_dir)
-    est = load(args.model_dir)
-    print(f"[serve] loaded {type(est).__name__} with {est.n_trees_} trees "
-          f"({plan.describe()})")
+    registry = ModelRegistry(plan)
+    tasks = ["binary", "regression"]
+    names = []
+    for i in range(max(1, args.models)):
+        task = tasks[i % len(tasks)]
+        name = f"m{i}_{task}"
+        path = _demo_bundle(os.path.join(args.model_dir, name), plan,
+                            task, seed=i)
+        registry.publish(name, path)
+        est = load(path)
+        print(f"[serve] published {name} v1: {type(est).__name__} with "
+              f"{est.n_trees_} trees")
+        names.append(name)
+    n_fields = registry.pipeline(names[0]).model.n_fields
+    print(f"[serve] {plan.describe()}")
 
-    # ragged request sizes (real traffic) — the engine's power-of-two
-    # buckets mean each DISTINCT bucket compiles once, then never again
-    n_fields = est.model_.n_fields
-    rng = np.random.default_rng(0)
-    sizes = [max(1, args.batch), max(1, args.batch // 2),
-             max(1, (3 * args.batch) // 4), max(1, args.batch // 3)]
+    sizes = request_sizes(args.batch)
     mb = args.microbatch or max(sizes)
+    server = Server(registry, max_batch=mb,
+                    default_slack_ms=args.slack_ms,
+                    log_every_s=args.log_every_s)
 
-    def request(n_rows):
-        """One request, served in <= --microbatch slices."""
+    # every flush the daemon can assemble holds <= max_batch rows, so the
+    # warmup bucket set is a strict SUPERSET of what the measured mix can
+    # reach — assert that from the same helpers rather than trusting it
+    reachable = {bucket_pow2(min(s, mb) if lo + mb >= s else mb,
+                             ROW_BUCKET_FLOOR)
+                 for s in sizes for lo in range(0, s, mb)}
+    assert reachable <= set(warmup_buckets(mb)), (reachable, mb)
+    for name in names:
+        traces = server.warmup(name)
+        print(f"[serve] warmed {name}: buckets {warmup_buckets(mb)} "
+              f"({traces} traces)")
+    warm_traces = {name: server.stats()[name]["traces"] for name in names}
+
+    # the mixed multi-model measured loop, with a mid-run hot-swap: a new
+    # version of tenant 0 (same tree count -> same shape buckets) lands
+    # while requests are in flight; the daemon must drop nothing and
+    # retrace nothing
+    rng = np.random.default_rng(0)
+    swap_at = args.requests // 2
+    pending = []
+    t_loop = time.perf_counter()
+    for i in range(args.requests):
+        if i == swap_at:
+            v2 = _demo_bundle(os.path.join(args.model_dir,
+                                           names[0] + "_v2"), plan,
+                              tasks[0], seed=100, learning_rate=0.15)
+            version = registry.publish(names[0], v2)
+            print(f"[serve] hot-swapped {names[0]} -> v{version} mid-run")
+        n_rows = sizes[i % len(sizes)]
         Xb = rng.normal(size=(n_rows, n_fields))
         Xb[rng.random(Xb.shape) < 0.02] = np.nan     # missing values
-        t0 = time.perf_counter()
-        parts = [np.asarray(est.predict(Xb[lo:lo + mb], plan=plan))
-                 for lo in range(0, n_rows, mb)]      # blocks: host labels
-        np.concatenate(parts)
-        return time.perf_counter() - t0
+        pending.append(server.submit(names[i % len(names)], Xb))
+    for req in pending:
+        req.result(timeout=600)
+    wall = time.perf_counter() - t_loop
+    total = sum(r.n_rows for r in pending)
 
-    # warm every micro-batch slice length once (micro-batching chops a
-    # request into mb-sized slices plus a ragged tail — each lands in its
-    # own pad bucket), then the measured loop must not trace anything new
-    for sl in sorted({min(mb, s - lo)
-                      for s in sizes for lo in range(0, s, mb)}):
-        request(sl)
-    warm_traces = predict_cache_stats()["traces"]
-
-    lat, total = [], 0
-    for i in range(args.requests):
-        n_rows = sizes[i % len(sizes)]
-        dt = request(n_rows)
-        lat.append(dt)
-        total += n_rows
-        print(f"[serve] request {i}: {n_rows} records in {dt*1e3:.1f} ms"
-              f" ({n_rows/dt:.0f} rec/s)")
-    p50, p99 = np.percentile(np.asarray(lat) * 1e3, [50, 99])
-    retraces = predict_cache_stats()["traces"] - warm_traces
-    print(f"[serve] sustained: {total/sum(lat):.0f} records/s over "
-          f"{args.requests} requests (micro-batch {mb}); "
-          f"p50 {p50:.1f} ms, p99 {p99:.1f} ms")
-    print(f"[serve] predict-cache retraces after warmup: {retraces}"
-          f" {'(OK)' if retraces == 0 else '(UNEXPECTED)'}")
+    stats = server.stats()
+    server.stop()
+    print(f"[serve] sustained: {total / wall:.0f} records/s over "
+          f"{args.requests} requests, {len(names)} models "
+          f"(max_batch {mb}, slack {args.slack_ms} ms)")
+    ok = True
+    for name in names:
+        s = stats[name]
+        print(f"[serve]   {name} v{s['version']}: {s['requests']} req, "
+              f"p50 {s['p50_ms']:.1f} ms, p99 {s['p99_ms']:.1f} ms, "
+              f"fill {s['batch_fill']:.2f}, dropped {s['dropped']}, "
+              f"retraces after warmup {s['traces'] - warm_traces[name]}")
+        ok &= s["dropped"] == 0 and s["traces"] == warm_traces[name]
+    print(f"[serve] zero drops + zero retraces across hot-swap: "
+          f"{'OK' if ok else 'UNEXPECTED'}")
 
 
 def run_lm(args):
@@ -161,10 +210,16 @@ def main():
     ap.add_argument("--mode", default="gbdt", choices=["gbdt", "lm"])
     # gbdt serving
     ap.add_argument("--model-dir", default="/tmp/repro_serve_bundle")
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--microbatch", type=int, default=0,
-                    help="rows per inference micro-batch (0 = whole "
-                         "request in one dispatch)")
+                    help="daemon flush capacity in rows (0 = the largest "
+                         "request size)")
+    ap.add_argument("--models", type=int, default=2,
+                    help="demo tenants published into the registry")
+    ap.add_argument("--slack-ms", type=float, default=20.0,
+                    help="per-request deadline slack (queue-wait budget)")
+    ap.add_argument("--log-every-s", type=float, default=None,
+                    help="daemon stats log-line cadence (default: silent)")
     # lm serving
     ap.add_argument("--arch", default="qwen3-14b", choices=ARCH_IDS)
     ap.add_argument("--batch", type=int, default=None,

@@ -1,0 +1,20 @@
+"""``repro.serving`` — the production serving daemon over the GBDT engine.
+
+Public surface (re-exported through ``repro.api``):
+
+  * :class:`Server` — worker thread draining a deadline-aware request
+    queue; ragged ``submit()`` calls coalesce into power-of-two-bucketed
+    flushes and scatter back per-request via :class:`Request` futures.
+  * :class:`ModelRegistry` — N named ensembles resident concurrently,
+    each with its own compiled-step namespace; ``publish`` hot-swaps a
+    version with zero retraces when the shape buckets match.
+  * :class:`Request` — the future handle ``submit()`` returns.
+  * :func:`warmup_buckets` — the reachable flush-bucket set (shared by
+    ``Server.warmup`` and any external zero-retrace check).
+"""
+from repro.serving.metrics import ModelMetrics, format_stats_line
+from repro.serving.registry import ModelRegistry
+from repro.serving.server import Request, Server, warmup_buckets
+
+__all__ = ["Server", "ModelRegistry", "Request", "ModelMetrics",
+           "warmup_buckets", "format_stats_line"]

@@ -1,0 +1,148 @@
+"""Multi-model tenancy: named ensembles with zero-retrace hot-swap.
+
+A :class:`ModelRegistry` keeps N named :class:`~repro.core.inference.
+GBDTPipeline` bundles resident concurrently, each with its OWN
+:class:`~repro.core.inference.PredictCache` — the compiled-step namespace
+is keyed per model *name*, so tenants never evict each other's
+executables and ``unpublish`` drops exactly one tenant's compilations.
+
+Hot-swap contract (``publish`` on an already-published name): the cache
+namespace SURVIVES the swap.  Trees are traced arguments to the jitted
+predict step, not compile-time constants, so when the new version lands
+in the same shape buckets as the old one (same depth, class count,
+missing bin, ``bucket_trees`` tree bucket and field count) every warm
+executable is reused as-is — zero retraces, by construction.  When the
+buckets do NOT match, ``publish`` warms the new version over every row
+bucket the old one has served *before* swapping the entry, so the
+compilations happen off the serving hot path and in-flight requests keep
+hitting the old version until the swap is atomic under the registry lock.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Set
+
+import numpy as np
+
+from repro.api.plan import ExecutionPlan
+from repro.core.inference import GBDTPipeline, PredictCache
+
+
+def _as_pipeline(model) -> GBDTPipeline:
+    """Coerce a publishable object: a bundle directory path (the unified
+    ``repro.api`` serialization), an estimator (anything exposing
+    ``to_pipeline()``), or a ready pipeline."""
+    if isinstance(model, str):
+        from repro.api.serialize import load
+        model = load(model)
+    if isinstance(model, GBDTPipeline):
+        return model
+    to_pipeline = getattr(model, "to_pipeline", None)
+    if callable(to_pipeline):
+        return to_pipeline()
+    raise TypeError(
+        f"cannot publish {type(model).__name__!r}: expected a bundle "
+        "directory path, a fitted estimator, or a GBDTPipeline")
+
+
+class _Entry:
+    """One resident model version + its private jit-cache namespace."""
+
+    __slots__ = ("pipeline", "cache", "version", "seen_buckets")
+
+    def __init__(self, pipeline: GBDTPipeline, cache: PredictCache,
+                 version: int, seen_buckets: Set[int]):
+        self.pipeline = pipeline
+        self.cache = cache
+        self.version = version
+        self.seen_buckets = seen_buckets     # row buckets served/warmed
+
+
+class ModelRegistry:
+    """Named, hot-swappable ensembles behind one predict plan.
+
+    ``plan`` is threaded ONCE, here — every lookup/warmup/serve path
+    reuses it, so no per-call plan resolution happens on the hot path.
+    """
+
+    def __init__(self, plan: Optional[ExecutionPlan] = None):
+        self.plan = (plan if plan is not None else ExecutionPlan()).resolved()
+        self._lock = threading.Lock()
+        self._entries: Dict[str, _Entry] = {}
+
+    # -- tenancy ------------------------------------------------------------
+    def publish(self, name: str, model, *, warm: bool = True) -> int:
+        """Make ``model`` the live version under ``name``; returns the new
+        version number (1 for a first publish).
+
+        Replacing an existing name keeps its :class:`PredictCache`, and
+        (with ``warm=True``) runs the new version through every row
+        bucket the old one has served before the atomic swap — see the
+        module docstring for the zero-retrace contract.
+        """
+        pipeline = _as_pipeline(model)
+        with self._lock:
+            old = self._entries.get(name)
+            cache = old.cache if old is not None else PredictCache()
+            version = old.version + 1 if old is not None else 1
+            seen = set(old.seen_buckets) if old is not None else set()
+        if warm and seen:
+            self._warm(pipeline, cache, sorted(seen))
+        with self._lock:
+            self._entries[name] = _Entry(pipeline, cache, version, seen)
+        return version
+
+    def unpublish(self, name: str) -> None:
+        """Drop a tenant and evict its compiled predict steps."""
+        with self._lock:
+            entry = self._entries.pop(name, None)
+        if entry is None:
+            raise KeyError(name)
+        entry.cache.clear()
+
+    def entry(self, name: str) -> _Entry:
+        with self._lock:
+            try:
+                return self._entries[name]
+            except KeyError:
+                raise KeyError(
+                    f"no model published under {name!r} "
+                    f"(published: {sorted(self._entries)})") from None
+
+    def pipeline(self, name: str) -> GBDTPipeline:
+        return self.entry(name).pipeline
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        with self._lock:
+            return name in self._entries
+
+    # -- warmup ---------------------------------------------------------------
+    def _warm(self, pipeline: GBDTPipeline, cache: PredictCache,
+              buckets) -> None:
+        """Compile ``pipeline``'s steps for the given row buckets (synthetic
+        zero batches — only shapes matter to the jit cache)."""
+        F = pipeline.model.n_fields
+        for b in buckets:
+            np.asarray(pipeline.predict_margin(
+                np.zeros((int(b), F), np.float32), plan=self.plan,
+                mode="cached", cache=cache))
+
+    def warm(self, name: str, buckets) -> None:
+        """Warm the live version of ``name`` over explicit row buckets."""
+        entry = self.entry(name)
+        self._warm(entry.pipeline, entry.cache, buckets)
+        entry.seen_buckets.update(int(b) for b in buckets)
+
+    # -- observability ------------------------------------------------------
+    def stats(self) -> Dict[str, Dict]:
+        """Per-model registry view: live version + jit-cache counters."""
+        with self._lock:
+            entries = dict(self._entries)
+        return {name: {"version": e.version,
+                       "cache": e.cache.stats(),
+                       "warm_buckets": sorted(e.seen_buckets)}
+                for name, e in entries.items()}

@@ -1,0 +1,283 @@
+"""The serving daemon (PR 8): deadline batching, hot-swap, multi-tenancy.
+
+* coalescing: k requests queued under one deadline are served in a
+  single flush, bit-equal to individual predicts (row padding never
+  changes results),
+* zero-slack requests dispatch immediately (one flush each),
+* hot-swap under load: a republished tenant loses zero in-flight
+  requests and triggers zero retraces when the shape buckets match;
+  post-swap results come from the new version,
+* multi-model isolation: tenants (and separate registries) keep
+  disjoint predict caches; unpublish evicts exactly one tenant,
+* ``stats()`` counters are consistent with the submitted request mix,
+* oversize requests chop into segments and reassemble in order.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import ExecutionPlan, ModelRegistry, Server, warmup_buckets
+from repro.core.binning import Binner
+from repro.core.gbdt import GBDTModel
+from repro.core.inference import (GBDTPipeline, PredictCache,
+                                  ROW_BUCKET_FLOOR, bucket_pow2,
+                                  bucket_trees)
+from repro.kernels.ref import TreeArrays
+
+N_BINS = 16
+MISSING = N_BINS - 1
+N_FIELDS = 7
+PLAN = ExecutionPlan(traversal_strategy="reference")
+
+
+def rand_forest(rng, T, depth):
+    n_int, n_leaf = 2 ** depth - 1, 2 ** depth
+
+    def one():
+        feat = rng.integers(0, N_FIELDS, n_int).astype(np.int32)
+        feat[rng.uniform(size=n_int) < 0.2] = -1
+        return TreeArrays(
+            feature=feat,
+            threshold=rng.integers(0, N_BINS - 1, n_int).astype(np.int32),
+            is_cat=rng.integers(0, 2, n_int).astype(np.int32),
+            default_left=rng.integers(0, 2, n_int).astype(np.int32),
+            leaf_value=rng.normal(size=n_leaf).astype(np.float32))
+
+    trees = [one() for _ in range(T)]
+    return TreeArrays(*[np.stack([getattr(t, f) for t in trees])
+                        for f in TreeArrays._fields])
+
+
+def make_pipeline(seed: int, T: int = 12, depth: int = 3) -> GBDTPipeline:
+    """A synthetic binner+model bundle — no training, deterministic."""
+    rng = np.random.default_rng(seed)
+    X_fit = rng.normal(size=(512, N_FIELDS)).astype(np.float32)
+    binner = Binner(N_BINS).fit(X_fit)
+    model = GBDTModel(trees=rand_forest(rng, T, depth), base_margin=0.5,
+                      objective="reg:squarederror", missing_bin=MISSING,
+                      n_fields=N_FIELDS, max_depth=depth)
+    return GBDTPipeline(binner=binner, model=model)
+
+
+def make_X(seed: int, n: int) -> np.ndarray:
+    rng = np.random.default_rng(1000 + seed)
+    X = rng.normal(size=(n, N_FIELDS)).astype(np.float32)
+    X[rng.random(X.shape) < 0.05] = np.nan
+    return X
+
+
+@pytest.fixture
+def registry():
+    reg = ModelRegistry(PLAN)
+    reg.publish("a", make_pipeline(0))
+    return reg
+
+
+# --------------------------------------------------------------------------
+# deadline batching
+# --------------------------------------------------------------------------
+def test_coalesced_flush_bit_equal_to_individual_predicts(registry):
+    pipe = registry.pipeline("a")
+    batches = [make_X(i, n) for i, n in enumerate((100, 37, 160, 201))]
+    with Server(registry, max_batch=1024, default_slack_ms=500.0) as srv:
+        srv.warmup("a")
+        flushes0 = srv.stats()["a"]["flushes"]
+        reqs = [srv.submit("a", X) for X in batches]
+        outs = [r.result(timeout=60) for r in reqs]
+        stats = srv.stats()["a"]
+    # all four queued within the 500 ms slack of the first -> ONE flush
+    assert stats["flushes"] - flushes0 == 1
+    for X, out in zip(batches, outs):
+        np.testing.assert_array_equal(
+            out, np.asarray(pipe.predict(X, plan=PLAN)))
+
+
+def test_zero_slack_serves_immediately(registry):
+    with Server(registry, max_batch=1024, default_slack_ms=0.0) as srv:
+        srv.warmup("a")
+        for i in range(3):
+            srv.submit("a", make_X(i, 50)).result(timeout=60)
+        stats = srv.stats()["a"]
+    assert stats["requests"] == 3
+    # nothing to coalesce with: each request flushed on its own
+    assert stats["flushes"] == 3
+
+
+def test_full_batch_flushes_before_deadline(registry):
+    with Server(registry, max_batch=256, default_slack_ms=3600e3) as srv:
+        srv.warmup("a")
+        reqs = [srv.submit("a", make_X(i, 128)) for i in range(2)]
+        # an hour of slack, but 2 x 128 rows fill max_batch -> flush now
+        outs = [r.result(timeout=60) for r in reqs]
+    assert all(o.shape == (128,) for o in outs)
+
+
+def test_oversize_request_chops_and_reassembles(registry):
+    pipe = registry.pipeline("a")
+    X = make_X(7, 700)
+    with Server(registry, max_batch=256, default_slack_ms=5.0) as srv:
+        srv.warmup("a")
+        out = srv.submit("a", X).result(timeout=60)
+        stats = srv.stats()["a"]
+    assert stats["requests"] == 1 and stats["flushes"] == 3
+    np.testing.assert_array_equal(out,
+                                  np.asarray(pipe.predict(X, plan=PLAN)))
+
+
+def test_warmup_covers_every_reachable_flush_bucket(registry):
+    with Server(registry, max_batch=1000, default_slack_ms=200.0) as srv:
+        traces = srv.warmup("a")
+        buckets = warmup_buckets(1000)
+        assert buckets == [128, 256, 512, 1024]
+        assert traces == len(buckets)
+        # any flush is <= max_batch rows; its pad bucket is in the set
+        for rows in (1, 128, 129, 700, 1000):
+            assert bucket_pow2(rows, ROW_BUCKET_FLOOR) in buckets
+        t0 = srv.stats()["a"]["traces"]
+        reqs = [srv.submit("a", make_X(i, n))
+                for i, n in enumerate((3, 130, 513, 999, 1000))]
+        for r in reqs:
+            r.result(timeout=60)
+        assert srv.stats()["a"]["traces"] == t0   # zero retraces, any mix
+
+
+# --------------------------------------------------------------------------
+# hot-swap
+# --------------------------------------------------------------------------
+def test_hotswap_under_load_drops_nothing_and_never_retraces(registry):
+    v2 = make_pipeline(99)        # same T/depth -> same shape buckets
+    assert bucket_trees(v2.model.n_trees) == bucket_trees(
+        registry.pipeline("a").model.n_trees)
+    with Server(registry, max_batch=512, default_slack_ms=2.0) as srv:
+        srv.warmup("a")
+        warm = srv.stats()["a"]["traces"]
+        reqs, swapped = [], threading.Event()
+
+        def pound():
+            for i in range(40):
+                reqs.append(srv.submit("a", make_X(i, 64 + i)))
+                if i == 20:
+                    swapped.set()
+                time.sleep(0.001)
+
+        t = threading.Thread(target=pound)
+        t.start()
+        swapped.wait(timeout=30)
+        version = registry.publish("a", v2)     # hot-swap mid-load
+        t.join()
+        outs = [r.result(timeout=60) for r in reqs]
+        # a request submitted strictly after publish() returned must be
+        # served by the NEW version's numbers
+        post = srv.submit("a", make_X(999, 77)).result(timeout=60)
+        stats = srv.stats()["a"]
+    assert version == 2
+    assert len(outs) == 40 and stats["dropped"] == 0
+    assert stats["requests"] == 41
+    assert stats["traces"] == warm              # zero retraces across swap
+    np.testing.assert_array_equal(
+        post, np.asarray(v2.predict(make_X(999, 77), plan=PLAN)))
+
+
+def test_publish_warms_new_buckets_off_hot_path():
+    reg = ModelRegistry(PLAN)
+    reg.publish("a", make_pipeline(0))
+    reg.warm("a", [128, 256])
+    # v2 lands in DIFFERENT tree bucket -> publish() pre-compiles the
+    # previously-served row buckets before the swap becomes visible
+    v2 = make_pipeline(5, T=40)
+    assert bucket_trees(40) != bucket_trees(12)
+    traces_before = reg.entry("a").cache.stats()["traces"]
+    reg.publish("a", v2)
+    traces_after = reg.entry("a").cache.stats()["traces"]
+    assert traces_after - traces_before == 2    # both buckets, pre-swap
+    # serving those buckets now costs nothing new
+    out = v2.predict(make_X(1, 100), plan=PLAN,
+                     cache=reg.entry("a").cache)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(v2.predict(make_X(1, 100),
+                                                        plan=PLAN)))
+    assert reg.entry("a").cache.stats()["traces"] == traces_after
+
+
+# --------------------------------------------------------------------------
+# multi-model tenancy
+# --------------------------------------------------------------------------
+def test_multi_model_isolation_and_eviction():
+    reg = ModelRegistry(PLAN)
+    reg.publish("a", make_pipeline(0))
+    reg.publish("b", make_pipeline(1, T=20, depth=4))
+    ca, cb = reg.entry("a").cache, reg.entry("b").cache
+    assert ca is not cb
+    reg.warm("a", [128])
+    assert ca.stats()["traces"] == 1
+    assert cb.stats()["traces"] == 0            # tenant b untouched
+    reg.warm("b", [128])
+    assert cb.stats()["traces"] == 1
+    reg.unpublish("a")
+    assert "a" not in reg and "b" in reg
+    assert ca.stats() == {"entries": 0, "hits": 0, "misses": 0, "traces": 0}
+    assert cb.stats()["traces"] == 1            # eviction is per-tenant
+    with pytest.raises(KeyError):
+        reg.unpublish("a")
+
+
+def test_two_registries_do_not_collide():
+    r1, r2 = ModelRegistry(PLAN), ModelRegistry(PLAN)
+    r1.publish("m", make_pipeline(0))
+    r2.publish("m", make_pipeline(1))
+    r1.warm("m", [128, 256])
+    assert r1.entry("m").cache.stats()["traces"] == 2
+    assert r2.entry("m").cache.stats()["traces"] == 0
+    X = make_X(0, 64)
+    out1 = r1.pipeline("m").predict(X, plan=PLAN,
+                                    cache=r1.entry("m").cache)
+    out2 = r2.pipeline("m").predict(X, plan=PLAN,
+                                    cache=r2.entry("m").cache)
+    assert not np.array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_submit_unknown_model_raises(registry):
+    with Server(registry, max_batch=256) as srv:
+        with pytest.raises(KeyError):
+            srv.submit("nope", make_X(0, 8))
+
+
+# --------------------------------------------------------------------------
+# stats consistency
+# --------------------------------------------------------------------------
+def test_stats_counters_match_request_mix(registry):
+    registry.publish("b", make_pipeline(1, T=20, depth=4))
+    sizes_a, sizes_b = (64, 130, 7), (100, 200)
+    with Server(registry, max_batch=512, default_slack_ms=5.0) as srv:
+        srv.warmup("a")
+        srv.warmup("b")
+        reqs = ([srv.submit("a", make_X(i, n))
+                 for i, n in enumerate(sizes_a)]
+                + [srv.submit("b", make_X(i, n))
+                   for i, n in enumerate(sizes_b)])
+        for r in reqs:
+            r.result(timeout=60)
+        stats = srv.stats()
+    a, b = stats["a"], stats["b"]
+    assert a["requests"] == len(sizes_a) and a["rows"] == sum(sizes_a)
+    assert b["requests"] == len(sizes_b) and b["rows"] == sum(sizes_b)
+    for s in (a, b):
+        assert s["dropped"] == 0
+        assert s["queue_depth"] == 0            # drained
+        assert 0.0 < s["batch_fill"] <= 1.0
+        assert s["p50_ms"] <= s["p99_ms"]
+        assert s["qps"] > 0.0
+        assert s["flushes"] <= s["requests"]
+    assert a["version"] == 1 and b["version"] == 1
+
+
+def test_stop_drains_pending_requests(registry):
+    srv = Server(registry, max_batch=256, default_slack_ms=10_000.0)
+    srv.warmup("a")
+    reqs = [srv.submit("a", make_X(i, 20)) for i in range(4)]
+    srv.stop()                    # long slack, but stop() must drain
+    assert all(r.done() for r in reqs)
+    with pytest.raises(RuntimeError):
+        srv.submit("a", make_X(9, 20))

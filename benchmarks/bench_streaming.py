@@ -83,6 +83,21 @@ def run(scale: float = 1.0, n_fields: int = 64, n_trees: int = 5,
     rows.append(csv_row(
         f"stream_goss_fit_n{n}", t_goss * 1e6,
         f"rows_per_sec={n * n_trees / t_goss:.0f};top=0.1;other=0.1"))
+
+    # resilience-wrapped streaming (PR 9): the same fit through a
+    # fault-free RetryingSource under a RecoveryPolicy — measures the
+    # overhead of the self-healing machinery when nothing fails (the
+    # regression gate keeps it inside tolerance of stream_fit)
+    from repro.api import RecoveryPolicy, RetryPolicy, RetryingSource
+    guarded = BoosterRegressor(**est_kw)
+    t_guard = _fit_seconds(
+        guarded, data=RetryingSource(src, RetryPolicy()),
+        plan=ExecutionPlan(chunk_bytes=chunk_bytes),
+        recovery=RecoveryPolicy())
+    rows.append(csv_row(
+        f"stream_fit_resilient_n{n}", t_guard * 1e6,
+        f"rows_per_sec={n * n_trees / t_guard:.0f};"
+        f"overhead_vs_plain={t_guard / t_stream:.3f}"))
     return rows
 
 

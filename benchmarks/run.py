@@ -22,6 +22,7 @@ import json
 import platform
 import sys
 import time
+import traceback
 
 
 def main() -> None:
@@ -56,24 +57,36 @@ def main() -> None:
     report = {"smoke": args.smoke, "scale": scale,
               "python": platform.python_version(), "benches": {}}
     print("name,us_per_call,derived")
-    failed = False
+    failures = []
     for name in selected:
         t0 = time.time()
         entry = {"rows": [], "seconds": None, "error": None}
         report["benches"][name] = entry
         try:
+            if name not in benches:
+                raise KeyError(
+                    f"unknown bench {name!r}; available: "
+                    f"{','.join(benches)}")
             for row in benches[name]():
                 print(row)
                 sys.stdout.flush()
                 cells = row.split(",", 2)
+                try:
+                    us = float(cells[1]) if len(cells) > 1 else 0.0
+                except ValueError:
+                    us = 0.0    # malformed timing cell must not kill the lane
                 entry["rows"].append({
                     "name": cells[0],
-                    "us_per_call": float(cells[1]) if len(cells) > 1 else 0.0,
+                    "us_per_call": us,
                     "derived": cells[2] if len(cells) > 2 else ""})
         except Exception as e:  # noqa: BLE001 — keep the artifact complete
+            # record the failure in the JSON (with context: how far the
+            # lane got, and a short traceback), keep running the rest
             print(f"{name}_FAILED,0,{e!r}")
             entry["error"] = repr(e)
-            failed = True
+            entry["failed_after_rows"] = len(entry["rows"])
+            entry["traceback"] = traceback.format_exc(limit=6)
+            failures.append(name)
         entry["seconds"] = round(time.time() - t0, 2)
         print(f"# {name} done in {entry['seconds']:.1f}s", file=sys.stderr)
 
@@ -81,7 +94,9 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)
         print(f"# wrote {args.json}", file=sys.stderr)
-    if failed:
+    if failures:
+        print(f"# FAILED benches ({len(failures)}/{len(selected)}): "
+              f"{', '.join(failures)}", file=sys.stderr)
         raise SystemExit(1)
 
 

@@ -13,6 +13,10 @@ Public surface:
   * :class:`Server` / :class:`ModelRegistry` / :class:`Request` — the
     serving daemon: deadline-aware request batching over the compile-once
     inference engine, multi-model tenancy, zero-retrace hot-swap.
+  * :class:`RecoveryPolicy` / :class:`RetryingSource` / :class:`RetryPolicy`
+    — the resilience layer: self-healing streaming fits (checkpoint-replay,
+    OOM chunk degradation) and transparently retrying data sources; typed
+    failures (``QueueFullError`` etc.) live in :mod:`repro.resilience`.
 
 Only :mod:`repro.api.plan` is imported eagerly — the kernels layer depends
 on it, so the estimator/serialize modules (which depend on the kernels
@@ -48,6 +52,17 @@ _LAZY = {
     "ModelRegistry": ("repro.serving", "ModelRegistry"),
     "Request": ("repro.serving", "Request"),
     "warmup_buckets": ("repro.serving", "warmup_buckets"),
+    "ServerHealth": ("repro.serving", "ServerHealth"),
+    # the resilience layer (recovery policies, retrying sources, typed
+    # failures, fault injection)
+    "RecoveryPolicy": ("repro.resilience", "RecoveryPolicy"),
+    "RetryPolicy": ("repro.resilience", "RetryPolicy"),
+    "RetryingSource": ("repro.resilience", "RetryingSource"),
+    "FaultSchedule": ("repro.resilience", "FaultSchedule"),
+    "QueueFullError": ("repro.resilience", "QueueFullError"),
+    "DeadlineExceededError": ("repro.resilience", "DeadlineExceededError"),
+    "DispatcherCrashError": ("repro.resilience", "DispatcherCrashError"),
+    "ShardCorruptionError": ("repro.resilience", "ShardCorruptionError"),
 }
 
 __all__ = ["ExecutionPlan", "resolve_plan"] + sorted(_LAZY)

@@ -10,6 +10,7 @@ fault-tolerant checkpointing and sharded batch inference all live behind
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from typing import Any, Dict, Iterator, Optional, Tuple
 
@@ -24,6 +25,38 @@ from repro.core.gbdt import (GBDTConfig, GBDTModel, TrainResult,
 from repro.core.inference import (GBDTPipeline, feature_importance,
                                   pad_trees, sharded_predict)
 from repro.kernels.ref import TreeArrays
+from repro.resilience.recovery import RecoveryPolicy
+
+
+def _validate_labels(y: np.ndarray, what: str = "y") -> None:
+    """Reject NaN/inf labels up front: one non-finite label poisons every
+    gradient (the loss reduces over all rows), so the fit would silently
+    produce a garbage model instead of failing here with the row index."""
+    if np.issubdtype(y.dtype, np.number):
+        finite = np.isfinite(np.asarray(y, np.float64))
+        if not finite.all():
+            bad = int(y.shape[0] - finite.sum())
+            first = int(np.argmin(finite))
+            raise ValueError(
+                f"{what} contains {bad} non-finite label(s) (first at row "
+                f"{first}); NaN/inf labels are never valid — clean or drop "
+                "those rows before fitting")
+
+
+def _validate_fit_arrays(X: np.ndarray, y: np.ndarray,
+                         what: str = "fit") -> None:
+    """Shape/content checks shared by the fit entry points: 2-D X, equal
+    lengths, at least one row, finite labels."""
+    if X.ndim != 2:
+        raise ValueError(
+            f"{what} expects a 2-D feature matrix, got shape {X.shape}")
+    if X.shape[0] == 0:
+        raise ValueError(f"{what} received an empty dataset (X has 0 rows)")
+    if y.shape[0] != X.shape[0]:
+        raise ValueError(
+            f"{what}: X has {X.shape[0]} rows but y has {y.shape[0]} "
+            "labels — they must align row-for-row")
+    _validate_labels(y, what=f"{what} labels")
 
 _PARAM_DEFAULTS: Dict[str, Any] = dict(
     n_trees=100, max_depth=6, learning_rate=0.1, lambda_=1.0, gamma=0.0,
@@ -181,7 +214,9 @@ class BoosterEstimator:
             mesh: Optional[jax.sharding.Mesh] = None,
             checkpoint_dir: Optional[str] = None,
             checkpoint_every: int = 25, callback=None,
-            verbose: bool = False) -> "BoosterEstimator":
+            verbose: bool = False,
+            recovery: Optional[RecoveryPolicy] = None
+            ) -> "BoosterEstimator":
         """Bin ``X`` (raw floats, NaN == missing) and boost ``self.n_trees``
         trees.
 
@@ -210,6 +245,12 @@ class BoosterEstimator:
                          ``checkpoint_every`` trees (atomic, sha-verified).
                          An explicit ``xgb_model`` takes precedence over
                          any existing checkpoints (a warning is emitted).
+        recovery:        a :class:`repro.resilience.RecoveryPolicy` making
+                         the STREAMING fit self-healing (transient-failure
+                         replay from checkpoint or memory, OOM chunk
+                         degradation); its ``checkpoint_dir`` defaults to
+                         this fit's ``checkpoint_dir``.  Only valid with
+                         the ``data=``/``chunk_bytes`` path.
         """
         plan = self._resolve_plan(plan)
         if mesh is not None:
@@ -235,11 +276,17 @@ class BoosterEstimator:
                 data, eval_set=eval_set, xgb_model=xgb_model, plan=plan,
                 checkpoint_dir=checkpoint_dir,
                 checkpoint_every=checkpoint_every, callback=callback,
-                verbose=verbose)
+                verbose=verbose, recovery=recovery)
+        if recovery is not None:
+            raise ValueError(
+                "recovery= applies only to the streaming fit path "
+                "(data=... or plan.chunk_bytes); an in-memory fit has no "
+                "chunk stream to recover")
         if X is None or y is None:
             raise TypeError("fit needs (X, y) arrays or data=DataSource")
         X = np.asarray(X, dtype=np.float64)
         y = np.asarray(y)
+        _validate_fit_arrays(X, y)
         objective, n_classes = self._resolve_objective(y)
 
         init_model, binner, n_trees = self._resume_or_warm_start(
@@ -255,8 +302,10 @@ class BoosterEstimator:
         ev = None
         if eval_set is not None:
             X_val, y_val = eval_set
-            ev = (binner.transform(np.asarray(X_val, dtype=np.float64)),
-                  np.asarray(y_val, dtype=np.float32))
+            X_val = np.asarray(X_val, dtype=np.float64)
+            y_val = np.asarray(y_val, dtype=np.float32)
+            _validate_fit_arrays(X_val, y_val, what="eval_set")
+            ev = (binner.transform(X_val), y_val)
 
         def cb(t_idx, model):
             if callback is not None:
@@ -363,7 +412,7 @@ class BoosterEstimator:
     # -- out-of-core fit ---------------------------------------------------
     def _fit_streaming(self, data, *, eval_set, xgb_model, plan,
                        checkpoint_dir, checkpoint_every, callback,
-                       verbose) -> "BoosterEstimator":
+                       verbose, recovery=None) -> "BoosterEstimator":
         """``fit`` over a chunked DataSource: one sketch+label pass builds
         the binner (``StreamingBinner``), then ``core.gbdt.train_streaming``
         re-streams chunks per tree level — the full binned matrix never
@@ -402,6 +451,7 @@ class BoosterEstimator:
         if sketch is not None:
             sketch.finalize()
         y = np.concatenate(ys)
+        _validate_labels(y, what="streamed labels")
 
         objective, n_classes = self._resolve_objective(y)
         objective, n_classes = self._check_warm_model(init_model, objective,
@@ -410,13 +460,25 @@ class BoosterEstimator:
         ev = None
         if eval_set is not None:
             X_val, y_val = eval_set
-            ev = (binner.transform(np.asarray(X_val, dtype=np.float64)),
-                  np.asarray(y_val, dtype=np.float32))
+            X_val = np.asarray(X_val, dtype=np.float64)
+            y_val = np.asarray(y_val, dtype=np.float32)
+            _validate_fit_arrays(X_val, y_val, what="eval_set")
+            ev = (binner.transform(X_val), y_val)
+
+        if (recovery is not None and recovery.checkpoint_dir is None
+                and checkpoint_dir is not None):
+            recovery = dataclasses.replace(
+                recovery, checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every)
+        # when the trainer checkpoints (recovery with a checkpoint_dir),
+        # the estimator-side callback must not double-write the same steps
+        trainer_saves = (recovery is not None
+                         and recovery.checkpoint_dir is not None)
 
         def cb(t_idx, model):
             if callback is not None:
                 callback(t_idx, model)
-            if (checkpoint_dir is not None
+            if (not trainer_saves and checkpoint_dir is not None
                     and (t_idx + 1) % checkpoint_every == 0):
                 serialize.save_checkpoint(
                     checkpoint_dir,
@@ -425,7 +487,7 @@ class BoosterEstimator:
         result = train_streaming(
             self._config(n_trees, objective, n_classes), source, binner, y,
             eval_set=ev, init_model=init_model, callback=cb,
-            verbose=verbose, plan=plan)
+            verbose=verbose, plan=plan, recovery=recovery)
         self._model, self._binner, self._result = result.model, binner, result
         if checkpoint_dir is not None:
             serialize.save_checkpoint(checkpoint_dir, self,

@@ -26,6 +26,7 @@ from repro.core import tree as tree_mod
 from repro.core.binning import BinnedDataset
 from repro.kernels import ops
 from repro.kernels.ref import TreeArrays
+from repro.resilience.recovery import RecoveryPolicy, classify
 
 
 @dataclasses.dataclass(frozen=True)
@@ -707,7 +708,8 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
                     callback: Optional[Callable[[int, GBDTModel], None]] = None,
                     verbose: bool = False,
                     plan: Optional[ExecutionPlan] = None,
-                    chunk_rows: Optional[int] = None) -> TrainResult:
+                    chunk_rows: Optional[int] = None,
+                    recovery: Optional[RecoveryPolicy] = None) -> TrainResult:
     """Out-of-core twin of :func:`train`: the binned matrix is NEVER
     materialized — each tree level re-streams device-sized chunks from
     ``source``, accumulating step-① histograms chunk by chunk and keeping
@@ -723,6 +725,18 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
     eval_set:    optional in-memory ``(BinnedDataset, y_val)`` pair.
     chunk_rows:  records per streamed chunk; defaults to the plan's
                  ``chunk_bytes`` budget (``ExecutionPlan.chunk_rows``).
+    recovery:    a :class:`repro.resilience.RecoveryPolicy` enabling
+                 self-healing rounds: a transient source failure replays
+                 the round (from the newest ``checkpoint_dir`` checkpoint
+                 when one exists, else from the in-memory end-of-previous
+                 -round state), and a device OOM halves the chunk size
+                 and retries — chunked histogram accumulation is
+                 chunk-size-invariant, so degradation never changes the
+                 model.  Rounds commit state atomically (margins, trees,
+                 history all mutate only after the round's compute
+                 succeeds), and the per-round RNG is keyed by
+                 ``(seed, round)``, so replayed rounds reproduce the
+                 fault-free fit.  ``None`` (default) = fail fast.
 
     Per-round data passes: ``max_depth + 1`` (one per level — the previous
     level's partition is applied lazily in the histogram pass — plus one
@@ -772,6 +786,10 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
     # never pad past the data: a small dataset under a large byte budget
     # would otherwise stream (and histogram) mostly padding every pass
     chunk_rows = max(1, min(int(chunk_rows), n))
+    # mutable so OOM degradation can shrink the streamed chunks mid-fit;
+    # each pass reads the cell once at open, so a resize takes effect on
+    # the retried round's first pass
+    chunk_state = {"rows": chunk_rows}
     missing_bin = binner.max_bins - 1
     is_cat_field = jnp.asarray(binner._is_cat)
     n_chunks = [0]
@@ -783,18 +801,19 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
         logical device shape — ``codes`` is a :class:`PackedCodes` when
         the plan packs, so each chunk DMAs half the code bytes."""
         from repro.data.pipeline import PrefetchIterator
+        rows_now = chunk_state["rows"]
 
         def gen():
-            for X_chunk, _ in source.chunks(chunk_rows):
+            for X_chunk, _ in source.chunks(rows_now):
                 codes = binner.transform_codes(X_chunk)
                 n_real = codes.shape[0]
-                if n_real > chunk_rows:
+                if n_real > rows_now:
                     raise ValueError(
                         f"source yielded a {n_real}-row chunk for a "
-                        f"{chunk_rows}-row request")
-                if n_real < chunk_rows:
+                        f"{rows_now}-row request")
+                if n_real < rows_now:
                     codes = np.pad(codes,
-                                   ((0, chunk_rows - n_real), (0, 0)))
+                                   ((0, rows_now - n_real), (0, 0)))
                 if packed:
                     codes = binning_mod.pack_nibbles_np(codes)
                 yield {"rows": np.int32(n_real), "codes": codes}
@@ -851,50 +870,138 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
     best_eval, best_round = np.inf, -1
 
     start = len(trees)
-    for t_idx in range(start, start + config.n_trees):
-        tkey = jax.random.fold_in(key, t_idx)
-        t0 = time.perf_counter()
-        g, h = loss.grad_hess(margins, y)
-        g, h, field_mask = _round_stats(config, tkey, g, h, n, F, K)
-        g2 = np.asarray(g.T if K is not None else g[None], np.float32)
-        h2 = np.asarray(h.T if K is not None else h[None], np.float32)
+    end = start + config.n_trees
+    rstats = {"recoveries": 0, "oom_halvings": 0, "replayed_rounds": 0}
+    pending_restore = False
 
-        forest, leaf_ids = tree_mod.fit_forest_chunked(
-            binned_chunks, g2, h2, depth=depth, n_bins=binner.max_bins,
-            missing_bin=missing_bin, is_cat_field=is_cat_field,
-            field_mask=field_mask, lambda_=config.lambda_,
-            gamma=config.gamma, min_child_weight=config.min_child_weight,
-            plan=kernel_plan)
-        forest = forest._replace(
-            leaf_value=forest.leaf_value * config.learning_rate)
-        forest = jax.tree.map(jax.block_until_ready, forest)
-        t1 = time.perf_counter()
+    def _save_round_checkpoint(rounds_done: int) -> None:
+        # lazy import: repro.api depends on this module
+        from repro.api import serialize
+        from repro.core.inference import GBDTPipeline
+        model = _as_model(trees, base_margin, config, missing_bin, F)
+        serialize.save_checkpoint(recovery.checkpoint_dir,
+                                  GBDTPipeline(binner=binner, model=model),
+                                  rounds_done)
+
+    def _restore_state():
+        """Trainer state from the newest valid checkpoint: trees unstacked
+        from the bundled model, margins recomputed with one streamed
+        inference pass (so no per-record state needs checkpointing)."""
+        from repro.api import serialize
+        pipe, _step = serialize.load_checkpoint(recovery.checkpoint_dir)
+        model = pipe.model
+        if K is not None:
+            rtrees = _unstack_forests(model.trees, model.n_rounds, K)
+        else:
+            rtrees = [TreeArrays(*[a[i] for a in model.trees])
+                      for i in range(model.n_trees)]
+        rmargins = _streamed_margins(model, binned_chunks, n, kernel_plan)
+        rev = (model.predict_margin(eval_set[0].codes, plan=kernel_plan)
+               if eval_set is not None else None)
+        return rtrees, rmargins, rev, len(rtrees)
+
+    t_idx = t_done = start
+    while t_idx < end:
+        try:
+            if pending_restore:
+                trees, margins, eval_margins, t_idx = _restore_state()
+                rstats["replayed_rounds"] += max(0, t_done - t_idx)
+                del history["train_loss"][t_idx - start:]
+                if eval_set is not None:
+                    del history["eval_loss"][t_idx - start:]
+                    evs = history["eval_loss"]
+                    best_eval = min(evs) if evs else np.inf
+                    best_round = (start + int(np.argmin(evs))) if evs \
+                        else -1
+                pending_restore = False
+
+            tkey = jax.random.fold_in(key, t_idx)
+            t0 = time.perf_counter()
+            g, h = loss.grad_hess(margins, y)
+            g, h, field_mask = _round_stats(config, tkey, g, h, n, F, K)
+            g2 = np.asarray(g.T if K is not None else g[None], np.float32)
+            h2 = np.asarray(h.T if K is not None else h[None], np.float32)
+
+            forest, leaf_ids = tree_mod.fit_forest_chunked(
+                binned_chunks, g2, h2, depth=depth, n_bins=binner.max_bins,
+                missing_bin=missing_bin, is_cat_field=is_cat_field,
+                field_mask=field_mask, lambda_=config.lambda_,
+                gamma=config.gamma,
+                min_child_weight=config.min_child_weight,
+                plan=kernel_plan)
+            forest = forest._replace(
+                leaf_value=forest.leaf_value * config.learning_rate)
+            forest = jax.tree.map(jax.block_until_ready, forest)
+            t1 = time.perf_counter()
+
+            # step ⑤ for free: the chunk-local node ids END as leaf
+            # slots, so the margin refresh is a leaf-value lookup, not a
+            # data pass
+            delta = jax.vmap(lambda v, i: v[i])(
+                forest.leaf_value, jnp.asarray(leaf_ids))           # (K, n)
+            tree = forest if K is not None else TreeArrays(
+                *[a[0] for a in forest])
+            new_margins = margins + (delta.T if K is not None
+                                     else delta[0])
+            new_margins.block_until_ready()
+            t2 = time.perf_counter()
+
+            if eval_set is not None:
+                if K is not None:
+                    ev_delta = _predict_forest(tree, eval_set[0],
+                                               kernel_plan)
+                else:
+                    ev_delta = _predict_one_tree(tree, eval_set[0],
+                                                 kernel_plan)
+                new_eval_margins = eval_margins + ev_delta
+                ev = float(jnp.mean(loss.value(
+                    new_eval_margins,
+                    jnp.asarray(eval_set[1], jnp.float32))))
+            else:
+                new_eval_margins, ev = None, None
+        except Exception as exc:  # noqa: BLE001 — classified below
+            action = classify(exc) if recovery is not None else "fatal"
+            if action == "oom":
+                rows = chunk_state["rows"]
+                new_rows = max(recovery.min_chunk_rows, rows // 2)
+                if (new_rows >= rows or rstats["oom_halvings"]
+                        >= recovery.max_oom_halvings):
+                    raise
+                rstats["oom_halvings"] += 1
+                chunk_state["rows"] = new_rows
+                if verbose:
+                    print(f"[gbdt] device OOM at tree {t_idx}: chunk_rows "
+                          f"{rows} -> {new_rows}; retrying round")
+                continue
+            if action == "transient":
+                if rstats["recoveries"] >= recovery.max_recoveries:
+                    raise
+                rstats["recoveries"] += 1
+                if recovery.retry_delay_s:
+                    time.sleep(recovery.retry_delay_s)
+                if recovery.checkpoint_dir is not None:
+                    from repro.api import serialize
+                    pending_restore = serialize.has_checkpoint(
+                        recovery.checkpoint_dir)
+                if verbose:
+                    how = ("restoring newest checkpoint" if pending_restore
+                           else "replaying round in memory")
+                    print(f"[gbdt] transient failure at tree {t_idx} "
+                          f"({type(exc).__name__}: {exc}); {how}")
+                continue
+            raise
+
+        # ---- commit: the round succeeded, mutate trainer state atomically
         step_times["binning_split"] += t1 - t0
-
-        # step ⑤ for free: the chunk-local node ids END as leaf slots, so
-        # the margin refresh is a leaf-value lookup, not a data pass
-        delta = jax.vmap(lambda v, i: v[i])(forest.leaf_value,
-                                            jnp.asarray(leaf_ids))  # (K, n)
-        tree = forest if K is not None else TreeArrays(*[a[0]
-                                                         for a in forest])
-        margins = margins + (delta.T if K is not None else delta[0])
-        margins.block_until_ready()
-        t2 = time.perf_counter()
         step_times["traversal"] += t2 - t1
-
+        margins = new_margins
         trees.append(tree)
         train_loss = float(jnp.mean(loss.value(margins, y)))
         history["train_loss"].append(train_loss)
+        stop_early = False
 
         if eval_set is not None:
-            if K is not None:
-                ev_delta = _predict_forest(tree, eval_set[0], kernel_plan)
-            else:
-                ev_delta = _predict_one_tree(tree, eval_set[0], kernel_plan)
-            eval_margins = eval_margins + ev_delta
-            ev = float(jnp.mean(loss.value(eval_margins,
-                                           jnp.asarray(eval_set[1],
-                                                       jnp.float32))))
+            eval_margins = new_eval_margins
             history["eval_loss"].append(ev)
             if ev < best_eval - 1e-12:
                 best_eval, best_round = ev, t_idx
@@ -903,20 +1010,27 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
                 if verbose:
                     print(f"[gbdt] early stop at tree {t_idx} "
                           f"(best {best_round}: {best_eval:.6f})")
-                break
+                stop_early = True
         step_times["other"] += time.perf_counter() - t2
 
         if verbose and (t_idx % config.log_every == 0
-                        or t_idx == start + config.n_trees - 1):
+                        or t_idx == end - 1):
             print(f"[gbdt] tree {t_idx:4d}  train_loss={train_loss:.6f}  "
-                  f"({n_chunks[0]} chunks x {chunk_rows} rows)")
+                  f"({n_chunks[0]} chunks x {chunk_state['rows']} rows)")
+        t_done = t_idx + 1
+        if (recovery is not None and recovery.checkpoint_dir is not None
+                and (t_done - start) % recovery.checkpoint_every == 0):
+            _save_round_checkpoint(t_done)
         if callback is not None:
             callback(t_idx, _as_model(trees, base_margin, config,
                                       missing_bin, F))
+        t_idx = t_done
+        if stop_early:
+            break
 
     return TrainResult(
         model=_as_model(trees, base_margin, config, missing_bin, F),
         history=history, step_times=step_times,
-        stats={"n_rows": n, "chunk_rows": int(chunk_rows),
+        stats={"n_rows": n, "chunk_rows": int(chunk_state["rows"]),
                "n_chunks": int(n_chunks[0]),
-               "passes_per_round": depth + 1})
+               "passes_per_round": depth + 1, **rstats})

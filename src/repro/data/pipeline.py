@@ -17,13 +17,82 @@ from __future__ import annotations
 
 import dataclasses
 import glob
+import io
+import json
 import os
 import queue
 import threading
-from typing import Iterator, Optional, Protocol, Tuple, runtime_checkable
+import zlib
+from typing import (Iterable, Iterator, Optional, Protocol, Tuple,
+                    runtime_checkable)
 
 import jax
 import numpy as np
+
+from repro.resilience.errors import ShardCorruptionError
+
+MANIFEST_NAME = "manifest.json"
+
+
+# --------------------------------------------------------------------------
+# shard integrity: crc32 sidecar manifest
+# --------------------------------------------------------------------------
+def write_shard_manifest(directory: str, paths: Iterable[str]) -> str:
+    """Write ``manifest.json`` next to the shards: per-shard crc32 + byte
+    count, keyed by basename.  Both shard writers call this; the shard
+    sources verify against it on every read so bit-rot or torn writes
+    surface as :class:`ShardCorruptionError` instead of silently feeding
+    garbage into a fit."""
+    shards = {}
+    for path in paths:
+        with open(path, "rb") as f:
+            data = f.read()
+        shards[os.path.basename(path)] = {
+            "crc32": zlib.crc32(data) & 0xFFFFFFFF,
+            "bytes": len(data),
+        }
+    manifest_path = os.path.join(directory, MANIFEST_NAME)
+    tmp = manifest_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"version": 1, "shards": shards}, f, indent=1)
+    os.replace(tmp, manifest_path)
+    return manifest_path
+
+
+def _load_manifest(directory: str) -> Optional[dict]:
+    """The shard table from ``manifest.json``, or None when the directory
+    predates checksumming (verification is then skipped — back-compat)."""
+    path = os.path.join(directory, MANIFEST_NAME)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)["shards"]
+    except (OSError, json.JSONDecodeError, KeyError) as e:
+        raise ShardCorruptionError(
+            f"unreadable shard manifest {path!r}: {e}") from e
+
+
+def _open_verified(path: str, manifest: Optional[dict]):
+    """``np.load`` the shard, crc32-verified against the manifest when one
+    exists.  Verification reads the file once into memory and loads from
+    the verified bytes, so the checked bytes ARE the loaded bytes."""
+    if manifest is None:
+        return np.load(path)
+    entry = manifest.get(os.path.basename(path))
+    if entry is None:
+        raise ShardCorruptionError(
+            f"shard {path!r} is not in the directory manifest — stale or "
+            "foreign file; re-export the shard directory")
+    with open(path, "rb") as f:
+        data = f.read()
+    if len(data) != entry["bytes"] or \
+            (zlib.crc32(data) & 0xFFFFFFFF) != entry["crc32"]:
+        raise ShardCorruptionError(
+            f"shard {path!r} failed crc32 verification "
+            f"({len(data)} bytes vs {entry['bytes']} expected) — the file "
+            "was corrupted after export; re-stage it")
+    return np.load(io.BytesIO(data))
 
 
 # --------------------------------------------------------------------------
@@ -87,13 +156,15 @@ class NpzShardSource:
     to the requested chunk size, so shard and chunk boundaries need not
     align.  Write shards with :func:`write_npz_shards`."""
 
-    def __init__(self, directory: str, x_key: str = "X", y_key: str = "y"):
+    def __init__(self, directory: str, x_key: str = "X", y_key: str = "y",
+                 verify: bool = True):
         self.directory = str(directory)
         self.x_key, self.y_key = x_key, y_key
         self.paths = sorted(glob.glob(os.path.join(self.directory, "*.npz")))
         if not self.paths:
             raise FileNotFoundError(f"no .npz shards under {directory!r}")
-        with np.load(self.paths[0]) as z:
+        self.manifest = _load_manifest(self.directory) if verify else None
+        with _open_verified(self.paths[0], self.manifest) as z:
             if x_key not in z:
                 raise KeyError(f"shard {self.paths[0]!r} has no {x_key!r} "
                                f"array (found {sorted(z.files)})")
@@ -105,7 +176,7 @@ class NpzShardSource:
 
     def chunks(self, rows: int):
         for path in self.paths:
-            with np.load(path) as z:
+            with _open_verified(path, self.manifest) as z:
                 if self.x_key not in z:
                     raise KeyError(
                         f"shard {path!r} has no {self.x_key!r} array "
@@ -134,7 +205,9 @@ def write_npz_shards(directory: str, source: "DataSource",
 
     Pre-existing ``*.npz`` files in the directory are removed first: the
     directory IS the dataset (``NpzShardSource`` globs every shard), so a
-    shorter re-export must not leave stale shards mixed in.
+    shorter re-export must not leave stale shards mixed in.  A crc32
+    ``manifest.json`` sidecar is written last; readers verify every shard
+    against it.
     """
     os.makedirs(directory, exist_ok=True)
     for stale in glob.glob(os.path.join(directory, "*.npz")):
@@ -147,6 +220,7 @@ def write_npz_shards(directory: str, source: "DataSource",
             arrays["y"] = np.asarray(y)
         np.savez(path, **arrays)
         paths.append(path)
+    write_shard_manifest(directory, paths)
     return paths
 
 
@@ -190,6 +264,7 @@ def write_binned_shards(directory: str, source: "DataSource", binner,
         path = os.path.join(directory, f"binned_{i:05d}.npz")
         np.savez(path, **arrays)
         paths.append(path)
+    write_shard_manifest(directory, paths)
     return paths
 
 
@@ -203,14 +278,15 @@ class BinnedShardSource:
     slice of the logical matrix is a row slice of the packed bytes.
     """
 
-    def __init__(self, directory: str):
+    def __init__(self, directory: str, verify: bool = True):
         self.directory = str(directory)
         self.paths = sorted(glob.glob(
             os.path.join(self.directory, "binned_*.npz")))
         if not self.paths:
             raise FileNotFoundError(
                 f"no binned_*.npz shards under {directory!r}")
-        with np.load(self.paths[0]) as z:
+        self.manifest = _load_manifest(self.directory) if verify else None
+        with _open_verified(self.paths[0], self.manifest) as z:
             self._n_fields = int(z["n_fields"])
             self.packed = bool(z["packed"])
 
@@ -221,7 +297,7 @@ class BinnedShardSource:
     def chunks(self, rows: int):
         from repro.core.binning import PackedCodes
         for path in self.paths:
-            with np.load(path) as z:
+            with _open_verified(path, self.manifest) as z:
                 if int(z["n_fields"]) != self._n_fields or \
                         bool(z["packed"]) != self.packed:
                     raise ValueError(

@@ -21,6 +21,7 @@ import json
 import os
 import re
 import shutil
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -137,8 +138,15 @@ def restore_named(directory: str, *, step: Optional[int] = None
         manifest = _validate(path)
         if manifest is None or "names" not in manifest:
             continue  # corrupt/partial/legacy — fall back to older
-        with np.load(os.path.join(path, "arrays.npz")) as z:
-            arrays = {k: z[k] for k in manifest["names"]}
+        try:
+            with np.load(os.path.join(path, "arrays.npz")) as z:
+                arrays = {k: z[k] for k in manifest["names"]}
+        except Exception as e:  # noqa: BLE001 — torn step, use next-newest
+            warnings.warn(
+                f"checkpoint step_{s} under {directory!r} passed sha "
+                f"validation but failed to load ({type(e).__name__}: {e}); "
+                "falling back to the next-newest step", RuntimeWarning)
+            continue
         return arrays, s, manifest["meta"]
     raise FileNotFoundError(f"no valid named checkpoint under {directory!r}")
 
@@ -160,8 +168,16 @@ def restore(directory: str, like: Any, *,
         manifest = _validate(path)
         if manifest is None:
             continue  # corrupt/partial — fall back to an older checkpoint
-        with np.load(os.path.join(path, "arrays.npz")) as z:
-            arrays = [z[f"leaf_{i:05d}"] for i in range(manifest["n_leaves"])]
+        try:
+            with np.load(os.path.join(path, "arrays.npz")) as z:
+                arrays = [z[f"leaf_{i:05d}"]
+                          for i in range(manifest["n_leaves"])]
+        except Exception as e:  # noqa: BLE001 — torn step, use next-newest
+            warnings.warn(
+                f"checkpoint step_{s} under {directory!r} passed sha "
+                f"validation but failed to load ({type(e).__name__}: {e}); "
+                "falling back to the next-newest step", RuntimeWarning)
+            continue
         treedef = jax.tree_util.tree_structure(like)
         state = jax.tree_util.tree_unflatten(treedef, arrays)
         if shardings is not None:

@@ -23,20 +23,11 @@ import os
 import time
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
-
-class FaultInjector:
-    """Deterministic failure injection for tests: raise at given steps."""
-
-    def __init__(self, fail_at_steps: List[int],
-                 exc: type = RuntimeError):
-        self.fail_at = set(fail_at_steps)
-        self.exc = exc
-        self.fired: List[int] = []
-
-    def check(self, step: int) -> None:
-        if step in self.fail_at and step not in self.fired:
-            self.fired.append(step)
-            raise self.exc(f"injected fault at step {step}")
+# the round-level injector is now a shim over the generalized, multi-site
+# fault harness in repro.resilience.faults — re-exported here so every
+# pre-existing ``distributed.fault.FaultInjector`` import keeps working
+from repro.resilience.faults import (Fault, FaultInjector,  # noqa: F401
+                                     FaultSchedule)
 
 
 class StepJournal:

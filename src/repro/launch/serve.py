@@ -65,6 +65,8 @@ def run_gbdt(args):
     from repro.api import (ExecutionPlan, ModelRegistry, Server, load,
                            warmup_buckets)
     from repro.core.inference import ROW_BUCKET_FLOOR, bucket_pow2
+    from repro.serving import (DeadlineExceededError, DispatcherCrashError,
+                               QueueFullError)
 
     plan = ExecutionPlan.auto()
     registry = ModelRegistry(plan)
@@ -85,9 +87,13 @@ def run_gbdt(args):
 
     sizes = request_sizes(args.batch)
     mb = args.microbatch or max(sizes)
+    bounded = (args.max_queue_rows is not None
+               or args.timeout_ms is not None)
     server = Server(registry, max_batch=mb,
                     default_slack_ms=args.slack_ms,
-                    log_every_s=args.log_every_s)
+                    log_every_s=args.log_every_s,
+                    max_queue_rows=args.max_queue_rows,
+                    timeout_ms=args.timeout_ms)
 
     # every flush the daemon can assemble holds <= max_batch rows, so the
     # warmup bucket set is a strict SUPERSET of what the measured mix can
@@ -121,12 +127,25 @@ def run_gbdt(args):
         Xb = rng.normal(size=(n_rows, n_fields))
         Xb[rng.random(Xb.shape) < 0.02] = np.nan     # missing values
         pending.append(server.submit(names[i % len(names)], Xb))
+    # zero SILENT drops: every submitted request must resolve — either
+    # with rows or with one of the typed overload/crash failures
+    served = total = 0
+    typed = {"shed": 0, "deadline": 0, "crash": 0}
     for req in pending:
-        req.result(timeout=600)
+        try:
+            req.result(timeout=600)
+            served += 1
+            total += req.n_rows
+        except QueueFullError:
+            typed["shed"] += 1
+        except DeadlineExceededError:
+            typed["deadline"] += 1
+        except DispatcherCrashError:
+            typed["crash"] += 1
     wall = time.perf_counter() - t_loop
-    total = sum(r.n_rows for r in pending)
 
     stats = server.stats()
+    health = server.health()
     server.stop()
     print(f"[serve] sustained: {total / wall:.0f} records/s over "
           f"{args.requests} requests, {len(names)} models "
@@ -137,9 +156,21 @@ def run_gbdt(args):
         print(f"[serve]   {name} v{s['version']}: {s['requests']} req, "
               f"p50 {s['p50_ms']:.1f} ms, p99 {s['p99_ms']:.1f} ms, "
               f"fill {s['batch_fill']:.2f}, dropped {s['dropped']}, "
+              f"shed {s['shed']}, expired {s['deadline_failures']}, "
               f"retraces after warmup {s['traces'] - warm_traces[name]}")
-        ok &= s["dropped"] == 0 and s["traces"] == warm_traces[name]
-    print(f"[serve] zero drops + zero retraces across hot-swap: "
+        ok &= s["traces"] == warm_traces[name]
+        if not bounded:
+            ok &= s["dropped"] == 0
+    accounted = served + sum(typed.values())
+    ok &= accounted == len(pending)
+    print(f"[serve] health: alive={health.alive} ready={health.ready} "
+          f"restarts={health.dispatcher_restarts} "
+          f"typed_failures={health.failed_requests}")
+    print(f"[serve] accounting: {served} served + {typed['shed']} shed + "
+          f"{typed['deadline']} expired + {typed['crash']} crash-failed "
+          f"= {accounted}/{len(pending)} (zero silent drops: "
+          f"{'OK' if accounted == len(pending) else 'VIOLATED'})")
+    print(f"[serve] zero retraces across hot-swap: "
           f"{'OK' if ok else 'UNEXPECTED'}")
 
 
@@ -216,6 +247,12 @@ def main():
                          "request size)")
     ap.add_argument("--models", type=int, default=2,
                     help="demo tenants published into the registry")
+    ap.add_argument("--max-queue-rows", type=int, default=None,
+                    help="per-model queue bound; overload is shed with "
+                         "typed QueueFullError futures (default unbounded)")
+    ap.add_argument("--timeout-ms", type=float, default=None,
+                    help="hard queue deadline; expired requests fail with "
+                         "DeadlineExceededError (default none)")
     ap.add_argument("--slack-ms", type=float, default=20.0,
                     help="per-request deadline slack (queue-wait budget)")
     ap.add_argument("--log-every-s", type=float, default=None,

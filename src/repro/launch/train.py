@@ -44,6 +44,9 @@ def run_gbdt(args):
     # psum per level); N must divide the available device count
     mesh = None
     if args.data_shards > 1:
+        if args.stream:
+            raise SystemExit("--stream (out-of-core) and --data-shards "
+                             "(in-memory distributed) cannot combine")
         n_dev = len(jax.devices())
         if args.data_shards > n_dev:
             raise SystemExit(
@@ -53,16 +56,44 @@ def run_gbdt(args):
         mesh = make_mesh((args.data_shards,), ("data",),
                          devices=jax.devices()[:args.data_shards])
 
-    # checkpoint_dir resumes from the newest valid step and keeps writing
-    # atomic, sha-verified bundles every --ckpt-every trees
-    est.fit(X, y, plan=ExecutionPlan.auto(hist_strategy=args.strategy),
-            mesh=mesh,
-            checkpoint_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every,
-            callback=cb, verbose=True)
+    plan = ExecutionPlan.auto(hist_strategy=args.strategy)
+    if args.stream:
+        # resilient out-of-core path: stage the dataset once as
+        # crc32-manifested npz shards, stream it back through a
+        # self-healing RetryingSource, and fit under a RecoveryPolicy —
+        # transient mid-round failures replay from the newest checkpoint,
+        # device OOM degrades the chunk size instead of dying
+        from repro.api import (ArraySource, NpzShardSource, RecoveryPolicy,
+                               RetryPolicy, RetryingSource,
+                               write_npz_shards)
+        shard_dir = os.path.join(args.ckpt_dir, "shards")
+        write_npz_shards(shard_dir, ArraySource(X, y),
+                         rows_per_shard=max(1024, args.records // 8))
+        source = RetryingSource(NpzShardSource(shard_dir),
+                                RetryPolicy(chunk_timeout_s=60.0))
+        est.fit(data=source, plan=plan,
+                checkpoint_dir=args.ckpt_dir,
+                checkpoint_every=args.ckpt_every, callback=cb,
+                verbose=True,
+                recovery=RecoveryPolicy(checkpoint_dir=args.ckpt_dir,
+                                        checkpoint_every=args.ckpt_every))
+    else:
+        # checkpoint_dir resumes from the newest valid step and keeps
+        # writing atomic, sha-verified bundles every --ckpt-every trees
+        est.fit(X, y, plan=plan, mesh=mesh,
+                checkpoint_dir=args.ckpt_dir,
+                checkpoint_every=args.ckpt_every,
+                callback=cb, verbose=True)
     loss = est.history_.get("train_loss") or [float("nan")]
     shards = est.stats_.get("n_shards", 1)
     print(f"[train] done: {est.n_trees_} trees, loss {loss[-1]:.5f}, "
           f"shards {shards}")
+    if args.stream:
+        st = est.stats_
+        print(f"[train] resilience: {st.get('recoveries', 0)} recoveries, "
+              f"{st.get('oom_halvings', 0)} OOM halvings, "
+              f"{source.stats['retries']} source retries "
+              f"(chunk_rows {st.get('chunk_rows')})")
 
 
 def run_lm(args):
@@ -107,6 +138,10 @@ def main():
     ap.add_argument("--data-shards", type=int, default=1,
                     help="data-parallel shards for distributed GBDT "
                          "training (1 = single device)")
+    ap.add_argument("--stream", action="store_true",
+                    help="resilient out-of-core path: stage checksummed "
+                         "npz shards, stream through RetryingSource and "
+                         "auto-recover mid-round failures from checkpoints")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--seed", type=int, default=0)

@@ -1,0 +1,95 @@
+"""Typed error taxonomy for the resilience layer.
+
+Every failure the training/serving stack can recover from (or must fail
+loudly on) gets a distinct type, so recovery policy is written against
+*types*, never string matching — with one deliberate exception:
+:func:`is_oom` classifies the backend's ``RESOURCE_EXHAUSTED`` errors by
+message because XLA raises them as an opaque ``XlaRuntimeError``.
+
+The split that matters:
+
+  * **transient** (:func:`is_transient`) — worth retrying: flaky reads,
+    chunk timeouts, preemptions.  The retry/recovery machinery
+    (``RetryingSource``, ``train_streaming(recovery=...)``) only ever
+    retries these.
+  * **corruption** — :class:`ShardCorruptionError` is NOT transient: a
+    checksum mismatch reproduces on every read, so retrying converts a
+    loud failure into an infinite loop (and masking it converts it into
+    silent garbage).
+  * **overload** — :class:`QueueFullError` / :class:`DeadlineExceededError`
+    / :class:`DispatcherCrashError` fail serving futures with a reason a
+    client can act on (back off, re-submit, route elsewhere); the daemon
+    never drops a request without resolving its future.
+"""
+from __future__ import annotations
+
+
+class ResilienceError(Exception):
+    """Base of the resilience taxonomy."""
+
+
+# -- data-path errors --------------------------------------------------------
+class TransientIOError(ResilienceError, OSError):
+    """A retryable IO failure (flaky read, dropped connection, ...)."""
+
+
+class ChunkTimeoutError(TransientIOError):
+    """A chunk fetch exceeded the per-chunk timeout (treated transient:
+    the pass is re-opened and fast-forwarded, then the chunk re-read)."""
+
+
+class Preemption(TransientIOError):
+    """A mid-run preemption (spot-instance style).  Transient: training
+    recovers by checkpoint restore + deterministic replay."""
+
+
+class ShardCorruptionError(ResilienceError):
+    """A shard's bytes do not match its manifest checksum.  NOT
+    transient — re-reading corrupt bytes yields corrupt bytes."""
+
+
+class DeviceOOMError(ResilienceError):
+    """Injected stand-in for the backend's RESOURCE_EXHAUSTED error
+    (real OOMs surface as ``XlaRuntimeError``; both classify via
+    :func:`is_oom`)."""
+
+
+# -- serving errors ----------------------------------------------------------
+class QueueFullError(ResilienceError):
+    """Load shed: the model's bounded queue cannot take this request.
+    The request's future fails with this — it was never enqueued."""
+
+
+class DeadlineExceededError(ResilienceError):
+    """The request's hard deadline expired while it sat queued; it is
+    failed typed instead of being served late or dropped silently."""
+
+
+class DispatcherCrashError(ResilienceError):
+    """The dispatcher thread died with this request in flight; the
+    supervisor failed it cleanly while restarting the dispatcher."""
+
+
+# -- classification ----------------------------------------------------------
+_OOM_MARKERS = ("resource_exhausted", "resource exhausted", "out of memory")
+
+
+def is_oom(exc: BaseException) -> bool:
+    """Does ``exc`` look like a device-memory exhaustion?  Matches the
+    typed :class:`DeviceOOMError` and (by message) the backend's
+    ``RESOURCE_EXHAUSTED`` ``XlaRuntimeError``."""
+    if isinstance(exc, DeviceOOMError):
+        return True
+    msg = str(exc).lower()
+    return any(m in msg for m in _OOM_MARKERS)
+
+
+def is_transient(exc: BaseException) -> bool:
+    """Is ``exc`` worth retrying?  Corruption and OOM are NOT transient
+    (OOM has its own recovery: chunk degradation, not a plain retry)."""
+    if isinstance(exc, (ShardCorruptionError, DeviceOOMError)):
+        return False
+    if is_oom(exc):
+        return False
+    return isinstance(exc, (TransientIOError, OSError, TimeoutError,
+                            ConnectionError))

@@ -1,0 +1,67 @@
+"""Recovery policy for self-healing streaming training.
+
+``train_streaming(recovery=RecoveryPolicy(...))`` turns the out-of-core
+trainer into the single-device twin of PR 6's elastic distributed
+engine: a transient source failure mid-round restores the newest
+``save_named`` checkpoint and deterministically replays the lost rounds
+WITHOUT restarting the fit (the per-round RNG stream is keyed by
+``(seed, round)``, so a replayed round reproduces the fault-free round);
+a device OOM halves the streamed chunk size and retries the round
+(chunked histogram accumulation is chunk-size-invariant, so degradation
+never changes the model — only its memory footprint).
+
+Action classification lives here (:func:`classify`) so the trainer's
+except-clause stays a dispatch table, not a policy decision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.resilience.errors import is_oom, is_transient
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """What ``train_streaming`` may do when a round fails.
+
+    checkpoint_dir:    where round checkpoints live.  When set, the
+                       trainer writes one every ``checkpoint_every``
+                       rounds (atomic ``save_named`` bundles) and
+                       transient recovery restores the newest valid one;
+                       when None, transient recovery replays from the
+                       in-memory end-of-previous-round state instead.
+    checkpoint_every:  round cadence of trainer-side checkpoints.
+    max_recoveries:    transient-failure budget for the whole fit; the
+                       (max_recoveries + 1)-th transient failure
+                       propagates.
+    max_oom_halvings:  how many times an OOM may halve ``chunk_rows``
+                       before propagating.
+    min_chunk_rows:    degradation floor — never stream smaller chunks.
+    retry_delay_s:     pause before a replay (lets a flaky mount settle).
+    """
+
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 5
+    max_recoveries: int = 3
+    max_oom_halvings: int = 3
+    min_chunk_rows: int = 256
+    retry_delay_s: float = 0.0
+
+    def __post_init__(self):
+        if self.checkpoint_every < 1:
+            raise ValueError("checkpoint_every must be >= 1")
+        if self.max_recoveries < 0 or self.max_oom_halvings < 0:
+            raise ValueError("recovery budgets must be >= 0")
+        if self.min_chunk_rows < 1:
+            raise ValueError("min_chunk_rows must be >= 1")
+
+
+def classify(exc: BaseException) -> str:
+    """``"oom"`` | ``"transient"`` | ``"fatal"`` — the trainer's three
+    recovery branches (degrade, replay, propagate)."""
+    if is_oom(exc):
+        return "oom"
+    if is_transient(exc):
+        return "transient"
+    return "fatal"

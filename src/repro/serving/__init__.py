@@ -11,10 +11,19 @@ Public surface (re-exported through ``repro.api``):
   * :class:`Request` — the future handle ``submit()`` returns.
   * :func:`warmup_buckets` — the reachable flush-bucket set (shared by
     ``Server.warmup`` and any external zero-retrace check).
+  * :class:`ServerHealth` — ``Server.health()``'s liveness/readiness
+    snapshot; typed overload/crash failures are the exception types in
+    :mod:`repro.resilience` (``QueueFullError``, ``DeadlineExceededError``,
+    ``DispatcherCrashError``).
 """
-from repro.serving.metrics import ModelMetrics, format_stats_line
+from repro.resilience.errors import (DeadlineExceededError,  # noqa: F401
+                                     DispatcherCrashError, QueueFullError)
+from repro.serving.metrics import (ModelMetrics, ServerHealth,
+                                   format_stats_line)
 from repro.serving.registry import ModelRegistry
 from repro.serving.server import Request, Server, warmup_buckets
 
 __all__ = ["Server", "ModelRegistry", "Request", "ModelMetrics",
-           "warmup_buckets", "format_stats_line"]
+           "ServerHealth", "warmup_buckets", "format_stats_line",
+           "QueueFullError", "DeadlineExceededError",
+           "DispatcherCrashError"]

@@ -7,9 +7,19 @@ batch-fill ratio (real rows flushed / power-of-two bucket rows they
 padded to — how much of each compiled executable's capacity the
 coalescer actually used), flush and drop counts.  All methods are
 thread-safe: the dispatcher thread records while callers snapshot.
+
+Failure accounting is EXPLICIT — zero silent drops by construction:
+every request the daemon cannot serve lands in exactly one typed
+counter (``shed`` = rejected at admission with
+:class:`~repro.resilience.QueueFullError`, ``deadline_failures`` =
+expired in queue with :class:`~repro.resilience.DeadlineExceededError`,
+``dropped`` = flush/dispatcher failure) AND its future carries the same
+typed exception.  :class:`ServerHealth` is the daemon-level
+health/readiness snapshot behind ``Server.health()``.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from collections import deque
@@ -28,6 +38,8 @@ class ModelMetrics:
         self._rows = 0
         self._flushes = 0
         self._dropped = 0
+        self._shed = 0                       # admission-rejected (queue full)
+        self._deadline_failures = 0          # expired in queue
         self._fill_rows = 0                  # real rows across flushes
         self._bucket_rows = 0                # bucket capacity they padded to
 
@@ -53,6 +65,16 @@ class ModelMetrics:
         with self._lock:
             self._dropped += 1
 
+    def record_shed(self) -> None:
+        """A request rejected at admission — the queue bound held."""
+        with self._lock:
+            self._shed += 1
+
+    def record_deadline(self) -> None:
+        """A queued segment that expired before any flush took it."""
+        with self._lock:
+            self._deadline_failures += 1
+
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
             lat = sorted(self._lat)
@@ -70,9 +92,34 @@ class ModelMetrics:
                     if self._bucket_rows else 0.0)
             return {"requests": self._requests, "rows": self._rows,
                     "flushes": self._flushes, "dropped": self._dropped,
+                    "shed": self._shed,
+                    "deadline_failures": self._deadline_failures,
                     "p50_ms": pct(50), "p99_ms": pct(99),
                     "batch_fill": fill,
                     "qps": recent / self._qps_window_s}
+
+
+@dataclasses.dataclass
+class ServerHealth:
+    """Daemon-level health/readiness — what an orchestrator probes.
+
+    ``alive`` (liveness): the dispatcher thread is running (possibly
+    after supervised restarts).  ``ready`` (readiness): alive AND
+    accepting submissions (not stopping, restart budget not exhausted).
+    ``failed_requests`` totals every typed failure across models —
+    dropped + shed + deadline_failures — so ``failed_requests`` +
+    completed requests always accounts for every submission.
+    """
+
+    alive: bool
+    ready: bool
+    dispatcher_restarts: int
+    queued_rows: int
+    models: int
+    failed_requests: int
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
 
 
 def format_stats_line(name: str, snap: Dict[str, float]) -> str:

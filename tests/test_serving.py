@@ -281,3 +281,103 @@ def test_stop_drains_pending_requests(registry):
     assert all(r.done() for r in reqs)
     with pytest.raises(RuntimeError):
         srv.submit("a", make_X(9, 20))
+
+
+# --------------------------------------------------------------------------
+# overload & failure posture (PR 9)
+# --------------------------------------------------------------------------
+def test_bounded_queue_sheds_typed_and_never_enqueues(registry):
+    from repro.api import QueueFullError
+    with Server(registry, max_batch=128, default_slack_ms=10_000.0,
+                max_queue_rows=128) as srv:
+        srv.warmup("a")
+        keep = srv.submit("a", make_X(0, 60))       # queued: 60 < max_batch
+        shed = srv.submit("a", make_X(1, 100))      # 160 > 128 -> shed
+        assert shed.done()                          # failed at admission
+        with pytest.raises(QueueFullError):
+            shed.result(timeout=1)
+        late = srv.submit("a", make_X(2, 30))       # 90 <= 128 -> admitted
+        stats = srv.stats()["a"]
+        assert stats["shed"] == 1
+        # the shed request never entered the queue
+        assert stats["queue_depth"] == 90
+    # stop() drained the admitted work; nothing silently dropped
+    assert keep.result(timeout=60).shape == (60,)
+    assert late.result(timeout=60).shape == (30,)
+
+
+def test_queue_deadline_fails_typed(registry):
+    from repro.api import DeadlineExceededError
+    with Server(registry, max_batch=256, default_slack_ms=10_000.0,
+                timeout_ms=50.0) as srv:
+        srv.warmup("a")
+        # slack says "wait 10 s for company", the hard deadline says 50 ms:
+        # the segment must expire typed, not flush
+        req = srv.submit("a", make_X(0, 20))
+        with pytest.raises(DeadlineExceededError):
+            req.result(timeout=60)
+        deadline = time.monotonic() + 30
+        while (srv.stats()["a"]["deadline_failures"] == 0
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+        stats = srv.stats()["a"]
+    assert stats["deadline_failures"] == 1
+    assert stats["queue_depth"] == 0                # popped, not leaked
+
+
+def test_dispatcher_crash_restarts_and_keeps_serving(registry):
+    from repro.api import DispatcherCrashError, FaultSchedule
+    sched = FaultSchedule()
+    sched.add("dispatch", 0, kind="error",
+              exc=RuntimeError, message="chaos: flush 0 dies")
+    with Server(registry, max_batch=256, default_slack_ms=0.0,
+                fault_injector=sched) as srv:
+        srv.warmup("a")
+        doomed = srv.submit("a", make_X(0, 30))
+        with pytest.raises(DispatcherCrashError) as ei:
+            doomed.result(timeout=60)
+        assert isinstance(ei.value.__cause__, RuntimeError)
+        # the supervisor restarted the dispatcher: serving continues
+        out = srv.submit("a", make_X(1, 30)).result(timeout=60)
+        health = srv.health()
+        stats = srv.stats()["a"]
+    assert out.shape == (30,)
+    assert health.alive and health.ready
+    assert health.dispatcher_restarts == 1
+    assert stats["dropped"] == 1                    # the crashed flush
+    assert sched.fired == [("dispatch", 0, "error")]
+
+
+def test_restart_budget_exhaustion_fails_everything_typed(registry):
+    from repro.api import DispatcherCrashError, FaultSchedule
+    sched = FaultSchedule()
+    sched.add("dispatch", 0, kind="error",
+              exc=RuntimeError, message="chaos: fatal flush")
+    with Server(registry, max_batch=256, default_slack_ms=0.0,
+                max_dispatcher_restarts=0, fault_injector=sched) as srv:
+        srv.warmup("a")
+        doomed = srv.submit("a", make_X(0, 30))
+        with pytest.raises(DispatcherCrashError):
+            doomed.result(timeout=60)
+        deadline = time.monotonic() + 30
+        while srv.health().alive and time.monotonic() < deadline:
+            time.sleep(0.01)
+        health = srv.health()
+        # dead server: submissions fail fast, typed — zero silent drops
+        fast = srv.submit("a", make_X(1, 10))
+        assert fast.done()
+        with pytest.raises(DispatcherCrashError):
+            fast.result(timeout=1)
+    assert not health.alive and not health.ready
+    assert srv.health().failed_requests == 2        # crash + fast-fail
+
+
+def test_health_reports_clean_server(registry):
+    with Server(registry, max_batch=256, default_slack_ms=0.0) as srv:
+        srv.warmup("a")
+        srv.submit("a", make_X(0, 16)).result(timeout=60)
+        h = srv.health()
+    assert h.alive and h.ready
+    assert h.dispatcher_restarts == 0 and h.failed_requests == 0
+    assert h.models == 1
+    assert h.as_dict()["alive"] is True

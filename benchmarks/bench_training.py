@@ -128,18 +128,48 @@ import jax
 from repro.core import GBDTConfig, bin_dataset
 from repro.data import make_tabular
 from repro.distributed.trainer import data_parallel_mesh, train_distributed
+from repro.resilience import RecoveryPolicy
 
 n, n_trees, depth = {n}, {n_trees}, {depth}
 X, y, cats = make_tabular(n, 20, 0, task="regression", seed=0)
 data = bin_dataset(X, max_bins=64)
 cfg = GBDTConfig(n_trees=n_trees, max_depth=depth, learning_rate=0.3)
+
+def timed(**kw):
+    # min-of-2: the recovery-overhead lane compares two subprocess-local
+    # timings, so squeeze scheduler noise out of both sides
+    return min(_one(**kw) for _ in range(2))
+
+def _one(**kw):
+    t0 = time.perf_counter()
+    train_distributed(cfg, data, y, **kw)
+    return time.perf_counter() - t0
+
 out = {{}}
 for tag, devs in (("1shard", jax.devices()[:1]), ("8shard", jax.devices())):
     mesh = data_parallel_mesh(devs)
     train_distributed(cfg, data, y, mesh=mesh)   # warm: step cached by mesh
-    t0 = time.perf_counter()
-    train_distributed(cfg, data, y, mesh=mesh)
-    out[tag] = time.perf_counter() - t0
+    out[tag] = timed(mesh=mesh)
+# fault-free fit with the recovery machinery armed (divergence sentinels
+# + checkpointable round loop): measures the wrapper's overhead when
+# nothing fails.  Interleave plain/recovery reps on the warm 8-way mesh
+# so the overhead ratio compares adjacent timings, not distant ones
+rec = RecoveryPolicy()
+# longer fits for the overhead pairs: the wrapper cost is per-round, so
+# more rounds raise the signal while per-fit timing jitter stays flat
+cfg = GBDTConfig(n_trees=n_trees * 3, max_depth=depth, learning_rate=0.3)
+train_distributed(cfg, data, y, mesh=mesh)                # warm
+train_distributed(cfg, data, y, mesh=mesh, recovery=rec)  # warm
+plain, guarded = [], []
+for _ in range(5):
+    plain.append(_one(mesh=mesh))
+    guarded.append(_one(mesh=mesh, recovery=rec))
+out["recovery"] = min(guarded)
+# per-pair ratios: adjacent timings share whatever load the host was
+# under, so the ratio cancels drift the raw times cannot
+ratios = sorted(g / p for g, p in zip(guarded, plain))
+out["overhead"] = ratios[len(ratios) // 2]
+out["recovery_trees"] = n_trees * 3
 print(json.dumps(out))
 """
 
@@ -172,6 +202,19 @@ def run_distributed(scale: float = 1.0, depth: int = 5, n_trees: int = 4):
                             f"n_trees={n_trees}"))
     rows.append(csv_row("train_dist_scaling", 0.0,
                         f"x={rps['8shard'] / rps['1shard']:.2f}"))
+    # fault-free recovery-armed fit on the same mesh: the self-healing
+    # wrapper (divergence sentinels, checkpointable rounds) must stay
+    # within 5% of the plain engine.  The gate is the median of paired
+    # plain/guarded ratios from interleaved reps — robust to host drift
+    t_rec = timed["recovery"]
+    overhead = timed["overhead"]
+    rows.append(csv_row("train_dist_recovery", t_rec * 1e6,
+                        f"rows_per_sec={n * timed['recovery_trees'] / t_rec:.0f};"
+                        f"overhead_vs_plain={overhead:.3f}"))
+    if overhead > 1.05:
+        raise RuntimeError(
+            f"recovery-armed distributed fit is {overhead:.3f}x the plain "
+            f"fit (gate: 1.05) — the fault-free path must stay cheap")
     return rows
 
 

@@ -41,6 +41,7 @@ def main() -> None:
     from benchmarks import (bench_breakdown, bench_inference,
                             bench_multiclass, bench_opts, bench_scaling,
                             bench_streaming, bench_training)
+    from repro.resilience import metrics as rmetrics
     benches = {
         "breakdown": lambda: bench_breakdown.run(scale=scale),
         "training": lambda: bench_training.run(scale=scale),
@@ -62,6 +63,7 @@ def main() -> None:
         t0 = time.time()
         entry = {"rows": [], "seconds": None, "error": None}
         report["benches"][name] = entry
+        before = rmetrics.snapshot()
         try:
             if name not in benches:
                 raise KeyError(
@@ -88,6 +90,11 @@ def main() -> None:
             entry["traceback"] = traceback.format_exc(limit=6)
             failures.append(name)
         entry["seconds"] = round(time.time() - t0, 2)
+        # "slow" vs "silently degraded": a lane that demoted a Pallas
+        # kernel or spent rounds recovering says so in the artifact
+        fired = rmetrics.delta(before)
+        entry["resilience"] = {"degradations": fired.get("degradations", 0),
+                               "recoveries": fired.get("recoveries", 0)}
         print(f"# {name} done in {entry['seconds']:.1f}s", file=sys.stderr)
 
     if args.json is not None:

@@ -22,10 +22,10 @@ import numpy as np       # noqa: E402
 from repro.api import ExecutionPlan                    # noqa: E402
 from repro.core import GBDTConfig, bin_dataset, train  # noqa: E402
 from repro.data import make_tabular                    # noqa: E402
-from repro.distributed.fault import FaultInjector      # noqa: E402
 from repro.distributed.trainer import (DistributedConfig,  # noqa: E402
                                        data_parallel_mesh,
                                        train_distributed)
+from repro.resilience.faults import FaultInjector      # noqa: E402
 
 
 def main():

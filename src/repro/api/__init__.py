@@ -59,6 +59,10 @@ _LAZY = {
     "RetryPolicy": ("repro.resilience", "RetryPolicy"),
     "RetryingSource": ("repro.resilience", "RetryingSource"),
     "FaultSchedule": ("repro.resilience", "FaultSchedule"),
+    "GracefulShutdown": ("repro.resilience", "GracefulShutdown"),
+    "TrainingInterrupted": ("repro.resilience", "TrainingInterrupted"),
+    "NumericalDivergenceError": ("repro.resilience",
+                                 "NumericalDivergenceError"),
     "QueueFullError": ("repro.resilience", "QueueFullError"),
     "DeadlineExceededError": ("repro.resilience", "DeadlineExceededError"),
     "DispatcherCrashError": ("repro.resilience", "DispatcherCrashError"),

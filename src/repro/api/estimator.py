@@ -25,6 +25,7 @@ from repro.core.gbdt import (GBDTConfig, GBDTModel, TrainResult,
 from repro.core.inference import (GBDTPipeline, feature_importance,
                                   pad_trees, sharded_predict)
 from repro.kernels.ref import TreeArrays
+from repro.resilience.errors import TrainingInterrupted
 from repro.resilience.recovery import RecoveryPolicy
 
 
@@ -215,7 +216,8 @@ class BoosterEstimator:
             checkpoint_dir: Optional[str] = None,
             checkpoint_every: int = 25, callback=None,
             verbose: bool = False,
-            recovery: Optional[RecoveryPolicy] = None
+            recovery: Optional[RecoveryPolicy] = None,
+            shutdown: Any = None
             ) -> "BoosterEstimator":
         """Bin ``X`` (raw floats, NaN == missing) and boost ``self.n_trees``
         trees.
@@ -246,11 +248,22 @@ class BoosterEstimator:
                          An explicit ``xgb_model`` takes precedence over
                          any existing checkpoints (a warning is emitted).
         recovery:        a :class:`repro.resilience.RecoveryPolicy` making
-                         the STREAMING fit self-healing (transient-failure
-                         replay from checkpoint or memory, OOM chunk
-                         degradation); its ``checkpoint_dir`` defaults to
-                         this fit's ``checkpoint_dir``.  Only valid with
-                         the ``data=``/``chunk_bytes`` path.
+                         the fit self-healing on EVERY execution path:
+                         streaming fits replay transient failures from
+                         checkpoint/memory and degrade chunk size on OOM;
+                         distributed (``mesh=``) fits re-mesh on
+                         preemption, sub-batch histograms on OOM and
+                         retry transients; all trainers arm numerical
+                         divergence sentinels (rollback + LR backoff).
+                         Its ``checkpoint_dir`` defaults to this fit's
+                         ``checkpoint_dir``.
+        shutdown:        a :class:`repro.resilience.GracefulShutdown` —
+                         on SIGTERM/SIGINT the trainer finishes the
+                         in-flight round, commits it, and raises a
+                         resumable :class:`TrainingInterrupted`.  The
+                         estimator keeps the partial model as fitted
+                         state and (with ``checkpoint_dir``) persists a
+                         resume checkpoint before re-raising.
         """
         plan = self._resolve_plan(plan)
         if mesh is not None:
@@ -276,12 +289,12 @@ class BoosterEstimator:
                 data, eval_set=eval_set, xgb_model=xgb_model, plan=plan,
                 checkpoint_dir=checkpoint_dir,
                 checkpoint_every=checkpoint_every, callback=callback,
-                verbose=verbose, recovery=recovery)
-        if recovery is not None:
-            raise ValueError(
-                "recovery= applies only to the streaming fit path "
-                "(data=... or plan.chunk_bytes); an in-memory fit has no "
-                "chunk stream to recover")
+                verbose=verbose, recovery=recovery, shutdown=shutdown)
+        if (recovery is not None and recovery.checkpoint_dir is None
+                and checkpoint_dir is not None):
+            recovery = dataclasses.replace(
+                recovery, checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every)
         if X is None or y is None:
             raise TypeError("fit needs (X, y) arrays or data=DataSource")
         X = np.asarray(X, dtype=np.float64)
@@ -316,10 +329,15 @@ class BoosterEstimator:
                     checkpoint_dir,
                     GBDTPipeline(binner=binner, model=model), t_idx + 1)
 
-        result = train(self._config(n_trees, objective, n_classes), data, y,
-                       eval_set=ev,
-                       init_model=init_model, callback=cb, verbose=verbose,
-                       plan=plan)
+        try:
+            result = train(self._config(n_trees, objective, n_classes),
+                           data, y, eval_set=ev,
+                           init_model=init_model, callback=cb,
+                           verbose=verbose, plan=plan, recovery=recovery,
+                           shutdown=shutdown)
+        except TrainingInterrupted as stop:
+            self._finish_interrupted(stop, binner, checkpoint_dir)
+            raise
         self._model, self._binner, self._result = result.model, binner, result
         if checkpoint_dir is not None:
             # step numbers count ROUNDS (same unit as the per-round callback
@@ -409,10 +427,28 @@ class BoosterEstimator:
                 f"estimator uses {objective!r}")
         return objective, n_classes
 
+    def _finish_interrupted(self, stop: TrainingInterrupted, binner,
+                            checkpoint_dir: Optional[str]) -> None:
+        """A graceful shutdown interrupted the fit after a committed round:
+        keep the partial ensemble as fitted state and persist a resume
+        checkpoint (step == rounds, the same unit the per-round callback
+        uses), then let the typed error propagate so the caller decides
+        whether to resume (re-fit with the same ``checkpoint_dir``)."""
+        if stop.result is None or stop.result.model is None:
+            return
+        self._model, self._binner = stop.result.model, binner
+        self._result = stop.result
+        if checkpoint_dir is not None and self._model.n_rounds > 0:
+            serialize.save_checkpoint(checkpoint_dir, self,
+                                      self._model.n_rounds)
+            if stop.checkpoint_dir is None:
+                stop.checkpoint_dir = checkpoint_dir
+
     # -- out-of-core fit ---------------------------------------------------
     def _fit_streaming(self, data, *, eval_set, xgb_model, plan,
                        checkpoint_dir, checkpoint_every, callback,
-                       verbose, recovery=None) -> "BoosterEstimator":
+                       verbose, recovery=None,
+                       shutdown=None) -> "BoosterEstimator":
         """``fit`` over a chunked DataSource: one sketch+label pass builds
         the binner (``StreamingBinner``), then ``core.gbdt.train_streaming``
         re-streams chunks per tree level — the full binned matrix never
@@ -484,10 +520,15 @@ class BoosterEstimator:
                     checkpoint_dir,
                     GBDTPipeline(binner=binner, model=model), t_idx + 1)
 
-        result = train_streaming(
-            self._config(n_trees, objective, n_classes), source, binner, y,
-            eval_set=ev, init_model=init_model, callback=cb,
-            verbose=verbose, plan=plan, recovery=recovery)
+        try:
+            result = train_streaming(
+                self._config(n_trees, objective, n_classes), source, binner,
+                y, eval_set=ev, init_model=init_model, callback=cb,
+                verbose=verbose, plan=plan, recovery=recovery,
+                shutdown=shutdown)
+        except TrainingInterrupted as stop:
+            self._finish_interrupted(stop, binner, checkpoint_dir)
+            raise
         self._model, self._binner, self._result = result.model, binner, result
         if checkpoint_dir is not None:
             serialize.save_checkpoint(checkpoint_dir, self,

@@ -38,6 +38,16 @@ def _on_tpu() -> bool:
     return _backend() == "tpu"
 
 
+def _pallas_ok(step: str) -> bool:
+    """One-time per-process probe that the ``step`` Pallas kernel
+    launches on this backend (graceful degradation at plan-resolution
+    time).  Lazy import: the kernels layer imports this module at load,
+    so the dependency must stay runtime-only — and ``resolved()`` is
+    never called during that import."""
+    from repro.kernels import ops as _ops
+    return _ops.pallas_available(step, interpret=not _on_tpu())
+
+
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
     """Kernel/strategy/interpret/mesh selection for every GBDT step.
@@ -193,15 +203,30 @@ class ExecutionPlan:
         return plan
 
     def resolved(self) -> "ExecutionPlan":
-        """Replace every ``"auto"`` / ``None`` with the backend default."""
+        """Replace every ``"auto"`` / ``None`` with the backend default.
+
+        On TPU the ``"auto"`` defaults elect the Pallas kernels — but
+        only after a one-time per-process launch probe
+        (:func:`repro.kernels.ops.pallas_available`) confirms each
+        kernel actually lowers on this backend; a broken lowering
+        resolves straight to the jnp twin (graceful degradation at plan
+        time, before the first real dispatch).  Explicit strategy
+        selections are honored unprobed — the dispatch layer still
+        demotes them per call if they fail.
+        """
         tpu = _on_tpu()
         kw = {}
         if self.hist_strategy == "auto":
-            kw["hist_strategy"] = "pallas_grouped" if tpu else "scatter"
+            kw["hist_strategy"] = ("pallas_grouped" if tpu and
+                                   _pallas_ok("histogram") else "scatter")
         if self.partition_strategy == "auto":
-            kw["partition_strategy"] = "pallas" if tpu else "reference"
+            kw["partition_strategy"] = ("pallas" if tpu and
+                                        _pallas_ok("partition")
+                                        else "reference")
         if self.traversal_strategy == "auto":
-            kw["traversal_strategy"] = "pallas" if tpu else "reference"
+            kw["traversal_strategy"] = ("pallas" if tpu and
+                                        _pallas_ok("traversal")
+                                        else "reference")
         if self.interpret is None:
             kw["interpret"] = not tpu
         if self.hist_subtraction is None:

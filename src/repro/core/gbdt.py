@@ -26,7 +26,12 @@ from repro.core import tree as tree_mod
 from repro.core.binning import BinnedDataset
 from repro.kernels import ops
 from repro.kernels.ref import TreeArrays
+from repro.resilience import metrics as _metrics
+from repro.resilience.errors import (NumericalDivergenceError,
+                                     TrainingInterrupted)
 from repro.resilience.recovery import RecoveryPolicy, classify
+from repro.resilience.retry import RetryingSource
+from repro.resilience.shutdown import GracefulShutdown
 
 
 @dataclasses.dataclass(frozen=True)
@@ -442,11 +447,24 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
           init_model: Optional[GBDTModel] = None,
           callback: Optional[Callable[[int, GBDTModel], None]] = None,
           verbose: bool = False,
-          plan: Optional[ExecutionPlan] = None) -> TrainResult:
+          plan: Optional[ExecutionPlan] = None,
+          recovery: Optional[RecoveryPolicy] = None,
+          shutdown: Optional[GracefulShutdown] = None) -> TrainResult:
     """Fit a GBDT ensemble.  Deterministic per-tree RNG (fault-replayable).
 
     ``plan`` selects the kernel strategies for every step; when omitted it
     is lifted from the config's legacy per-step strategy strings.
+
+    ``recovery`` arms the numerical divergence sentinels: a non-finite
+    loss/margin caught every ``config.log_every`` rounds rolls the fused
+    fit back to the last finite round (learning-rate backoff when the
+    same round diverges twice, bounded by
+    ``recovery.max_divergence_rollbacks``); without a policy the sentinel
+    raises :class:`NumericalDivergenceError` fail-fast.  ``shutdown``
+    (a :class:`repro.resilience.GracefulShutdown`) makes the fit
+    preemption-safe: a delivered signal finishes the in-flight round,
+    commits it, and raises :class:`TrainingInterrupted` carrying the
+    partial :class:`TrainResult`.
     """
     if plan is None:
         plan = ExecutionPlan.from_config(config)
@@ -458,7 +476,8 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
         from repro.distributed.trainer import train_distributed
         return train_distributed(config, data, y, eval_set=eval_set,
                                  init_model=init_model, callback=callback,
-                                 verbose=verbose, plan=plan)
+                                 verbose=verbose, plan=plan,
+                                 recovery=recovery, shutdown=shutdown)
     loss = losses_mod.get_loss(config.objective, config.n_classes)
     K = loss.n_outputs                 # None for scalar objectives
     y = jnp.asarray(y, jnp.float32)
@@ -483,9 +502,8 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
             trees = [TreeArrays(*[a[i] for a in init_model.trees])
                      for i in range(init_model.n_trees)]
         base_margin = init_model.base_margin
-        margins = init_model.predict_margin(data.codes, plan=plan)
-        eval_margins = (init_model.predict_margin(eval_set[0].codes,
-                                                  plan=plan)
+        margins = _replay_margins(init_model, data, plan)
+        eval_margins = (_replay_margins(init_model, eval_set[0], plan)
                         if eval_set is not None else None)
     elif K is not None:
         base_margin = np.asarray(loss.base_margin(y), np.float32)  # (K,)
@@ -505,7 +523,8 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
     if config.fused_rounds:
         return _train_fused(config, plan, data, y, eval_set, trees, margins,
                             eval_margins, base_margin, history, step_times,
-                            key, callback, verbose, n, F)
+                            key, callback, verbose, n, F,
+                            recovery=recovery, shutdown=shutdown)
 
     start = len(trees)
     for t_idx in range(start, start + config.n_trees):
@@ -576,9 +595,27 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
         if verbose and (t_idx % config.log_every == 0
                         or t_idx == start + config.n_trees - 1):
             print(f"[gbdt] tree {t_idx:4d}  train_loss={train_loss:.6f}")
+        # divergence sentinel: the host loop already syncs the loss each
+        # round, so the finiteness check is free; the rollback machinery
+        # lives in the fused/distributed engines — here the sentinel is
+        # fail-fast-but-typed
+        if recovery is not None and not np.isfinite(train_loss):
+            raise NumericalDivergenceError(
+                f"non-finite training loss at round {t_idx}",
+                round_index=t_idx, what="loss")
         if callback is not None:
             callback(t_idx, _as_model(trees, base_margin, config,
                                       data.missing_bin, F))
+        if shutdown is not None and shutdown.requested:
+            partial = TrainResult(
+                model=_as_model(trees, base_margin, config,
+                                data.missing_bin, F),
+                history=history, step_times=step_times,
+                stats={"n_rows": n, "interrupted": True})
+            raise TrainingInterrupted(
+                f"shutdown ({shutdown.signal_name}) after round {t_idx}",
+                rounds_done=len(trees), signal_name=shutdown.signal_name,
+                result=partial)
 
     return TrainResult(model=_as_model(trees, base_margin, config,
                                        data.missing_bin, F),
@@ -588,7 +625,8 @@ def train(config: GBDTConfig, data: BinnedDataset, y,
 
 def _train_fused(config, plan, data, y, eval_set, trees, margins,
                  eval_margins, base_margin, history, step_times, key,
-                 callback, verbose, n, F) -> TrainResult:
+                 callback, verbose, n, F, recovery=None,
+                 shutdown=None) -> TrainResult:
     """The device-resident boosting loop: one jitted dispatch per round.
 
     The host never synchronizes on per-round values unless it has to —
@@ -598,18 +636,54 @@ def _train_fused(config, plan, data, y, eval_set, trees, margins,
     (still a single dispatch per round).  Per-step attribution is not
     possible inside a fused round, so wall time lands in a dedicated
     ``fused_rounds`` slot of ``step_times``.
+
+    Divergence sentinel: every ``config.log_every`` rounds one device-side
+    ``isfinite`` reduction over (loss, margins) is synced to the host.  A
+    trip with a ``recovery`` policy rolls the fit back to the last finite
+    sentinel snapshot and replays — at the ORIGINAL learning rate first
+    (a transient glitch replays bit-equal), backing the rate off by
+    ``recovery.divergence_backoff`` only when the same window diverges
+    twice (``learning_rate`` is part of the step cache key, so the
+    backoff recompiles the round).  Without a policy the sentinel raises
+    :class:`NumericalDivergenceError` fail-fast.
     """
-    step = _fused_round_step(
-        _fused_step_key(config), plan, n, F, data.n_bins,
-        None if eval_set is None else int(eval_set[1].shape[0]))
+    live = config                      # LR backoff replaces this copy only
+    n_eval = None if eval_set is None else int(eval_set[1].shape[0])
+    step = _fused_round_step(_fused_step_key(live), plan, n, F,
+                             data.n_bins, n_eval)
     y_ev = (jnp.asarray(eval_set[1], jnp.float32)
             if eval_set is not None else None)
     train_dev: List[jax.Array] = []
     eval_dev: List[jax.Array] = []
     best_eval, best_round = np.inf, -1
+    rstats = {"divergence_rollbacks": 0}
     t_loop = time.perf_counter()
     start = len(trees)
-    for t_idx in range(start, start + config.n_trees):
+    end = start + config.n_trees
+
+    def _flush_history():
+        # one bulk fetch materializes the whole loss trajectory
+        history["train_loss"].extend(float(v)
+                                     for v in jax.device_get(train_dev))
+        if eval_set is not None:
+            history["eval_loss"].extend(float(v)
+                                        for v in jax.device_get(eval_dev))
+        step_times["fused_rounds"] = time.perf_counter() - t_loop
+
+    def _snap(t_next):
+        """Host copy of the resumable loop state (taken only at finite
+        sentinel checks, so a rollback always lands on finite state)."""
+        return {"t": t_next, "trees": len(trees), "dev": len(train_dev),
+                "margins": np.asarray(margins),
+                "eval": (None if eval_margins is None
+                         else np.asarray(eval_margins)),
+                "best": (best_eval, best_round)}
+
+    snap = _snap(start)
+    diverged_at = -1                   # sentinel window of the last trip
+    t_idx = start
+    stop_early = False
+    while t_idx < end and not stop_early:
         tkey = jax.random.fold_in(key, t_idx)   # same stream as host loop
         if eval_set is None:
             margins, tree, tl = step(margins, y, tkey, data.codes,
@@ -630,23 +704,69 @@ def _train_fused(config, plan, data, y, eval_set, trees, margins,
                 if verbose:
                     print(f"[gbdt] early stop at tree {t_idx} "
                           f"(best {best_round}: {best_eval:.6f})")
-                break
-        if verbose and (t_idx % config.log_every == 0
-                        or t_idx == start + config.n_trees - 1):
+                stop_early = True
+        if verbose and (t_idx % config.log_every == 0 or t_idx == end - 1):
             print(f"[gbdt] tree {t_idx:4d}  train_loss={float(tl):.6f}")
+
+        # ---- divergence sentinel (one fused device reduction + sync)
+        if t_idx % config.log_every == 0 or t_idx == end - 1 or stop_early:
+            finite = bool(jnp.isfinite(tl) & jnp.all(jnp.isfinite(margins)))
+            if not finite:
+                if (recovery is None or rstats["divergence_rollbacks"]
+                        >= recovery.max_divergence_rollbacks):
+                    raise NumericalDivergenceError(
+                        f"non-finite loss/margins at round {t_idx}",
+                        round_index=t_idx, what="loss/margins")
+                rstats["divergence_rollbacks"] += 1
+                _metrics.record("recoveries")
+                del trees[snap["trees"]:]
+                del train_dev[snap["dev"]:]
+                del eval_dev[snap["dev"]:]
+                margins = jnp.asarray(snap["margins"])
+                eval_margins = (None if snap["eval"] is None
+                                else jnp.asarray(snap["eval"]))
+                best_eval, best_round = snap["best"]
+                if diverged_at == snap["t"]:
+                    # the same window diverged on its replay: genuine
+                    # divergence, not a glitch — shrink the steps
+                    live = dataclasses.replace(
+                        live, learning_rate=(live.learning_rate
+                                             * recovery.divergence_backoff))
+                    step = _fused_round_step(_fused_step_key(live), plan,
+                                             n, F, data.n_bins, n_eval)
+                    if verbose:
+                        print(f"[gbdt] round {snap['t']} diverged twice; "
+                              f"learning_rate -> {live.learning_rate:g}")
+                elif verbose:
+                    print(f"[gbdt] divergence at round {t_idx}; rolling "
+                          f"back to round {snap['t']}")
+                diverged_at = snap["t"]
+                t_idx = snap["t"]
+                stop_early = False
+                continue
+            snap = _snap(t_idx + 1)
         if callback is not None:
             callback(t_idx, _as_model(trees, base_margin, config,
                                       data.missing_bin, F))
-    # one bulk fetch materializes the whole loss trajectory
-    history["train_loss"].extend(float(v) for v in jax.device_get(train_dev))
-    if eval_set is not None:
-        history["eval_loss"].extend(float(v) for v in jax.device_get(eval_dev))
+        if shutdown is not None and shutdown.requested:
+            _flush_history()
+            partial = TrainResult(
+                model=_as_model(trees, base_margin, config,
+                                data.missing_bin, F),
+                history=history, step_times=step_times,
+                stats={"n_rows": n, "fused_rounds": True,
+                       "interrupted": True, **rstats})
+            raise TrainingInterrupted(
+                f"shutdown ({shutdown.signal_name}) after round {t_idx}",
+                rounds_done=len(trees), signal_name=shutdown.signal_name,
+                result=partial)
+        t_idx += 1
+    _flush_history()
     jax.block_until_ready(margins)
-    step_times["fused_rounds"] = time.perf_counter() - t_loop
     return TrainResult(model=_as_model(trees, base_margin, config,
                                        data.missing_bin, F),
                        history=history, step_times=step_times,
-                       stats={"n_rows": n, "fused_rounds": True})
+                       stats={"n_rows": n, "fused_rounds": True, **rstats})
 
 
 def _as_model(trees, base_margin, config, missing_bin, F) -> GBDTModel:
@@ -687,17 +807,61 @@ def _predict_forest(forest: TreeArrays, data: BinnedDataset,
     return delta.T
 
 
+def _replay_margins(model: GBDTModel, data: BinnedDataset,
+                    plan: ExecutionPlan) -> jax.Array:
+    """Seed margins for a continued fit by accumulating per-round deltas in
+    round order — the SAME order the interrupted fit used — so checkpoint
+    resume and warm start replay bit-exactly.  (A single batched
+    ``predict_margin`` reduces the tree axis pairwise, which can differ
+    from sequential accumulation in the last ulp and would perturb every
+    downstream leaf value.)"""
+    n = data.codes.shape[0]
+    K = model.n_classes
+    if K > 1:
+        m = jnp.broadcast_to(
+            jnp.asarray(model.base_margin, jnp.float32), (n, K))
+        for r in range(model.n_rounds):
+            forest = TreeArrays(*[a[r * K:(r + 1) * K]
+                                  for a in model.trees])
+            m = m + _predict_forest(forest, data, plan)
+        return m
+    m = jnp.full((n,), model.base_margin, jnp.float32)
+    for t in range(model.n_trees):
+        tree = TreeArrays(*[a[t] for a in model.trees])
+        m = m + _predict_one_tree(tree, data, plan)
+    return m
+
+
 # --------------------------------------------------------------------------
 # out-of-core training: chunk-streamed histograms, GOSS, sketch binning
 # --------------------------------------------------------------------------
 def _streamed_margins(model: GBDTModel, chunks, n: int,
                       plan: ExecutionPlan) -> jax.Array:
     """Warm-start margins without materializing the matrix: one chunked
-    ensemble-inference pass."""
+    inference pass, accumulating per-round deltas in round order (the same
+    element-wise addition order the interrupted fit used) so checkpoint
+    resume replays bit-exactly — see :func:`_replay_margins`."""
     K = model.n_classes
     out = np.zeros((n, K) if K > 1 else (n,), np.float32)
     for lo, hi, codes in chunks():
-        m = model.predict_margin(codes, plan=plan)
+        rows = codes.n if hasattr(codes, "n") else codes.shape[0]
+        if K > 1:
+            m = jnp.broadcast_to(
+                jnp.asarray(model.base_margin, jnp.float32), (rows, K))
+            for r in range(model.n_rounds):
+                forest = TreeArrays(*[a[r * K:(r + 1) * K]
+                                      for a in model.trees])
+                delta = jax.vmap(lambda t: ops.traverse_tree(
+                    t, codes, missing_bin=model.missing_bin,
+                    plan=plan))(forest)
+                m = m + delta.T
+        else:
+            m = jnp.full((rows,), model.base_margin, jnp.float32)
+            for t_i in range(model.n_trees):
+                tree = TreeArrays(*[a[t_i] for a in model.trees])
+                m = m + ops.traverse_tree(tree, codes,
+                                          missing_bin=model.missing_bin,
+                                          plan=plan)
         out[lo:hi] = np.asarray(m)[: hi - lo]
     return jnp.asarray(out)
 
@@ -709,7 +873,9 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
                     verbose: bool = False,
                     plan: Optional[ExecutionPlan] = None,
                     chunk_rows: Optional[int] = None,
-                    recovery: Optional[RecoveryPolicy] = None) -> TrainResult:
+                    recovery: Optional[RecoveryPolicy] = None,
+                    shutdown: Optional[GracefulShutdown] = None
+                    ) -> TrainResult:
     """Out-of-core twin of :func:`train`: the binned matrix is NEVER
     materialized — each tree level re-streams device-sized chunks from
     ``source``, accumulating step-① histograms chunk by chunk and keeping
@@ -737,6 +903,11 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
                  succeeds), and the per-round RNG is keyed by
                  ``(seed, round)``, so replayed rounds reproduce the
                  fault-free fit.  ``None`` (default) = fail fast.
+    shutdown:    a :class:`repro.resilience.GracefulShutdown`; a delivered
+                 signal finishes the in-flight round, commits it (plus a
+                 final checkpoint when ``recovery.checkpoint_dir`` is
+                 set), and raises :class:`TrainingInterrupted` carrying
+                 the partial result — ``fit`` resumes from it.
 
     Per-round data passes: ``max_depth + 1`` (one per level — the previous
     level's partition is applied lazily in the histogram pass — plus one
@@ -900,137 +1071,173 @@ def train_streaming(config: GBDTConfig, source, binner, y, *,
                if eval_set is not None else None)
         return rtrees, rmargins, rev, len(rtrees)
 
+    def _stats():
+        return {"n_rows": n, "chunk_rows": int(chunk_state["rows"]),
+                "n_chunks": int(n_chunks[0]),
+                "passes_per_round": depth + 1, **rstats}
+
     t_idx = t_done = start
-    while t_idx < end:
-        try:
-            if pending_restore:
-                trees, margins, eval_margins, t_idx = _restore_state()
-                rstats["replayed_rounds"] += max(0, t_done - t_idx)
-                del history["train_loss"][t_idx - start:]
+    try:
+        while t_idx < end:
+            try:
+                if pending_restore:
+                    trees, margins, eval_margins, t_idx = _restore_state()
+                    rstats["replayed_rounds"] += max(0, t_done - t_idx)
+                    del history["train_loss"][t_idx - start:]
+                    if eval_set is not None:
+                        del history["eval_loss"][t_idx - start:]
+                        evs = history["eval_loss"]
+                        best_eval = min(evs) if evs else np.inf
+                        best_round = (start + int(np.argmin(evs))) if evs \
+                            else -1
+                    pending_restore = False
+
+                tkey = jax.random.fold_in(key, t_idx)
+                t0 = time.perf_counter()
+                g, h = loss.grad_hess(margins, y)
+                g, h, field_mask = _round_stats(config, tkey, g, h, n, F, K)
+                g2 = np.asarray(g.T if K is not None else g[None],
+                                np.float32)
+                h2 = np.asarray(h.T if K is not None else h[None],
+                                np.float32)
+
+                forest, leaf_ids = tree_mod.fit_forest_chunked(
+                    binned_chunks, g2, h2, depth=depth,
+                    n_bins=binner.max_bins, missing_bin=missing_bin,
+                    is_cat_field=is_cat_field, field_mask=field_mask,
+                    lambda_=config.lambda_, gamma=config.gamma,
+                    min_child_weight=config.min_child_weight,
+                    plan=kernel_plan)
+                forest = forest._replace(
+                    leaf_value=forest.leaf_value * config.learning_rate)
+                forest = jax.tree.map(jax.block_until_ready, forest)
+                t1 = time.perf_counter()
+
+                # step ⑤ for free: the chunk-local node ids END as leaf
+                # slots, so the margin refresh is a leaf-value lookup,
+                # not a data pass
+                delta = jax.vmap(lambda v, i: v[i])(
+                    forest.leaf_value, jnp.asarray(leaf_ids))       # (K, n)
+                tree = forest if K is not None else TreeArrays(
+                    *[a[0] for a in forest])
+                new_margins = margins + (delta.T if K is not None
+                                         else delta[0])
+                new_margins.block_until_ready()
+                t2 = time.perf_counter()
+
                 if eval_set is not None:
-                    del history["eval_loss"][t_idx - start:]
-                    evs = history["eval_loss"]
-                    best_eval = min(evs) if evs else np.inf
-                    best_round = (start + int(np.argmin(evs))) if evs \
-                        else -1
-                pending_restore = False
+                    if K is not None:
+                        ev_delta = _predict_forest(tree, eval_set[0],
+                                                   kernel_plan)
+                    else:
+                        ev_delta = _predict_one_tree(tree, eval_set[0],
+                                                     kernel_plan)
+                    new_eval_margins = eval_margins + ev_delta
+                    ev = float(jnp.mean(loss.value(
+                        new_eval_margins,
+                        jnp.asarray(eval_set[1], jnp.float32))))
+                else:
+                    new_eval_margins, ev = None, None
+            except Exception as exc:  # noqa: BLE001 — classified below
+                action = classify(exc) if recovery is not None else "fatal"
+                if action == "oom":
+                    rows = chunk_state["rows"]
+                    new_rows = max(recovery.min_chunk_rows, rows // 2)
+                    if (new_rows >= rows or rstats["oom_halvings"]
+                            >= recovery.max_oom_halvings):
+                        raise
+                    rstats["oom_halvings"] += 1
+                    _metrics.record("recoveries")
+                    chunk_state["rows"] = new_rows
+                    if verbose:
+                        print(f"[gbdt] device OOM at tree {t_idx}: "
+                              f"chunk_rows {rows} -> {new_rows}; "
+                              "retrying round")
+                    continue
+                if action == "transient":
+                    if rstats["recoveries"] >= recovery.max_recoveries:
+                        raise
+                    rstats["recoveries"] += 1
+                    _metrics.record("recoveries")
+                    if recovery.retry_delay_s:
+                        time.sleep(recovery.retry_delay_s)
+                    if recovery.checkpoint_dir is not None:
+                        from repro.api import serialize
+                        pending_restore = serialize.has_checkpoint(
+                            recovery.checkpoint_dir)
+                    if verbose:
+                        how = ("restoring newest checkpoint"
+                               if pending_restore
+                               else "replaying round in memory")
+                        print(f"[gbdt] transient failure at tree {t_idx} "
+                              f"({type(exc).__name__}: {exc}); {how}")
+                    continue
+                raise
 
-            tkey = jax.random.fold_in(key, t_idx)
-            t0 = time.perf_counter()
-            g, h = loss.grad_hess(margins, y)
-            g, h, field_mask = _round_stats(config, tkey, g, h, n, F, K)
-            g2 = np.asarray(g.T if K is not None else g[None], np.float32)
-            h2 = np.asarray(h.T if K is not None else h[None], np.float32)
-
-            forest, leaf_ids = tree_mod.fit_forest_chunked(
-                binned_chunks, g2, h2, depth=depth, n_bins=binner.max_bins,
-                missing_bin=missing_bin, is_cat_field=is_cat_field,
-                field_mask=field_mask, lambda_=config.lambda_,
-                gamma=config.gamma,
-                min_child_weight=config.min_child_weight,
-                plan=kernel_plan)
-            forest = forest._replace(
-                leaf_value=forest.leaf_value * config.learning_rate)
-            forest = jax.tree.map(jax.block_until_ready, forest)
-            t1 = time.perf_counter()
-
-            # step ⑤ for free: the chunk-local node ids END as leaf
-            # slots, so the margin refresh is a leaf-value lookup, not a
-            # data pass
-            delta = jax.vmap(lambda v, i: v[i])(
-                forest.leaf_value, jnp.asarray(leaf_ids))           # (K, n)
-            tree = forest if K is not None else TreeArrays(
-                *[a[0] for a in forest])
-            new_margins = margins + (delta.T if K is not None
-                                     else delta[0])
-            new_margins.block_until_ready()
-            t2 = time.perf_counter()
+            # ---- commit: the round succeeded, mutate state atomically
+            step_times["binning_split"] += t1 - t0
+            step_times["traversal"] += t2 - t1
+            margins = new_margins
+            trees.append(tree)
+            train_loss = float(jnp.mean(loss.value(margins, y)))
+            history["train_loss"].append(train_loss)
+            stop_early = False
 
             if eval_set is not None:
-                if K is not None:
-                    ev_delta = _predict_forest(tree, eval_set[0],
-                                               kernel_plan)
-                else:
-                    ev_delta = _predict_one_tree(tree, eval_set[0],
-                                                 kernel_plan)
-                new_eval_margins = eval_margins + ev_delta
-                ev = float(jnp.mean(loss.value(
-                    new_eval_margins,
-                    jnp.asarray(eval_set[1], jnp.float32))))
-            else:
-                new_eval_margins, ev = None, None
-        except Exception as exc:  # noqa: BLE001 — classified below
-            action = classify(exc) if recovery is not None else "fatal"
-            if action == "oom":
-                rows = chunk_state["rows"]
-                new_rows = max(recovery.min_chunk_rows, rows // 2)
-                if (new_rows >= rows or rstats["oom_halvings"]
-                        >= recovery.max_oom_halvings):
-                    raise
-                rstats["oom_halvings"] += 1
-                chunk_state["rows"] = new_rows
-                if verbose:
-                    print(f"[gbdt] device OOM at tree {t_idx}: chunk_rows "
-                          f"{rows} -> {new_rows}; retrying round")
-                continue
-            if action == "transient":
-                if rstats["recoveries"] >= recovery.max_recoveries:
-                    raise
-                rstats["recoveries"] += 1
-                if recovery.retry_delay_s:
-                    time.sleep(recovery.retry_delay_s)
-                if recovery.checkpoint_dir is not None:
-                    from repro.api import serialize
-                    pending_restore = serialize.has_checkpoint(
-                        recovery.checkpoint_dir)
-                if verbose:
-                    how = ("restoring newest checkpoint" if pending_restore
-                           else "replaying round in memory")
-                    print(f"[gbdt] transient failure at tree {t_idx} "
-                          f"({type(exc).__name__}: {exc}); {how}")
-                continue
-            raise
+                eval_margins = new_eval_margins
+                history["eval_loss"].append(ev)
+                if ev < best_eval - 1e-12:
+                    best_eval, best_round = ev, t_idx
+                if (config.early_stopping_rounds is not None
+                        and t_idx - best_round
+                        >= config.early_stopping_rounds):
+                    if verbose:
+                        print(f"[gbdt] early stop at tree {t_idx} "
+                              f"(best {best_round}: {best_eval:.6f})")
+                    stop_early = True
+            step_times["other"] += time.perf_counter() - t2
 
-        # ---- commit: the round succeeded, mutate trainer state atomically
-        step_times["binning_split"] += t1 - t0
-        step_times["traversal"] += t2 - t1
-        margins = new_margins
-        trees.append(tree)
-        train_loss = float(jnp.mean(loss.value(margins, y)))
-        history["train_loss"].append(train_loss)
-        stop_early = False
+            if verbose and (t_idx % config.log_every == 0
+                            or t_idx == end - 1):
+                print(f"[gbdt] tree {t_idx:4d}  "
+                      f"train_loss={train_loss:.6f}  "
+                      f"({n_chunks[0]} chunks x {chunk_state['rows']} rows)")
+            t_done = t_idx + 1
+            if (recovery is not None and recovery.checkpoint_dir is not None
+                    and (t_done - start) % recovery.checkpoint_every == 0):
+                _save_round_checkpoint(t_done)
+            if callback is not None:
+                callback(t_idx, _as_model(trees, base_margin, config,
+                                          missing_bin, F))
+            t_idx = t_done
+            if shutdown is not None and shutdown.requested:
+                # the in-flight round is committed; persist the exact
+                # resumable state, then exit with a typed status
+                if (recovery is not None
+                        and recovery.checkpoint_dir is not None
+                        and (t_done - start) % recovery.checkpoint_every):
+                    _save_round_checkpoint(t_done)
+                partial = TrainResult(
+                    model=_as_model(trees, base_margin, config,
+                                    missing_bin, F),
+                    history=history, step_times=step_times,
+                    stats={**_stats(), "interrupted": True})
+                raise TrainingInterrupted(
+                    f"shutdown ({shutdown.signal_name}) after round "
+                    f"{t_done - 1}", rounds_done=len(trees),
+                    signal_name=shutdown.signal_name,
+                    checkpoint_dir=(recovery.checkpoint_dir
+                                    if recovery is not None else None),
+                    result=partial)
+            if stop_early:
+                break
 
-        if eval_set is not None:
-            eval_margins = new_eval_margins
-            history["eval_loss"].append(ev)
-            if ev < best_eval - 1e-12:
-                best_eval, best_round = ev, t_idx
-            if (config.early_stopping_rounds is not None
-                    and t_idx - best_round >= config.early_stopping_rounds):
-                if verbose:
-                    print(f"[gbdt] early stop at tree {t_idx} "
-                          f"(best {best_round}: {best_eval:.6f})")
-                stop_early = True
-        step_times["other"] += time.perf_counter() - t2
-
-        if verbose and (t_idx % config.log_every == 0
-                        or t_idx == end - 1):
-            print(f"[gbdt] tree {t_idx:4d}  train_loss={train_loss:.6f}  "
-                  f"({n_chunks[0]} chunks x {chunk_state['rows']} rows)")
-        t_done = t_idx + 1
-        if (recovery is not None and recovery.checkpoint_dir is not None
-                and (t_done - start) % recovery.checkpoint_every == 0):
-            _save_round_checkpoint(t_done)
-        if callback is not None:
-            callback(t_idx, _as_model(trees, base_margin, config,
-                                      missing_bin, F))
-        t_idx = t_done
-        if stop_early:
-            break
-
-    return TrainResult(
-        model=_as_model(trees, base_margin, config, missing_bin, F),
-        history=history, step_times=step_times,
-        stats={"n_rows": n, "chunk_rows": int(chunk_state["rows"]),
-               "n_chunks": int(n_chunks[0]),
-               "passes_per_round": depth + 1, **rstats})
+        return TrainResult(
+            model=_as_model(trees, base_margin, config, missing_bin, F),
+            history=history, step_times=step_times, stats=_stats())
+    finally:
+        # parity with PrefetchIterator: a fit never leaks the retry
+        # wrapper's watchdog thread or its open shard handles, no matter
+        # how it exits
+        if isinstance(source, RetryingSource):
+            source.close()

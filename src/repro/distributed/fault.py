@@ -23,11 +23,24 @@ import os
 import time
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
-# the round-level injector is now a shim over the generalized, multi-site
-# fault harness in repro.resilience.faults — re-exported here so every
-# pre-existing ``distributed.fault.FaultInjector`` import keeps working
-from repro.resilience.faults import (Fault, FaultInjector,  # noqa: F401
-                                     FaultSchedule)
+# The round-level injector moved to the generalized, multi-site fault
+# harness in ``repro.resilience.faults``.  Importing it through this module
+# still works for one release but emits a DeprecationWarning — update
+# imports to ``from repro.resilience.faults import ...``.
+_MOVED = ("Fault", "FaultInjector", "FaultSchedule")
+
+
+def __getattr__(name: str) -> Any:
+    if name in _MOVED:
+        import warnings
+
+        warnings.warn(
+            f"repro.distributed.fault.{name} is deprecated; import it from "
+            f"repro.resilience.faults instead (this shim will be removed "
+            f"next release)", DeprecationWarning, stacklevel=2)
+        from repro.resilience import faults as _faults
+        return getattr(_faults, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class StepJournal:

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -63,6 +64,11 @@ from repro.distributed.sharding import padded_record_count
 from repro.kernels import ops
 from repro.kernels.ref import TreeArrays
 from repro.launch.mesh import data_axes, make_mesh, n_data_shards
+from repro.resilience import metrics as _metrics
+from repro.resilience.errors import (NumericalDivergenceError, Preemption,
+                                     TrainingInterrupted)
+from repro.resilience.recovery import RecoveryPolicy, classify
+from repro.resilience.shutdown import GracefulShutdown
 
 
 @dataclasses.dataclass
@@ -79,11 +85,18 @@ class DistributedConfig:
                         simulate a worker loss (``fault.FaultInjector``);
                         checked after the round dispatch, before commit —
                         the in-flight tree is the one replayed
+    fault_schedule:     a :class:`repro.resilience.FaultSchedule` driving
+                        chaos at the trainer's named sites: ``"round"``
+                        fires after the round dispatch before commit
+                        (same spot as ``fault_injector``, which it
+                        generalizes), ``"elastic"`` fires just before the
+                        between-round device poll
     available_devices:  optional ``round -> device list`` callable polled
                         between rounds; a changed list re-meshes the fit
                         up or down (elastic grow/shrink without failure)
     survivors:          maps the failed mesh's device list to the
                         surviving one; default drops the last device
+                        (keeps the mesh when only one device remains)
     """
 
     checkpoint_dir: Optional[str] = None
@@ -91,6 +104,7 @@ class DistributedConfig:
     keep_last: int = 3
     max_restarts: int = 2
     fault_injector: Optional[object] = None
+    fault_schedule: Optional[object] = None
     available_devices: Optional[Callable[[int], Sequence]] = None
     survivors: Optional[Callable[[Sequence], Sequence]] = None
 
@@ -131,7 +145,7 @@ def _trainer_kernel_plan(plan: ExecutionPlan) -> ExecutionPlan:
 def _grow_forest_sharded(mesh: Mesh, da: Tuple[str, ...], *, depth: int,
                          n_bins: int, lambda_: float, gamma: float,
                          min_child_weight: float, plan: ExecutionPlan,
-                         cm_packed: bool = False):
+                         cm_packed: bool = False, hist_slices: int = 1):
     """Build the shard_map'd level-wise grower for ``mesh``.
 
     Returns ``fn(codes, codes_cm, g2, h2, is_cat_field, field_mask) ->
@@ -150,6 +164,15 @@ def _grow_forest_sharded(mesh: Mesh, da: Tuple[str, ...], *, depth: int,
     are the records' final bottom-leaf slots — step ⑤ is a leaf-value
     lookup, no traversal pass (the streaming trainer's trick, reused
     verbatim).
+
+    ``hist_slices`` is the device-OOM degradation knob: each shard's
+    step-① accumulation is split into that many record sub-batches,
+    accumulated sequentially so only one sub-batch's scatter
+    intermediates are live at a time (the distributed analog of the
+    streaming trainer's chunk-rows halving).  Zero-stat padding rows
+    contribute exactly +0.0 per cell, so a degraded round reproduces the
+    undegraded histogram by the same split-invariance argument the
+    streaming accumulation relies on.
     """
     missing_bin = n_bins - 1
     n_int, n_leaf = 2 ** depth - 1, 2 ** depth
@@ -166,6 +189,39 @@ def _grow_forest_sharded(mesh: Mesh, da: Tuple[str, ...], *, depth: int,
         part = jax.vmap(functools.partial(ops.partition_level,
                                           missing_bin=missing_bin,
                                           plan=plan))
+
+        def acc_hist(nn, g_a, h_a, nid):
+            """Per-shard step-① accumulation, split into ``hist_slices``
+            record sub-batches when OOM degradation demands it (zero-stat
+            padding keeps every sub-batching bit-for-bit aligned with the
+            monolithic accumulation)."""
+            zero = jnp.zeros((K, nn, is_cat_field.shape[0], n_bins, 2),
+                             jnp.float32)
+            if hist_slices <= 1:
+                return ops.accumulate_histogram(zero, codes_l, g_a, h_a,
+                                                nid, n_nodes=nn,
+                                                n_bins=n_bins, plan=plan)
+            sz = -(-n_loc // hist_slices)
+            pad = sz * hist_slices - n_loc
+            if isinstance(codes_l, PackedCodes):
+                cd = jnp.pad(codes_l.data, ((0, pad), (0, 0)))
+                parts = [PackedCodes(cd[s * sz:(s + 1) * sz], codes_l.n)
+                         for s in range(hist_slices)]
+            else:
+                cd = jnp.pad(codes_l, ((0, pad), (0, 0)))
+                parts = [cd[s * sz:(s + 1) * sz]
+                         for s in range(hist_slices)]
+            g_p = jnp.pad(g_a, ((0, 0), (0, pad)))
+            h_p = jnp.pad(h_a, ((0, 0), (0, pad)))
+            nid_p = jnp.pad(nid, ((0, 0), (0, pad)))
+            acc = zero
+            for s in range(hist_slices):
+                sl = slice(s * sz, (s + 1) * sz)
+                acc = ops.accumulate_histogram(
+                    acc, parts[s], g_p[:, sl], h_p[:, sl], nid_p[:, sl],
+                    n_nodes=nn, n_bins=n_bins, plan=plan)
+            return acc
+
         prev_hist = None
         for level in range(depth):
             nn = 2 ** level
@@ -174,8 +230,6 @@ def _grow_forest_sharded(mesh: Mesh, da: Tuple[str, ...], *, depth: int,
             # pass reuses ``accumulate_histogram`` (the chunked trainers'
             # reduction unit), so every step-① entry point in the repo
             # dispatches through one jit.
-            zero = jnp.zeros((K, nn, is_cat_field.shape[0], n_bins, 2),
-                             jnp.float32)
             if plan.hist_subtraction and level > 0:
                 # smaller-child masking per shard (paper §II-A): selection
                 # uses psum'd *record counts* — integer sums are exact, so
@@ -189,16 +243,11 @@ def _grow_forest_sharded(mesh: Mesh, da: Tuple[str, ...], *, depth: int,
                 w = jax.vmap(lambda m, nid: m[nid])(
                     is_small, node_ids).astype(jnp.float32)
                 small = jax.lax.psum(
-                    ops.accumulate_histogram(zero, codes_l, g_l * w,
-                                             h_l * w, node_ids, n_nodes=nn,
-                                             n_bins=n_bins, plan=plan), da)
+                    acc_hist(nn, g_l * w, h_l * w, node_ids), da)
                 hist = tree_mod._combine_sibling_hist(prev_hist, small,
                                                       is_small)
             else:
-                hist = jax.lax.psum(
-                    ops.accumulate_histogram(zero, codes_l, g_l, h_l,
-                                             node_ids, n_nodes=nn,
-                                             n_bins=n_bins, plan=plan), da)
+                hist = jax.lax.psum(acc_hist(nn, g_l, h_l, node_ids), da)
             prev_hist = hist
             # step ② — replicated math on the reduced histogram: every
             # shard takes the same decisions and grows the same tree
@@ -259,13 +308,14 @@ def _distributed_round_step(config: GBDTConfig, plan: ExecutionPlan,
                             mesh: Mesh, da: Tuple[str, ...], n: int,
                             n_pad: int, F: int, n_bins: int,
                             n_eval: Optional[int],
-                            cm_packed: bool = False):
+                            cm_packed: bool = False,
+                            hist_slices: int = 1):
     """Compile one distributed boosting round: global gradients + RNG
     filters (shard-count invariant), the sharded grower, leaf shrinkage,
     the leaf-lookup margin refresh and the loss reduction — one dispatch
     per round per host.  Cached per (fused-style config key, kernel plan,
-    mesh, shapes): an elastic re-mesh compiles a new step, a replay on the
-    same mesh reuses the old one.
+    mesh, shapes, hist_slices): an elastic re-mesh or an OOM degradation
+    compiles a new step, a replay on the same mesh reuses the old one.
     """
     loss = losses_mod.get_loss(config.objective, config.n_classes)
     K = loss.n_outputs
@@ -274,7 +324,7 @@ def _distributed_round_step(config: GBDTConfig, plan: ExecutionPlan,
         mesh, da, depth=config.max_depth, n_bins=n_bins,
         lambda_=config.lambda_, gamma=config.gamma,
         min_child_weight=config.min_child_weight, plan=plan,
-        cm_packed=cm_packed)
+        cm_packed=cm_packed, hist_slices=hist_slices)
 
     def body(margins, y, tkey, codes, codes_cm, is_cat_field):
         g, h = loss.grad_hess(margins, y)
@@ -383,10 +433,17 @@ def _save_round_checkpoint(dist: DistributedConfig, config: GBDTConfig,
     if eval_margins is not None:
         arrays["eval_margins"] = np.asarray(eval_margins)
         arrays["eval_loss"] = np.asarray(history["eval_loss"], np.float32)
-    ckpt.save_named(dist.checkpoint_dir, arrays, step=rounds_done,
+    ckpt.save_named(_round_ckpt_dir(dist), arrays, step=rounds_done,
                     keep_last=dist.keep_last,
                     extra_meta={"round": rounds_done,
                                 "model": model.meta()})
+
+
+def _round_ckpt_dir(dist: DistributedConfig) -> str:
+    # namespaced under checkpoint_dir so the estimator's serialized
+    # bundles (which share the step_<k> layout) never collide with the
+    # trainer's round snapshots in the same directory
+    return os.path.join(dist.checkpoint_dir, "rounds")
 
 
 def _restore_round_checkpoint(dist: DistributedConfig, K: Optional[int]):
@@ -395,7 +452,7 @@ def _restore_round_checkpoint(dist: DistributedConfig, K: Optional[int]):
     if dist.checkpoint_dir is None:
         return None
     try:
-        arrays, step, meta = ckpt.restore_named(dist.checkpoint_dir)
+        arrays, step, meta = ckpt.restore_named(_round_ckpt_dir(dist))
     except FileNotFoundError:
         return None
     stacked = TreeArrays(*[np.asarray(arrays[f"trees/{f}"])
@@ -427,13 +484,44 @@ def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
                       callback: Optional[Callable[[int, GBDTModel], None]]
                       = None,
                       verbose: bool = False,
-                      plan: Optional[ExecutionPlan] = None) -> TrainResult:
+                      plan: Optional[ExecutionPlan] = None,
+                      recovery: Optional[RecoveryPolicy] = None,
+                      shutdown: Optional[GracefulShutdown] = None
+                      ) -> TrainResult:
     """Fit a GBDT ensemble data-parallel across ``mesh`` (see module doc).
 
     ``mesh`` defaults to ``plan.mesh``; one of the two must be set.  The
     result's ``stats`` records the distributed evidence: final shard
     count, restarts survived, and every re-mesh event as
     ``(kind, round, n_shards)`` tuples.
+
+    ``recovery`` (a :class:`repro.resilience.RecoveryPolicy`) arms typed
+    recovery on the round dispatch — the same policy object the streaming
+    trainer takes, with the distributed semantics:
+
+      * :class:`Preemption` re-meshes onto the survivors, restores the
+        newest ``checkpoint.save_named`` step, and deterministically
+        replays (the legacy catch-all path, now reserved for actual
+        preemptions);
+      * other transient failures retry the round on the SAME mesh after
+        ``retry_delay_s`` (state is uncommitted and valid — no restore
+        needed), bounded by ``max_recoveries``;
+      * a device OOM doubles the per-shard histogram sub-batch count
+        (``hist_slices``) and retries bit-equally, bounded by
+        ``max_oom_halvings``;
+      * a :class:`NumericalDivergenceError` — raised by the per-round
+        finiteness sentinel on (loss, margins), which costs nothing extra
+        because the loop syncs the loss scalar at commit anyway — replays
+        the uncommitted round at the original learning rate first,
+        backing off by ``divergence_backoff`` only when the SAME round
+        diverges twice, bounded by ``max_divergence_rollbacks``.
+
+    Without a policy the legacy behavior is preserved exactly: ANY
+    dispatch failure re-meshes and restores, ``dist.max_restarts`` times.
+    ``shutdown`` (a :class:`repro.resilience.GracefulShutdown`) finishes
+    the in-flight round on a delivered signal, commits it plus a final
+    checkpoint, and raises :class:`TrainingInterrupted` carrying the
+    partial result.
     """
     if plan is None:
         plan = ExecutionPlan.from_config(config)
@@ -445,6 +533,13 @@ def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
     _check_data_parallel(mesh)
     kernel_plan = _trainer_kernel_plan(plan)
     dist = dist or DistributedConfig()
+    if (recovery is not None and recovery.checkpoint_dir is not None
+            and dist.checkpoint_dir is None):
+        # one policy object drives both trainers: its checkpoint knobs
+        # map onto the distributed trainer's save_named plumbing
+        dist = dataclasses.replace(dist,
+                                   checkpoint_dir=recovery.checkpoint_dir,
+                                   checkpoint_every=recovery.checkpoint_every)
     if config.grow_policy != "depthwise":
         raise ValueError("distributed training supports only the depthwise "
                          "grow_policy")
@@ -471,10 +566,27 @@ def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
             trees = [TreeArrays(*[a[i] for a in init_model.trees])
                      for i in range(init_model.n_trees)]
         base_margin = init_model.base_margin
-        margins = init_model.predict_margin(data.codes, plan=kernel_plan)
-        eval_margins = (init_model.predict_margin(eval_set[0].codes,
-                                                  plan=kernel_plan)
-                        if eval_set is not None else None)
+        # per-round sequential seeding (not one batched predict) so a
+        # checkpoint resume replays the interrupted fit bit-exactly on a
+        # single shard; when a matching named round checkpoint exists it
+        # carries the EXACT live margins (the sharded step's fused
+        # scale-and-add can differ from any host recomputation in the
+        # last ulp), so that wins
+        margins = eval_margins = None
+        snap = _restore_round_checkpoint(dist, K)
+        if snap is not None and snap[4] == init_model.n_rounds and all(
+                np.array_equal(np.asarray(u), np.asarray(v))
+                for a, b in zip(snap[0], trees) for u, v in zip(a, b)):
+            margins, eval_margins = snap[1], snap[2]
+        if margins is None:
+            margins = gbdt_mod._replay_margins(init_model, data,
+                                               kernel_plan)
+        if eval_set is not None and eval_margins is None:
+            eval_margins = gbdt_mod._replay_margins(init_model,
+                                                    eval_set[0],
+                                                    kernel_plan)
+        if eval_set is None:
+            eval_margins = None
     elif K is not None:
         base_margin = np.asarray(loss.base_margin(y), np.float32)
         margins = jnp.broadcast_to(jnp.asarray(base_margin), (n, K))
@@ -499,6 +611,16 @@ def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
     devices = list(mesh.devices.flat)
     events: List[Tuple[str, int, int]] = []
     restarts = 0
+    hist_slices = 1                    # OOM degradation state (doubles)
+    diverged_at = -1                   # round of the last sentinel trip
+    rstats = {"recoveries": 0, "oom_halvings": 0, "replayed_rounds": 0,
+              "divergence_rollbacks": 0}
+
+    def _mkstats(**extra):
+        return {"n_rows": n, "distributed": True,
+                "n_shards": n_data_shards(mesh), "restarts": restarts,
+                "remesh_events": events, "hist_slices": hist_slices,
+                **rstats, **extra}
 
     def place(new_mesh):
         nonlocal mesh, da, codes, codes_cm, n_pad, margins, eval_margins
@@ -531,6 +653,8 @@ def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
         try:
             # elastic grow/shrink between rounds: a changed device list
             # re-places the (mesh-agnostic) training state, no restore
+            if dist.fault_schedule is not None:
+                dist.fault_schedule.apply("elastic", t_idx)
             if dist.available_devices is not None:
                 want = list(dist.available_devices(t_idx))
                 if [d.id for d in want] != [d.id for d in devices]:
@@ -543,7 +667,8 @@ def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
                               f"shards at round {t_idx}")
             step = _distributed_round_step(cfg_key, kernel_plan, mesh,
                                            tuple(da), n, n_pad, F,
-                                           data.n_bins, n_eval, cm_packed)
+                                           data.n_bins, n_eval, cm_packed,
+                                           hist_slices)
             tkey = jax.random.fold_in(key, t_idx)  # mesh-invariant stream
             if eval_set is None:
                 new_margins, tree, tl = step(margins, y, tkey, codes,
@@ -556,18 +681,88 @@ def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
             jax.block_until_ready(new_margins)
             if dist.fault_injector is not None:
                 dist.fault_injector.check(t_idx)   # worker dies mid-round
-        except Exception as e:  # noqa: BLE001 — any node fault
+            if dist.fault_schedule is not None:
+                dist.fault_schedule.apply("round", t_idx)
+            # numerical divergence sentinel at log_every cadence (same
+            # as the fused engine): a NaN-max reduction over the new
+            # margins — max |x| propagates NaN and saturates at inf, so
+            # the single fused reduction is an exact finiteness probe
+            if (recovery is not None
+                    and (t_idx % config.log_every == 0
+                         or t_idx == end - 1)
+                    and not bool(jnp.isfinite(
+                        jnp.maximum(jnp.max(jnp.abs(new_margins)),
+                                    jnp.abs(tl))))):
+                raise NumericalDivergenceError(
+                    f"non-finite loss/margins at round {t_idx}",
+                    round_index=t_idx, what="loss/margins")
+        except Exception as e:  # noqa: BLE001 — classified below
+            action = classify(e) if recovery is not None else "remesh"
+            if action == "transient" and isinstance(e, Preemption):
+                action = "remesh"      # preemptions re-mesh; others retry
+            if action == "divergence":
+                if (rstats["divergence_rollbacks"]
+                        >= recovery.max_divergence_rollbacks):
+                    raise
+                rstats["divergence_rollbacks"] += 1
+                _metrics.record("recoveries")
+                if diverged_at == t_idx:
+                    # the same round diverged on its replay: genuine
+                    # divergence — shrink the steps (recompiles the round)
+                    cfg_key = dataclasses.replace(
+                        cfg_key,
+                        learning_rate=(cfg_key.learning_rate
+                                       * recovery.divergence_backoff))
+                    if verbose:
+                        print(f"[dist] round {t_idx} diverged twice; "
+                              f"learning_rate -> "
+                              f"{cfg_key.learning_rate:g}")
+                elif verbose:
+                    print(f"[dist] divergence at round {t_idx}; replaying "
+                          "from the last finite round")
+                diverged_at = t_idx
+                continue   # the round is uncommitted: replay = rollback
+            if action == "oom":
+                if rstats["oom_halvings"] >= recovery.max_oom_halvings:
+                    raise
+                rstats["oom_halvings"] += 1
+                _metrics.record("recoveries")
+                hist_slices *= 2
+                if verbose:
+                    print(f"[dist] device OOM at round {t_idx}: "
+                          f"hist_slices -> {hist_slices}; retrying round")
+                continue
+            if action == "transient":
+                if rstats["recoveries"] >= recovery.max_recoveries:
+                    raise
+                rstats["recoveries"] += 1
+                _metrics.record("recoveries")
+                if recovery.retry_delay_s:
+                    time.sleep(recovery.retry_delay_s)
+                if verbose:
+                    print(f"[dist] transient failure at round {t_idx} "
+                          f"({type(e).__name__}: {e}); retrying on the "
+                          "same mesh")
+                continue
+            if action == "fatal":
+                raise
+            # preemption (or any failure under the legacy no-policy
+            # contract): re-mesh onto the survivors, restore the newest
+            # checkpoint, deterministically replay
             restarts += 1
             if restarts > dist.max_restarts:
                 raise
+            if recovery is not None:
+                _metrics.record("recoveries")
             surv = (dist.survivors(devices) if dist.survivors is not None
-                    else devices[:-1])
+                    else (devices[:-1] if len(devices) > 1 else devices))
             devices = list(surv)
             place(data_parallel_mesh(devices))
             events.append(("shrink", t_idx, n_data_shards(mesh)))
             if verbose:
                 print(f"[dist] fault at round {t_idx} ({e}); resuming on "
                       f"{n_data_shards(mesh)} shards")
+            t_before = t_idx
             restored = _restore_round_checkpoint(dist, K)
             if restored is None:       # no checkpoint yet: replay the fit
                 trees = list(trees[:start])
@@ -576,6 +771,7 @@ def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
                 t_idx = start
             else:
                 trees, margins, eval_margins, history, t_idx = restored
+            rstats["replayed_rounds"] += max(0, t_before - t_idx)
             margins = _replicate(mesh, margins)
             if eval_margins is not None:
                 eval_margins = _replicate(mesh, eval_margins)
@@ -603,12 +799,27 @@ def train_distributed(config: GBDTConfig, data: BinnedDataset, y, *,
         if callback is not None:
             callback(t_idx, _as_model(trees, base_margin, config,
                                       data.missing_bin, F))
+        if shutdown is not None and shutdown.requested:
+            # the in-flight round is committed; persist the exact
+            # resumable state, then exit with a typed status
+            if (dist.checkpoint_dir is not None
+                    and rounds_done % dist.checkpoint_every):
+                _save_round_checkpoint(dist, config, trees, base_margin,
+                                       margins, eval_margins, history,
+                                       data.missing_bin, F, rounds_done)
+            step_times["fused_rounds"] = time.perf_counter() - t_loop
+            partial = TrainResult(
+                model=_as_model(trees, base_margin, config,
+                                data.missing_bin, F),
+                history=history, step_times=step_times,
+                stats=_mkstats(interrupted=True))
+            raise TrainingInterrupted(
+                f"shutdown ({shutdown.signal_name}) after round {t_idx}",
+                rounds_done=len(trees), signal_name=shutdown.signal_name,
+                checkpoint_dir=dist.checkpoint_dir, result=partial)
         t_idx += 1
 
     step_times["fused_rounds"] = time.perf_counter() - t_loop
     return TrainResult(
         model=_as_model(trees, base_margin, config, data.missing_bin, F),
-        history=history, step_times=step_times,
-        stats={"n_rows": n, "distributed": True,
-               "n_shards": n_data_shards(mesh), "restarts": restarts,
-               "remesh_events": events})
+        history=history, step_times=step_times, stats=_mkstats())

@@ -31,6 +31,8 @@ call.
 from __future__ import annotations
 
 import functools
+import warnings
+from collections import Counter
 from typing import Optional
 
 import jax
@@ -45,10 +47,94 @@ from repro.kernels import partition as _part_k
 from repro.kernels import traversal as _trav_k
 from repro.kernels import ref as _ref
 from repro.kernels.ref import TreeArrays
+from repro.resilience import metrics as _metrics
 
 __all__ = ["HIST_STRATEGIES", "onehot_matmul", "pack_codes", "unpack_codes",
            "build_histogram", "accumulate_histogram", "partition_level",
-           "traverse_tree", "predict_ensemble"]
+           "traverse_tree", "predict_ensemble", "pallas_available",
+           "degradation_stats", "reset_degradation_stats"]
+
+
+# --------------------------------------------------------------------------
+# graceful kernel degradation: a broken Pallas lowering degrades
+# throughput, never correctness
+# --------------------------------------------------------------------------
+_DEGRADATIONS: Counter = Counter()
+_DEGRADE_WARNED: set = set()
+
+
+def degradation_stats() -> dict:
+    """``{"step:strategy->fallback": count}`` of every Pallas demotion
+    this process took (also mirrored into the process-wide
+    ``resilience.metrics`` ``"degradations"`` counter)."""
+    return dict(_DEGRADATIONS)
+
+
+def reset_degradation_stats() -> dict:
+    """Zero the per-step demotion counters (the one-time warning latch
+    stays latched); returns the pre-reset values."""
+    old = dict(_DEGRADATIONS)
+    _DEGRADATIONS.clear()
+    return old
+
+
+def _degrade(step: str, strategy: str, fallback: str,
+             exc: Exception) -> None:
+    """Record one kernel demotion: count it, and warn ONCE per
+    (step, strategy) so a chunked fit does not emit a warning per
+    dispatch."""
+    _DEGRADATIONS[f"{step}:{strategy}->{fallback}"] += 1
+    _metrics.record("degradations")
+    key = (step, strategy)
+    if key not in _DEGRADE_WARNED:
+        _DEGRADE_WARNED.add(key)
+        warnings.warn(
+            f"Pallas {step} kernel (strategy {strategy!r}) failed "
+            f"({type(exc).__name__}: {exc}); demoting to the "
+            f"{fallback!r} jnp path for this call — throughput "
+            "degrades, correctness does not",
+            RuntimeWarning, stacklevel=4)
+
+
+@functools.lru_cache(maxsize=None)
+def pallas_available(step: str, interpret: bool = True) -> bool:
+    """Probe whether the ``step`` Pallas kernel actually launches on
+    this backend (tiny input, one compile, cached per process).
+
+    ``ExecutionPlan.resolved()`` consults this before electing a Pallas
+    strategy so a backend with a broken lowering resolves straight to
+    the jnp twin instead of demoting on the first real dispatch.
+    ``step``: ``"histogram"`` | ``"partition"`` | ``"traversal"``.
+    """
+    if step not in ("histogram", "partition", "traversal"):
+        # outside the probe's try block: a typo'd step name must raise,
+        # not read as "kernel unavailable"
+        raise ValueError(f"unknown probe step {step!r}")
+    try:
+        if step == "histogram":
+            out = _hist_k.histogram_pallas(
+                jnp.zeros((16, 2), jnp.uint8), jnp.ones((16,), jnp.float32),
+                jnp.ones((16,), jnp.float32), jnp.zeros((16,), jnp.int32),
+                n_nodes=1, n_bins=4, records_per_block=16,
+                fields_per_block=2, packed=False, interpret=interpret)
+        elif step == "partition":
+            out = _part_k.partition_pallas(
+                jnp.zeros((8,), jnp.int32), jnp.zeros((8, 1), jnp.uint8),
+                jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
+                jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
+                missing_bin=3, interpret=interpret)
+        else:
+            tree = TreeArrays(feature=jnp.zeros((1,), jnp.int32),
+                              threshold=jnp.zeros((1,), jnp.int32),
+                              is_cat=jnp.zeros((1,), jnp.int32),
+                              default_left=jnp.zeros((1,), jnp.int32),
+                              leaf_value=jnp.zeros((2,), jnp.float32))
+            out = _trav_k.traverse_pallas(tree, jnp.zeros((8, 1), jnp.uint8),
+                                          missing_bin=3, interpret=interpret)
+        jax.block_until_ready(out)
+        return True
+    except Exception:  # noqa: BLE001 — any launch/lowering failure
+        return False
 
 
 # --------------------------------------------------------------------------
@@ -205,11 +291,20 @@ def build_histogram(codes, g, h, node_ids, *, n_nodes: int, n_bins: int,
                                                 n_bins)
         return per_class(fn)(codes, g, h, node_ids)
     if strategy in ("pallas_grouped", "pallas_packed"):
-        return _hist_k.histogram_pallas(
-            codes, g, h, node_ids, n_nodes=n_nodes, n_bins=n_bins,
-            records_per_block=plan.records_per_block,
-            fields_per_block=plan.fields_per_block,
-            packed=(strategy == "pallas_packed"), interpret=plan.interpret)
+        try:
+            return _hist_k.histogram_pallas(
+                codes, g, h, node_ids, n_nodes=n_nodes, n_bins=n_bins,
+                records_per_block=plan.records_per_block,
+                fields_per_block=plan.fields_per_block,
+                packed=(strategy == "pallas_packed"),
+                interpret=plan.interpret)
+        except Exception as exc:  # noqa: BLE001 — demote, never corrupt
+            _degrade("histogram", strategy, "scatter", exc)
+            if isinstance(codes, PackedCodes):
+                codes = codes.unpack()
+            fn = lambda c, gg, hh, nn: _hist_scatter(c, gg, hh, nn,
+                                                     n_nodes, n_bins)
+            return per_class(fn)(codes, g, h, node_ids)
     raise ValueError(f"unknown histogram strategy {strategy!r}; "
                      f"choose from {HIST_STRATEGIES}")
 
@@ -266,10 +361,16 @@ def partition_level(node_ids, codes_lvl, split_feature, split_threshold,
         return _ref.partition_ref(node_ids, codes_lvl, split_feature,
                                   split_threshold, split_is_cat,
                                   split_default_left, missing_bin)
-    return _part_k.partition_pallas(
-        node_ids, codes_lvl, split_feature, split_threshold,
-        split_is_cat, split_default_left, missing_bin=missing_bin,
-        interpret=plan.interpret)
+    try:
+        return _part_k.partition_pallas(
+            node_ids, codes_lvl, split_feature, split_threshold,
+            split_is_cat, split_default_left, missing_bin=missing_bin,
+            interpret=plan.interpret)
+    except Exception as exc:  # noqa: BLE001 — demote, never corrupt
+        _degrade("partition", plan.partition_strategy, "reference", exc)
+        return _ref.partition_ref(node_ids, codes_lvl, split_feature,
+                                  split_threshold, split_is_cat,
+                                  split_default_left, missing_bin)
 
 
 # --------------------------------------------------------------------------
@@ -283,8 +384,12 @@ def traverse_tree(tree: TreeArrays, codes, *, missing_bin: int,
     # "scan" only changes multi-tree inference; a single walk is a walk
     if plan.traversal_strategy in ("reference", "scan"):
         return _ref.traverse_ref(tree, codes, missing_bin)
-    return _trav_k.traverse_pallas(tree, codes, missing_bin=missing_bin,
-                                   interpret=plan.interpret)
+    try:
+        return _trav_k.traverse_pallas(tree, codes, missing_bin=missing_bin,
+                                       interpret=plan.interpret)
+    except Exception as exc:  # noqa: BLE001 — demote, never corrupt
+        _degrade("traversal", plan.traversal_strategy, "reference", exc)
+        return _ref.traverse_ref(tree, codes, missing_bin)
 
 
 _PREDICT_ROWS_PER_CHUNK = 1024   # (chunk, T) walk state stays cache-sized
@@ -366,7 +471,11 @@ def predict_ensemble(trees: TreeArrays, codes, *, missing_bin: int,
                                          n_classes=n_classes)
     if plan.traversal_strategy == "reference":
         return _predict_batched_jit(trees, codes, missing_bin, n_classes)
-    return _trav_k.predict_ensemble_pallas(
-        trees, codes, missing_bin=missing_bin, depth=depth,
-        interpret=plan.interpret, n_classes=n_classes,
-        trees_per_block=plan.trees_per_block)
+    try:
+        return _trav_k.predict_ensemble_pallas(
+            trees, codes, missing_bin=missing_bin, depth=depth,
+            interpret=plan.interpret, n_classes=n_classes,
+            trees_per_block=plan.trees_per_block)
+    except Exception as exc:  # noqa: BLE001 — demote, never corrupt
+        _degrade("predict", plan.traversal_strategy, "reference", exc)
+        return _predict_batched_jit(trees, codes, missing_bin, n_classes)

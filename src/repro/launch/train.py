@@ -23,9 +23,15 @@ import jax.numpy as jnp
 
 def run_gbdt(args):
     from repro.api import (BoosterClassifier, BoosterRegressor,
-                           ExecutionPlan, paper_dataset)
+                           ExecutionPlan, GracefulShutdown, RecoveryPolicy,
+                           TrainingInterrupted, paper_dataset)
+    from repro.api import serialize
     from repro.distributed.fault import StepJournal
     from repro.launch.mesh import make_mesh
+
+    if args.resume and not serialize.has_checkpoint(args.ckpt_dir):
+        raise SystemExit(f"--resume: no checkpoint found under "
+                         f"{args.ckpt_dir!r} — nothing to resume from")
 
     X, y, cats, spec = paper_dataset(args.dataset,
                                      n_override=args.records)
@@ -57,33 +63,51 @@ def run_gbdt(args):
                          devices=jax.devices()[:args.data_shards])
 
     plan = ExecutionPlan.auto(hist_strategy=args.strategy)
-    if args.stream:
-        # resilient out-of-core path: stage the dataset once as
-        # crc32-manifested npz shards, stream it back through a
-        # self-healing RetryingSource, and fit under a RecoveryPolicy —
-        # transient mid-round failures replay from the newest checkpoint,
-        # device OOM degrades the chunk size instead of dying
-        from repro.api import (ArraySource, NpzShardSource, RecoveryPolicy,
-                               RetryPolicy, RetryingSource,
-                               write_npz_shards)
-        shard_dir = os.path.join(args.ckpt_dir, "shards")
-        write_npz_shards(shard_dir, ArraySource(X, y),
-                         rows_per_shard=max(1024, args.records // 8))
-        source = RetryingSource(NpzShardSource(shard_dir),
-                                RetryPolicy(chunk_timeout_s=60.0))
-        est.fit(data=source, plan=plan,
-                checkpoint_dir=args.ckpt_dir,
-                checkpoint_every=args.ckpt_every, callback=cb,
-                verbose=True,
-                recovery=RecoveryPolicy(checkpoint_dir=args.ckpt_dir,
-                                        checkpoint_every=args.ckpt_every))
-    else:
-        # checkpoint_dir resumes from the newest valid step and keeps
-        # writing atomic, sha-verified bundles every --ckpt-every trees
-        est.fit(X, y, plan=plan, mesh=mesh,
-                checkpoint_dir=args.ckpt_dir,
-                checkpoint_every=args.ckpt_every,
-                callback=cb, verbose=True)
+    recovery = RecoveryPolicy(checkpoint_dir=args.ckpt_dir,
+                              checkpoint_every=args.ckpt_every)
+    source = None
+    # SIGTERM/SIGINT finish the in-flight round, commit it atomically and
+    # surface a typed, resumable TrainingInterrupted; a later run with
+    # --resume restores from the committed checkpoint and grows only the
+    # remaining trees — identical final ensemble (deterministic replay)
+    try:
+        with GracefulShutdown() as sd:
+            if args.stream:
+                # resilient out-of-core path: stage the dataset once as
+                # crc32-manifested npz shards, stream it back through a
+                # self-healing RetryingSource, and fit under a
+                # RecoveryPolicy — transient mid-round failures replay
+                # from the newest checkpoint, device OOM degrades the
+                # chunk size instead of dying
+                from repro.api import (ArraySource, NpzShardSource,
+                                       RetryPolicy, RetryingSource,
+                                       write_npz_shards)
+                shard_dir = os.path.join(args.ckpt_dir, "shards")
+                write_npz_shards(shard_dir, ArraySource(X, y),
+                                 rows_per_shard=max(1024,
+                                                    args.records // 8))
+                source = RetryingSource(NpzShardSource(shard_dir),
+                                        RetryPolicy(chunk_timeout_s=60.0))
+                est.fit(data=source, plan=plan,
+                        checkpoint_dir=args.ckpt_dir,
+                        checkpoint_every=args.ckpt_every, callback=cb,
+                        verbose=True, recovery=recovery, shutdown=sd)
+            else:
+                # checkpoint_dir resumes from the newest valid step and
+                # keeps writing atomic, sha-verified bundles every
+                # --ckpt-every trees; the recovery policy arms divergence
+                # sentinels and (with mesh) preemption/OOM self-healing
+                est.fit(X, y, plan=plan, mesh=mesh,
+                        checkpoint_dir=args.ckpt_dir,
+                        checkpoint_every=args.ckpt_every,
+                        callback=cb, verbose=True, recovery=recovery,
+                        shutdown=sd)
+    except TrainingInterrupted as stop:
+        print(f"[train] interrupted ({stop.signal_name}) after "
+              f"{stop.rounds_done} committed rounds; checkpoint in "
+              f"{stop.checkpoint_dir or args.ckpt_dir} — rerun with "
+              f"--resume to finish the remaining trees")
+        raise SystemExit(75)  # EX_TEMPFAIL: resumable, not a failure
     loss = est.history_.get("train_loss") or [float("nan")]
     shards = est.stats_.get("n_shards", 1)
     print(f"[train] done: {est.n_trees_} trees, loss {loss[-1]:.5f}, "
@@ -144,6 +168,11 @@ def main():
                          "auto-recover mid-round failures from checkpoints")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue an interrupted fit from the newest "
+                         "checkpoint under --ckpt-dir (fails if none "
+                         "exists); the finished ensemble is identical to "
+                         "an uninterrupted run")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     (run_gbdt if args.mode == "gbdt" else run_lm)(args)

@@ -1,32 +1,40 @@
-"""``repro.resilience`` — the unified resilience layer.
+"""``repro.resilience`` — the unified fault-domain authority.
 
 One place for everything that keeps long fits and serving daemons alive
 under real-world failure: a typed error taxonomy (``errors``), shared
 seeded fault-injection primitives (``faults`` — the generalization of
 PR 6's round-level ``FaultInjector``), a self-healing ``DataSource``
-wrapper (``retry``), and the recovery policy driving
-``train_streaming``'s checkpoint-restore/replay and OOM chunk
-degradation (``recovery``).  Serving-side hardening (bounded queues,
-deadline failures, the dispatcher supervisor) lives in ``repro.serving``
-and fails futures with the types defined here.
+wrapper (``retry``), the recovery policy driving BOTH trainers'
+checkpoint-restore/replay, OOM degradation and divergence rollback
+(``recovery``), the preemption-safe signal layer (``shutdown``) and the
+process-wide resilience counters the perf gate reads (``metrics``).
+Serving-side hardening (bounded queues, deadline failures, the
+dispatcher supervisor) lives in ``repro.serving`` and fails futures with
+the types defined here.
 """
+from repro.resilience import metrics
 from repro.resilience.errors import (ChunkTimeoutError, DeadlineExceededError,
                                      DeviceOOMError, DispatcherCrashError,
-                                     Preemption, QueueFullError,
-                                     ResilienceError, ShardCorruptionError,
-                                     TransientIOError, is_oom, is_transient)
+                                     NumericalDivergenceError, Preemption,
+                                     QueueFullError, ResilienceError,
+                                     ShardCorruptionError,
+                                     TrainingInterrupted, TransientIOError,
+                                     is_oom, is_transient)
 from repro.resilience.faults import (Fault, FaultInjector, FaultSchedule,
                                      FaultySource, corrupt_file,
                                      seeded_schedule)
 from repro.resilience.recovery import RecoveryPolicy, classify
 from repro.resilience.retry import RetryPolicy, RetryingSource
+from repro.resilience.shutdown import GracefulShutdown
 
 __all__ = [
     "ResilienceError", "TransientIOError", "ChunkTimeoutError", "Preemption",
-    "ShardCorruptionError", "DeviceOOMError", "QueueFullError",
-    "DeadlineExceededError", "DispatcherCrashError", "is_oom", "is_transient",
+    "ShardCorruptionError", "DeviceOOMError", "NumericalDivergenceError",
+    "TrainingInterrupted", "QueueFullError", "DeadlineExceededError",
+    "DispatcherCrashError", "is_oom", "is_transient",
     "Fault", "FaultSchedule", "FaultInjector", "FaultySource",
     "seeded_schedule", "corrupt_file",
     "RecoveryPolicy", "classify",
     "RetryPolicy", "RetryingSource",
+    "GracefulShutdown", "metrics",
 ]

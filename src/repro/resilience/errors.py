@@ -54,6 +54,39 @@ class DeviceOOMError(ResilienceError):
     :func:`is_oom`)."""
 
 
+class NumericalDivergenceError(ResilienceError):
+    """A non-finite value entered the training state (loss, margins or a
+    histogram).  NOT transient and NOT an OOM: the recovery is its own
+    domain — roll back to the last finite round and retry, backing off
+    the learning rate when the same round diverges again (bounded by
+    ``RecoveryPolicy.max_divergence_rollbacks``).  ``round_index`` is the
+    boosting round whose sentinel tripped."""
+
+    def __init__(self, message: str, *, round_index: int = -1,
+                 what: str = "loss"):
+        super().__init__(message)
+        self.round_index = int(round_index)
+        self.what = what
+
+
+class TrainingInterrupted(ResilienceError):
+    """A graceful-shutdown signal (SIGTERM/SIGINT) stopped the fit
+    BETWEEN rounds: the in-flight round finished, state was committed
+    (and checkpointed when a checkpoint dir was configured), and this
+    typed status carries everything a supervisor needs to resume —
+    ``rounds_done``, the ``checkpoint_dir`` holding the resumable state,
+    the ``signal_name`` that triggered the exit, and the partial
+    ``result`` (a ``TrainResult`` over the committed rounds)."""
+
+    def __init__(self, message: str, *, rounds_done: int = 0,
+                 checkpoint_dir=None, signal_name=None, result=None):
+        super().__init__(message)
+        self.rounds_done = int(rounds_done)
+        self.checkpoint_dir = checkpoint_dir
+        self.signal_name = signal_name
+        self.result = result
+
+
 # -- serving errors ----------------------------------------------------------
 class QueueFullError(ResilienceError):
     """Load shed: the model's bounded queue cannot take this request.
@@ -85,9 +118,11 @@ def is_oom(exc: BaseException) -> bool:
 
 
 def is_transient(exc: BaseException) -> bool:
-    """Is ``exc`` worth retrying?  Corruption and OOM are NOT transient
-    (OOM has its own recovery: chunk degradation, not a plain retry)."""
-    if isinstance(exc, (ShardCorruptionError, DeviceOOMError)):
+    """Is ``exc`` worth retrying?  Corruption, OOM, divergence and a
+    graceful interrupt are NOT transient (OOM and divergence have their
+    own recovery branches; an interrupt must propagate)."""
+    if isinstance(exc, (ShardCorruptionError, DeviceOOMError,
+                        NumericalDivergenceError, TrainingInterrupted)):
         return False
     if is_oom(exc):
         return False

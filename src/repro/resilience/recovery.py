@@ -1,44 +1,61 @@
-"""Recovery policy for self-healing streaming training.
+"""Recovery policy for self-healing training — streaming AND distributed.
 
-``train_streaming(recovery=RecoveryPolicy(...))`` turns the out-of-core
-trainer into the single-device twin of PR 6's elastic distributed
-engine: a transient source failure mid-round restores the newest
-``save_named`` checkpoint and deterministically replays the lost rounds
+``train_streaming(recovery=RecoveryPolicy(...))`` and
+``train_distributed(recovery=RecoveryPolicy(...))`` share one policy
+object and one classification: a transient failure mid-round restores
+the newest checkpoint and deterministically replays the lost rounds
 WITHOUT restarting the fit (the per-round RNG stream is keyed by
 ``(seed, round)``, so a replayed round reproduces the fault-free round);
-a device OOM halves the streamed chunk size and retries the round
-(chunked histogram accumulation is chunk-size-invariant, so degradation
-never changes the model — only its memory footprint).
+a device OOM degrades the per-round memory footprint bit-equally (the
+streaming trainer halves the streamed chunk size, the distributed
+trainer doubles the per-shard histogram sub-batch count — both
+accumulations are split-invariant); a preemption additionally re-meshes
+the distributed fit onto the surviving devices before the replay; and a
+numerical divergence (non-finite loss/margins caught by the sentinels)
+rolls back to the last finite round, backing off the learning rate when
+the same round diverges twice.
 
-Action classification lives here (:func:`classify`) so the trainer's
-except-clause stays a dispatch table, not a policy decision.
+Action classification lives here (:func:`classify`) so the trainers'
+except-clauses stay dispatch tables, not policy decisions.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
-from repro.resilience.errors import is_oom, is_transient
+from repro.resilience.errors import (NumericalDivergenceError, is_oom,
+                                     is_transient)
 
 
 @dataclasses.dataclass(frozen=True)
 class RecoveryPolicy:
-    """What ``train_streaming`` may do when a round fails.
+    """What a trainer may do when a round fails.
 
     checkpoint_dir:    where round checkpoints live.  When set, the
                        trainer writes one every ``checkpoint_every``
-                       rounds (atomic ``save_named`` bundles) and
-                       transient recovery restores the newest valid one;
-                       when None, transient recovery replays from the
-                       in-memory end-of-previous-round state instead.
+                       rounds (atomic bundles) and transient recovery
+                       restores the newest valid one; when None,
+                       transient recovery replays from the in-memory
+                       end-of-previous-round state instead.
     checkpoint_every:  round cadence of trainer-side checkpoints.
     max_recoveries:    transient-failure budget for the whole fit; the
                        (max_recoveries + 1)-th transient failure
                        propagates.
-    max_oom_halvings:  how many times an OOM may halve ``chunk_rows``
-                       before propagating.
-    min_chunk_rows:    degradation floor — never stream smaller chunks.
+    max_oom_halvings:  how many times an OOM may degrade the round's
+                       memory footprint (chunk_rows halving / histogram
+                       sub-batch doubling) before propagating.
+    min_chunk_rows:    streaming degradation floor — never stream
+                       smaller chunks.
     retry_delay_s:     pause before a replay (lets a flaky mount settle).
+    max_divergence_rollbacks:
+                       how many divergence-sentinel trips may roll the
+                       fit back to the last finite round before the
+                       :class:`NumericalDivergenceError` propagates.
+    divergence_backoff:
+                       learning-rate multiplier applied when the SAME
+                       round diverges on its replay (a one-shot injected
+                       divergence replays at the original rate and stays
+                       bit-equal; persistent divergence shrinks steps).
     """
 
     checkpoint_dir: Optional[str] = None
@@ -47,6 +64,8 @@ class RecoveryPolicy:
     max_oom_halvings: int = 3
     min_chunk_rows: int = 256
     retry_delay_s: float = 0.0
+    max_divergence_rollbacks: int = 2
+    divergence_backoff: float = 0.5
 
     def __post_init__(self):
         if self.checkpoint_every < 1:
@@ -55,11 +74,18 @@ class RecoveryPolicy:
             raise ValueError("recovery budgets must be >= 0")
         if self.min_chunk_rows < 1:
             raise ValueError("min_chunk_rows must be >= 1")
+        if self.max_divergence_rollbacks < 0:
+            raise ValueError("max_divergence_rollbacks must be >= 0")
+        if not 0.0 < self.divergence_backoff < 1.0:
+            raise ValueError("divergence_backoff must be in (0, 1)")
 
 
 def classify(exc: BaseException) -> str:
-    """``"oom"`` | ``"transient"`` | ``"fatal"`` — the trainer's three
-    recovery branches (degrade, replay, propagate)."""
+    """``"divergence"`` | ``"oom"`` | ``"transient"`` | ``"fatal"`` —
+    the trainers' recovery branches (rollback, degrade, replay,
+    propagate)."""
+    if isinstance(exc, NumericalDivergenceError):
+        return "divergence"
     if is_oom(exc):
         return "oom"
     if is_transient(exc):

@@ -85,6 +85,8 @@ class RetryingSource:
         self._source = source
         self.policy = policy
         self.stats = {"retries": 0, "timeouts": 0, "reopened_passes": 0}
+        self._watchdog: Optional[threading.Thread] = None
+        self._closed = False
 
     @property
     def n_fields(self) -> int:
@@ -92,6 +94,32 @@ class RetryingSource:
 
     def __getattr__(self, name):
         return getattr(self._source, name)
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self, timeout_s: float = 1.0) -> None:
+        """Finalize the wrapper: join the last watchdog thread (bounded
+        wait — a genuinely hung fetch stays abandoned, the thread is a
+        daemon) and close the wrapped source when it supports closing.
+        Idempotent, and parity with ``PrefetchIterator.close()``:
+        ``train_streaming`` calls this on every exit path so a fit never
+        leaks a fetch thread or an open shard handle."""
+        if self._closed:
+            return
+        self._closed = True
+        t = self._watchdog
+        if t is not None and t.is_alive():
+            t.join(timeout=timeout_s)
+        self._watchdog = None
+        inner_close = getattr(self._source, "close", None)
+        if callable(inner_close):
+            inner_close()
+
+    def __enter__(self) -> "RetryingSource":
+        self._closed = False
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
 
     # -- the protected pass --------------------------------------------------
     def _open(self, rows: int, skip: int):
@@ -118,6 +146,7 @@ class RetryingSource:
             except BaseException as e:  # noqa: BLE001 — re-raised below
                 out.put(("err", e))
         t = threading.Thread(target=worker, daemon=True)
+        self._watchdog = t           # joined (bounded) by close()
         t.start()
         try:
             status, value = out.get(timeout=timeout)

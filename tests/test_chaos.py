@@ -22,6 +22,9 @@ The headline invariants:
 import hashlib
 import json
 import os
+import signal
+import subprocess
+import sys
 
 import numpy as np
 import pytest
@@ -35,9 +38,10 @@ from repro.data.pipeline import BinnedShardSource, write_binned_shards
 from repro.data.synthetic import SyntheticSource
 from repro.distributed import checkpoint as ckpt
 from repro.resilience import (DeviceOOMError, FaultSchedule, FaultySource,
+                              GracefulShutdown, NumericalDivergenceError,
                               Preemption, ShardCorruptionError,
-                              TransientIOError, corrupt_file,
-                              seeded_schedule)
+                              TrainingInterrupted, TransientIOError,
+                              corrupt_file, seeded_schedule)
 
 N, F, CHUNK = 1200, 5, 256
 NO_BACKOFF = RetryPolicy(base_delay_s=0.0, max_delay_s=0.0, jitter=0.0)
@@ -400,10 +404,14 @@ def test_fit_validates_streamed_labels():
             data=ArraySource(X, y), plan=ExecutionPlan(chunk_bytes=2_000))
 
 
-def test_recovery_requires_streaming_path():
-    X, y = _xy()
-    with pytest.raises(ValueError, match="streaming"):
-        BoosterRegressor(n_trees=1).fit(X, y, recovery=RecoveryPolicy())
+def test_recovery_accepted_on_every_fit_path():
+    """PR 10: recovery= is no longer streaming-only — the in-memory fit
+    arms the divergence sentinels (and the mesh path the full distributed
+    recovery ladder) instead of rejecting the policy."""
+    X, y = _xy(64)
+    est = BoosterRegressor(n_trees=2, max_depth=2).fit(
+        X, y, recovery=RecoveryPolicy())
+    assert est.n_trees_ == 2
 
 
 def test_recovery_policy_validates():
@@ -413,3 +421,449 @@ def test_recovery_policy_validates():
         RecoveryPolicy(max_recoveries=-1)
     with pytest.raises(ValueError, match="min_chunk_rows"):
         RecoveryPolicy(min_chunk_rows=0)
+
+
+# --------------------------------------------------------------------------
+# PR 10 — numerical divergence sentinels
+# --------------------------------------------------------------------------
+def test_divergence_sentinel_raises_typed():
+    """An absurd learning rate overflows squared-error margins to inf in
+    the first round; with a recovery policy armed the host loop raises the
+    TYPED error (with the round index) instead of silently boosting NaNs."""
+    X, y = _xy(64)
+    with pytest.raises(NumericalDivergenceError) as ei:
+        BoosterRegressor(n_trees=3, max_depth=2, learning_rate=1e20).fit(
+            X, y, recovery=RecoveryPolicy(max_divergence_rollbacks=0))
+    assert ei.value.round_index >= 0
+
+
+def test_divergence_fused_rollback_budget_exhausts():
+    """The fused engine rolls back and halves the LR on a divergence trip;
+    a persistently-diverging config exhausts max_divergence_rollbacks and
+    the typed error propagates (never an unbounded retry loop)."""
+    X, y = _xy(64)
+    with pytest.raises(NumericalDivergenceError):
+        BoosterRegressor(n_trees=4, max_depth=2, learning_rate=1e30,
+                         fused_rounds=True, log_every=1).fit(
+            X, y, recovery=RecoveryPolicy(max_divergence_rollbacks=2))
+
+
+def test_divergence_without_recovery_is_legacy_silent():
+    """No recovery policy → the sentinel stays unarmed and legacy behavior
+    (a NaN-loss model, caller's responsibility) is preserved."""
+    X, y = _xy(64)
+    est = BoosterRegressor(n_trees=2, max_depth=2, learning_rate=1e20).fit(
+        X, y)
+    assert not np.isfinite(est.history_["train_loss"][-1])
+
+
+# --------------------------------------------------------------------------
+# PR 10 — graceful shutdown: typed resumable interrupts, resume equality
+# --------------------------------------------------------------------------
+def test_shutdown_interrupts_host_and_fused_and_resumes_bit_equal(tmp_path):
+    """sd.request() after round 2 interrupts BOTH single-process engines
+    after the commit; the partial model stays fitted state and a resume
+    from the checkpoint lands on the bit-identical final ensemble."""
+    X, y = _xy(256)
+    for i, fused in enumerate((False, True)):
+        kw = dict(n_trees=6, max_depth=3, max_bins=32, seed=3,
+                  fused_rounds=fused)
+        gold = BoosterRegressor(**kw).fit(X, y)
+        ckdir = str(tmp_path / f"ck{i}")
+        est = BoosterRegressor(**kw)
+        sd = GracefulShutdown()
+
+        def cb(t_idx, model):
+            if t_idx == 2:
+                sd.request("SIGTERM")
+
+        with pytest.raises(TrainingInterrupted) as ei:
+            est.fit(X, y, checkpoint_dir=ckdir, checkpoint_every=2,
+                    callback=cb, shutdown=sd)
+        assert ei.value.rounds_done == 3
+        assert ei.value.result.stats["interrupted"]
+        assert est.is_fitted and est.n_trees_ == 3   # partial model kept
+        res = BoosterRegressor(**kw).fit(X, y, checkpoint_dir=ckdir)
+        _assert_trees_equal(res.model_, gold.model_)
+
+
+def test_streaming_sigterm_delivers_typed_interrupt(base, tmp_path):
+    """A REAL SIGTERM (os.kill) mid-streaming-fit: the handler finishes
+    the in-flight round, commits a checkpoint, and raises the typed
+    resumable error naming the signal."""
+    sd = GracefulShutdown()
+
+    def cb(t_idx, model):
+        if t_idx == 2:
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    with sd:
+        with pytest.raises(TrainingInterrupted) as ei:
+            train_streaming(
+                base["cfg"], _fresh_source(), base["binner"], base["y"],
+                chunk_rows=CHUNK, callback=cb, shutdown=sd,
+                recovery=RecoveryPolicy(checkpoint_dir=str(tmp_path),
+                                        checkpoint_every=2))
+    stop = ei.value
+    assert stop.signal_name == "SIGTERM"
+    assert stop.rounds_done == 3
+    assert stop.checkpoint_dir == str(tmp_path)
+    from repro.api import serialize
+    assert serialize.has_checkpoint(str(tmp_path))
+
+
+def test_streaming_sigterm_resume_bit_equal(tmp_path):
+    """Acceptance: SIGTERM mid-fit + resume == uninterrupted fit, bit-for-
+    bit, through the public streaming estimator surface."""
+    from repro.api import ArraySource
+    src = SyntheticSource(1500, 6, seed=9)
+    X, y = _materialize(src, 1500)
+    plan = ExecutionPlan(chunk_bytes=12_000)
+    kw = dict(n_trees=6, max_depth=3, learning_rate=0.3, max_bins=32)
+    gold = BoosterRegressor(**kw).fit(data=ArraySource(X, y), plan=plan)
+    ckdir = str(tmp_path / "ck")
+    est = BoosterRegressor(**kw)
+    sd = GracefulShutdown()
+
+    def cb(t_idx, model):
+        if t_idx == 2:
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    with sd:
+        with pytest.raises(TrainingInterrupted):
+            est.fit(data=ArraySource(X, y), plan=plan, checkpoint_dir=ckdir,
+                    checkpoint_every=2, callback=cb,
+                    recovery=RecoveryPolicy(), shutdown=sd)
+    assert est.n_trees_ == 3
+    res = BoosterRegressor(**kw).fit(data=ArraySource(X, y), plan=plan,
+                                     checkpoint_dir=ckdir)
+    _assert_trees_equal(res.model_, gold.model_)
+    np.testing.assert_array_equal(np.asarray(res.predict(X)),
+                                  np.asarray(gold.predict(X)))
+
+
+def test_graceful_shutdown_restores_prior_handlers():
+    before = signal.getsignal(signal.SIGTERM)
+    with GracefulShutdown() as sd:
+        assert signal.getsignal(signal.SIGTERM) is not before
+        assert not sd.requested
+    assert signal.getsignal(signal.SIGTERM) is before
+
+
+# --------------------------------------------------------------------------
+# PR 10 — graceful kernel degradation
+# --------------------------------------------------------------------------
+def test_kernel_degradation_demotes_and_counts(monkeypatch):
+    """A failing Pallas histogram launch demotes to the jnp scatter twin:
+    the fit completes with the SAME model, warns exactly once per
+    (step, strategy), and both the per-step counter and the process-wide
+    resilience metric record every event."""
+    from repro.kernels import histogram as hist_k
+    from repro.kernels import ops
+    from repro.resilience import metrics as rmetrics
+
+    def boom(*a, **k):
+        raise RuntimeError("injected kernel launch failure")
+
+    X, y = _xy(200, 4)
+    kw = dict(n_trees=3, max_depth=3, max_bins=32)
+    ref = BoosterRegressor(**kw).fit(
+        X, y, plan=ExecutionPlan(hist_strategy="scatter"))
+
+    ops.reset_degradation_stats()
+    before = rmetrics.counts().get("degradations", 0)
+    monkeypatch.setattr(hist_k, "histogram_pallas", boom)
+    with pytest.warns(RuntimeWarning, match="histogram.*scatter"):
+        demoted = BoosterRegressor(**kw).fit(
+            X, y, plan=ExecutionPlan(hist_strategy="pallas_grouped",
+                                     interpret=True))
+    stats = ops.degradation_stats()
+    assert stats.get("histogram:pallas_grouped->scatter", 0) >= 1, stats
+    assert rmetrics.counts().get("degradations", 0) > before
+    _assert_trees_equal(demoted.model_, ref.model_)
+    ops.reset_degradation_stats()
+
+
+def test_pallas_probe_reports_availability():
+    """plan.resolved() consults this probe before promising a Pallas
+    strategy; in interpret mode (this container) every step is available
+    and the probe is cached."""
+    from repro.kernels import ops
+    for step in ("histogram", "partition", "traversal"):
+        assert ops.pallas_available(step, interpret=True) is True
+        assert ops.pallas_available(step, interpret=True) is True  # cached
+
+
+# --------------------------------------------------------------------------
+# PR 10 — RetryingSource lifecycle
+# --------------------------------------------------------------------------
+def test_retrying_source_close_is_idempotent():
+    src = RetryingSource(SyntheticSource(400, 3, seed=1), NO_BACKOFF)
+    list(src.chunks(200))
+    src.close()
+    src.close()                                    # second close: no-op
+    with RetryingSource(SyntheticSource(400, 3, seed=1), NO_BACKOFF) as s2:
+        assert len(list(s2.chunks(200))) == 2
+    assert s2._closed
+
+
+def test_train_streaming_closes_source_on_every_exit(base):
+    """Both the success and the failure exit path of train_streaming
+    release the RetryingSource watchdog."""
+    ok = RetryingSource(FaultySource(_fresh_source(), FaultSchedule()),
+                        NO_BACKOFF)
+    train_streaming(base["cfg"], ok, base["binner"], base["y"],
+                    chunk_rows=CHUNK)
+    assert ok._closed
+    sched = FaultSchedule().add("source", 3, exc=DeviceOOMError)
+    bad = RetryingSource(FaultySource(_fresh_source(), sched), NO_BACKOFF)
+    with pytest.raises(DeviceOOMError):
+        train_streaming(base["cfg"], bad, base["binner"], base["y"],
+                        chunk_rows=CHUNK,
+                        recovery=RecoveryPolicy(min_chunk_rows=CHUNK))
+    assert bad._closed
+
+
+# --------------------------------------------------------------------------
+# PR 10 — deprecated distributed.fault shim
+# --------------------------------------------------------------------------
+def test_distributed_fault_shim_warns_once_per_access():
+    from repro.distributed import fault as dfault
+    from repro.resilience import faults as rfaults
+    with pytest.warns(DeprecationWarning, match="resilience.faults"):
+        assert dfault.FaultInjector is rfaults.FaultInjector
+    with pytest.warns(DeprecationWarning):
+        assert dfault.FaultSchedule is rfaults.FaultSchedule
+    # the names that genuinely live there import warning-free
+    assert dfault.StepJournal is not None
+    with pytest.raises(AttributeError):
+        dfault.NoSuchThing
+
+
+# --------------------------------------------------------------------------
+# PR 10 — distributed chaos matrix (in-process, D=1)
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def dist_base():
+    """Fault-free distributed reference fit on the in-process device set
+    (D=1 under plain pytest; the D∈{2,8} points run in subprocesses)."""
+    import jax
+    from repro.core import bin_dataset
+    from repro.distributed.trainer import (data_parallel_mesh,
+                                           train_distributed)
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(1024, 5))
+    y = (rng.integers(-8, 9, 1024) * 0.25).astype(np.float32)
+    data = bin_dataset(X, max_bins=32)
+    cfg = GBDTConfig(n_trees=6, max_depth=3, subsample=0.8, seed=11,
+                     hist_strategy="scatter")
+    mesh = data_parallel_mesh(jax.devices())
+    gold = train_distributed(cfg, data, y, mesh=mesh)
+    return dict(data=data, y=y, cfg=cfg, mesh=mesh, gold=gold)
+
+
+def _dist_run(dist_base, sched, *, dist_kw=None, recovery=None):
+    from repro.distributed.trainer import (DistributedConfig,
+                                           train_distributed)
+    dist = DistributedConfig(fault_schedule=sched, **(dist_kw or {}))
+    return train_distributed(dist_base["cfg"], dist_base["data"],
+                             dist_base["y"], mesh=dist_base["mesh"],
+                             dist=dist,
+                             recovery=recovery or RecoveryPolicy())
+
+
+def test_distributed_transient_retried_bit_equal(dist_base):
+    """A transient IO error post-dispatch is retried on the SAME mesh
+    (the round never committed) — no remesh, bit-equal trajectory."""
+    sched = FaultSchedule().add("round", 2, exc=TransientIOError)
+    res = _dist_run(dist_base, sched)
+    assert res.stats["recoveries"] == 1
+    assert res.stats["restarts"] == 0
+    assert not sched.pending()
+    _assert_trees_equal(res.model, dist_base["gold"].model)
+
+
+def test_distributed_oom_subbatches_bit_equal(dist_base):
+    """Device OOM doubles hist_slices (sub-batched accumulation) and
+    retries; zero-stat padding keeps histograms — and therefore the whole
+    model — bit-equal to the monolithic path."""
+    sched = FaultSchedule().add("round", 3, exc=DeviceOOMError)
+    res = _dist_run(dist_base, sched)
+    assert res.stats["oom_halvings"] == 1
+    assert res.stats["hist_slices"] == 2
+    _assert_trees_equal(res.model, dist_base["gold"].model)
+
+
+def test_distributed_injected_nan_round_replays_bit_equal(dist_base):
+    """A divergence trip rolls the round back; the first replay runs at
+    the SAME learning rate, so a one-shot NaN round replays bit-equal."""
+    sched = FaultSchedule().add("round", 4, exc=NumericalDivergenceError)
+    res = _dist_run(dist_base, sched)
+    assert res.stats["divergence_rollbacks"] == 1
+    _assert_trees_equal(res.model, dist_base["gold"].model)
+
+
+def test_distributed_divergence_budget_exhausts(dist_base):
+    sched = FaultSchedule().add("round", 2, exc=NumericalDivergenceError)
+    with pytest.raises(NumericalDivergenceError):
+        _dist_run(dist_base, sched,
+                  recovery=RecoveryPolicy(max_divergence_rollbacks=0))
+
+
+def test_distributed_preemption_restores_and_replays(dist_base, tmp_path):
+    """Preemption re-meshes onto the survivors (the sole in-process device
+    keeps itself), restores the newest named checkpoint, and replays —
+    structure bit-equal, leaves to float tolerance."""
+    sched = FaultSchedule().add("elastic", 4, exc=Preemption)
+    res = _dist_run(dist_base, sched,
+                    dist_kw=dict(checkpoint_dir=str(tmp_path),
+                                 checkpoint_every=2),
+                    recovery=RecoveryPolicy(checkpoint_dir=str(tmp_path),
+                                            checkpoint_every=2))
+    assert res.stats["restarts"] == 1
+    assert res.stats["n_shards"] == 1
+    assert res.model.n_trees == dist_base["cfg"].n_trees
+    _assert_trees_equal(res.model, dist_base["gold"].model, leaf_rtol=1e-5)
+
+
+def test_distributed_shutdown_interrupts_after_commit(dist_base):
+    sd = GracefulShutdown()
+
+    def cb(t_idx, model):
+        if t_idx == 2:
+            sd.request("SIGTERM")
+
+    from repro.distributed.trainer import train_distributed
+    with pytest.raises(TrainingInterrupted) as ei:
+        train_distributed(dist_base["cfg"], dist_base["data"],
+                          dist_base["y"], mesh=dist_base["mesh"],
+                          callback=cb, shutdown=sd)
+    assert ei.value.rounds_done == 3
+    assert ei.value.result.stats["interrupted"]
+    assert ei.value.result.stats["distributed"]
+
+
+# --------------------------------------------------------------------------
+# PR 10 — distributed chaos matrix (subprocess, D ∈ {2, 8})
+# --------------------------------------------------------------------------
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _run_with_devices(code: str, n_devices: int) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=_ROOT,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+_STORM_CHILD = r"""
+import numpy as np, jax, tempfile
+from repro.core import GBDTConfig, bin_dataset
+from repro.distributed.trainer import (DistributedConfig, data_parallel_mesh,
+                                       train_distributed)
+from repro.resilience import (DeviceOOMError, FaultSchedule,
+                              NumericalDivergenceError, Preemption,
+                              RecoveryPolicy, TransientIOError)
+
+rng = np.random.default_rng(0)
+n, F = 4096, 6
+X = rng.normal(size=(n, F))
+y = (rng.integers(-8, 9, n) * 0.25).astype(np.float32)
+data = bin_dataset(X, max_bins=32)
+cfg = GBDTConfig(n_trees=8, max_depth=3, subsample=0.8, seed=11,
+                 hist_strategy="scatter")
+mesh = data_parallel_mesh(jax.devices())
+gold = train_distributed(cfg, data, y, mesh=mesh)
+
+# the acceptance storm: IO + OOM + one injected NaN round + a preemption
+sched = (FaultSchedule()
+         .add("round", 2, exc=TransientIOError)
+         .add("round", 3, exc=DeviceOOMError)
+         .add("round", 4, exc=NumericalDivergenceError)
+         .add("elastic", 6, exc=Preemption))
+with tempfile.TemporaryDirectory() as d:
+    res = train_distributed(
+        cfg, data, y, mesh=mesh,
+        dist=DistributedConfig(checkpoint_dir=d, checkpoint_every=1,
+                               fault_schedule=sched),
+        recovery=RecoveryPolicy(checkpoint_dir=d, checkpoint_every=1))
+st = res.stats
+assert st["recoveries"] == 1, st
+assert st["oom_halvings"] == 1 and st["hist_slices"] == 2, st
+assert st["divergence_rollbacks"] == 1, st
+assert st["restarts"] == 1, st
+assert not sched.pending()
+assert res.model.n_trees == cfg.n_trees
+for nm in ("feature", "threshold", "is_cat", "default_left"):
+    np.testing.assert_array_equal(
+        np.asarray(getattr(res.model.trees, nm)),
+        np.asarray(getattr(gold.model.trees, nm)), err_msg=nm)
+np.testing.assert_allclose(np.asarray(res.model.trees.leaf_value),
+                           np.asarray(gold.model.trees.leaf_value),
+                           rtol=1e-5, atol=1e-6)
+print("DIST_STORM_OK", st["n_shards"])
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_devices", [2, 8])
+def test_distributed_chaos_storm_matrix(n_devices):
+    """Acceptance: a seeded storm (transient IO + device OOM + one NaN
+    round + a worker preemption) at D shards produces a model bit-equal
+    in structure and rtol=1e-5 in leaves to the fault-free run, with
+    every recovery reported in stats."""
+    out = _run_with_devices(_STORM_CHILD, n_devices)
+    assert f"DIST_STORM_OK {n_devices - 1}" in out   # preemption: D-1 left
+
+
+_SIGTERM_CHILD = r"""
+import os, signal, tempfile
+import numpy as np, jax
+from repro.api import (BoosterRegressor, GracefulShutdown, RecoveryPolicy,
+                       TrainingInterrupted, data_parallel_mesh)
+
+rng = np.random.default_rng(1)
+X = rng.normal(size=(2048, 6))
+y = rng.normal(size=2048).astype(np.float32)
+mesh = data_parallel_mesh(jax.devices())
+kw = dict(n_trees=8, max_depth=3, max_bins=32, seed=4)
+gold = BoosterRegressor(**kw).fit(X, y, mesh=mesh)
+
+with tempfile.TemporaryDirectory() as d:
+    est = BoosterRegressor(**kw)
+
+    def cb(t_idx, model):
+        if t_idx == 3:
+            os.kill(os.getpid(), signal.SIGTERM)    # real delivery
+
+    try:
+        with GracefulShutdown() as sd:
+            est.fit(X, y, mesh=mesh, checkpoint_dir=d, checkpoint_every=2,
+                    callback=cb, recovery=RecoveryPolicy(), shutdown=sd)
+        raise AssertionError("fit survived SIGTERM")
+    except TrainingInterrupted as stop:
+        assert stop.signal_name == "SIGTERM", stop.signal_name
+        assert stop.rounds_done == 4, stop.rounds_done
+        assert est.n_trees_ == 4
+    # recovery= exposes the trainer's named round checkpoint, whose EXACT
+    # live margins make the D>1 resume bit-equal (a host-side margin
+    # replay can differ from the fused sharded step in the last ulp)
+    res = BoosterRegressor(**kw).fit(X, y, mesh=mesh, checkpoint_dir=d,
+                                     recovery=RecoveryPolicy())
+
+for a, b in zip(res.model_.trees, gold.model_.trees):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("DIST_SIGTERM_RESUME_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_sigterm_resume_bit_equal():
+    """Acceptance: SIGTERM mid-distributed-fit commits the in-flight
+    round; resuming from the checkpoint yields the bit-identical final
+    ensemble."""
+    out = _run_with_devices(_SIGTERM_CHILD, 2)
+    assert "DIST_SIGTERM_RESUME_OK" in out

@@ -10,7 +10,8 @@ import pytest
 from repro.core import GBDTConfig, GBDTModel, bin_dataset, train
 from repro.data import make_tabular
 from repro.distributed import checkpoint as ckpt
-from repro.distributed.fault import FaultInjector, StepJournal, run_with_restarts
+from repro.distributed.fault import StepJournal, run_with_restarts
+from repro.resilience.faults import FaultInjector
 
 
 @pytest.fixture(scope="module")
@@ -119,7 +120,7 @@ def test_distributed_fault_shrink_restore_replay(tmp_path):
     out = _run_with_devices(r"""
 import numpy as np, jax, tempfile
 from repro.core import GBDTConfig, bin_dataset
-from repro.distributed.fault import FaultInjector
+from repro.resilience.faults import FaultInjector
 from repro.distributed.trainer import (DistributedConfig,
                                        data_parallel_mesh,
                                        train_distributed)
